@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: wall-clock of the jitted kernel entry points
+(interpret mode on CPU — structural cost only; the roofline table covers
+the TPU-side projection) and of the vectorized/batched queue ops."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time_call(fn, *args, reps: int = 5, **kw):
+    r = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(r)[0])
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(r)[0])
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(out=sys.stdout) -> None:
+    rng = np.random.default_rng(0)
+    print("bench,kernel,shape,us_per_call,derived", file=out)
+    for n in (1024, 8192):
+        a = jnp.asarray((rng.random(n) < 0.4).astype(np.int32))
+        c = jnp.array([0], jnp.int32)
+        t = _time_call(ops.wavefaa, a, c)
+        print(f"kernels,wavefaa,{n},{t*1e6:.1f},tickets/s={n/t:.2e}", file=out)
+
+    nsl2, bot = 8, (1 << 31) - 1
+    nslots = 1 << nsl2
+    cyc = jnp.zeros(nslots, jnp.int32)
+    saf = jnp.ones(nslots, jnp.int32)
+    enq = jnp.zeros(nslots, jnp.int32)
+    idx = jnp.full(nslots, bot, jnp.int32)
+    tk = jnp.arange(nslots, nslots + 128, dtype=jnp.int32)
+    vals = jnp.arange(128, dtype=jnp.int32)
+    head = jnp.array([nslots], jnp.int32)
+    t = _time_call(ops.ring_enqueue, cyc, saf, enq, idx, tk, vals, head,
+                   nslots_log2=nsl2, idx_bot=bot)
+    print(f"kernels,ring_enqueue,128x{nslots},{t*1e6:.1f},ops/s={128/t:.2e}",
+          file=out)
+
+    eids = jnp.asarray(rng.integers(0, 16, 512).astype(np.int32))
+    t = _time_call(ops.expert_tickets, eids, num_experts=16, capacity=64)
+    print(f"kernels,expert_tickets,512x16,{t*1e6:.1f},pairs/s={512/t:.2e}",
+          file=out)
+
+
+if __name__ == "__main__":
+    main()

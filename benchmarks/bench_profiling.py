@@ -1,0 +1,78 @@
+"""Paper Fig. 5 — per-successful-operation profiling metrics.
+
+rocprofv2's WAIT/op and VALU/op have no CPU analogue (DESIGN.md § 2); the
+simulator derives the same normalized quantities:
+
+* steps/op        — state-machine transitions per successful op (VALU/op),
+* stall-steps/op  — transitions inside attempts that did not commit
+                    (WAIT/op),
+* atomics/op      — hot-word atomic traffic per successful op (what
+                    wave-batching reduces, Fig. 1).
+
+Also reports the wave-batching ablation: G-LFQ with gang scheduling (high
+ballot occupancy) vs random scheduling (batching collapses to per-thread
+FAA) — the direct measurement of the Fig. 1 claim."""
+
+from __future__ import annotations
+
+import sys
+
+from repro.core import QUEUE_CLASSES
+from .bench_throughput import run_balanced, run_split
+
+
+def main(out=sys.stdout, *, threads_list=(8, 32, 128),
+         steps: int = 120_000) -> None:
+    print("bench,queue,threads,mode,steps_per_op,stall_steps_per_op,"
+          "atomics_per_op", file=out)
+    for name, qcls in QUEUE_CLASSES.items():
+        for t in threads_list:
+            for mode, m in (
+                ("balanced", run_balanced(qcls, t, steps)),
+                ("p25", run_split(qcls, t, steps, 0.25)),
+                ("p50", run_split(qcls, t, steps, 0.50)),
+                ("p75", run_split(qcls, t, steps, 0.75)),
+            ):
+                print(f"fig5,{name},{t},{mode},{m['steps_per_op']:.2f},"
+                      f"{m['stall_steps_per_op']:.2f},"
+                      f"{m['atomics_per_op']:.2f}", file=out)
+
+    # Fig. 1 ablation: wave batching occupancy (gang) vs none (random)
+    from repro.core import AtomicMemory, Scheduler
+    from repro.core.base import VAL_MASK
+    from repro.core.sim import DEQ, ENQ
+    print("bench,queue,threads,policy,hot_word_atomics_per_op", file=out)
+    for policy in ("gang", "random"):
+        qcls = QUEUE_CLASSES["glfq"]
+        t = 64
+        q = qcls(capacity=128, num_threads=t)
+        mem = AtomicMemory()
+        q.init(mem)
+        sched = Scheduler(mem, wave_size=8, policy=policy, seed=0)
+
+        def worker(ctx, tid):
+            k = 0
+            while True:
+                v = ((tid << 16) | (k & 0xFFFF)) & VAL_MASK
+                yield from ctx.op_begin(ENQ, v)
+                ok = yield from q.enqueue(ctx, tid, v)
+                yield from ctx.op_end(ok, ok)
+                yield from ctx.op_begin(DEQ, None)
+                ok, o = yield from q.dequeue(ctx, tid)
+                yield from ctx.op_end(o if ok else None, ok)
+                k += 1
+
+        for i in range(t):
+            sched.spawn(worker)
+        sched.run(120_000)
+        m = sched.metrics()
+        # hot-word atomic RMWs (FAA/CAS on Head/Tail) per successful op —
+        # the quantity Fig. 1's wave batching reduces (loads excluded)
+        hot = (mem.rmw_traffic.get("glfq_tail", 0)
+               + mem.rmw_traffic.get("glfq_head", 0))
+        print(f"fig1_ablation,glfq,{t},{policy},"
+              f"{hot / max(m['successful_ops'], 1):.3f}", file=out)
+
+
+if __name__ == "__main__":
+    main()

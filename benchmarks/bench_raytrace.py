@@ -1,0 +1,42 @@
+"""Paper Fig. 7 — tile-based wavefront ray tracing: per-tile queue
+scheduling vs the stream-compaction baseline, on the Complex and Cornell
+scenes.  Reports MRays/s and relative throughput."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.apps.raytrace import (complex_scene, cornell_scene,
+                                 render_compaction, render_queue)
+
+
+def _time(fn, *args, reps: int = 2, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def main(out=sys.stdout, *, size: int = 64) -> None:
+    print("bench,scene,method,mrays_per_s,rays,rel_vs_compaction,img_match",
+          file=out)
+    for scene in (complex_scene(), cornell_scene()):
+        tc, (ic, mc) = _time(render_compaction, scene, size, size)
+        tq, (iq, mq) = _time(render_queue, scene, size, size, 4, 4)
+        match = bool(np.allclose(iq, ic, atol=1e-4))
+        mr_c = mc["rays"] / tc / 1e6
+        mr_q = mq["rays"] / tq / 1e6
+        print(f"fig7_rt,{scene.name},compaction,{mr_c:.3f},{mc['rays']},1.00,"
+              f"{match}", file=out)
+        print(f"fig7_rt,{scene.name},queue,{mr_q:.3f},{mq['rays']},"
+              f"{mr_q/max(mr_c,1e-9):.2f},{match}", file=out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Paper Fig. 4 — fixed-duration successful-operation throughput across the
+balanced kernel and split producer/consumer kernels (25/50/75% producers).
+
+The container is CPU-only, so "fixed duration" is a fixed scheduler-step
+budget: throughput = successful ops per 1000 simulated steps (Kops/Mstep in
+spirit).  Thread counts sweep 2^3..2^7 (scaled from the paper's 2^9..2^15 to
+keep the single-core run minutes, same contention regimes: near-empty,
+nominal, near-full)."""
+
+from __future__ import annotations
+
+import sys
+
+from repro.core import QUEUE_CLASSES, AtomicMemory, Scheduler
+from repro.core.base import VAL_MASK
+from repro.core.sim import DEQ, ENQ
+
+
+def run_balanced(qcls, threads: int, steps: int, seed: int = 0):
+    q = qcls(capacity=max(threads, 64), num_threads=threads)
+    mem = AtomicMemory()
+    q.init(mem)
+    sched = Scheduler(mem, wave_size=8, policy="gang", seed=seed)
+
+    def worker(ctx, tid):
+        k = 0
+        while True:
+            v = ((tid << 16) | (k & 0xFFFF)) & VAL_MASK
+            yield from ctx.op_begin(ENQ, v)
+            ok = yield from q.enqueue(ctx, tid, v)
+            yield from ctx.op_end(ok, ok)
+            yield from ctx.op_begin(DEQ, None)
+            ok, out = yield from q.dequeue(ctx, tid)
+            yield from ctx.op_end(out if ok else None, ok)
+            k += 1
+
+    for i in range(threads):
+        sched.spawn(worker)
+    sched.run(steps)
+    return sched.metrics()
+
+
+def run_split(qcls, threads: int, steps: int, producer_frac: float,
+              seed: int = 0):
+    q = qcls(capacity=max(threads, 64), num_threads=threads)
+    mem = AtomicMemory()
+    q.init(mem)
+    sched = Scheduler(mem, wave_size=8, policy="gang", seed=seed)
+    n_prod = max(1, int(threads * producer_frac))
+
+    def producer(ctx, tid):
+        k = 0
+        while True:
+            v = ((tid << 16) | (k & 0xFFFF)) & VAL_MASK
+            yield from ctx.op_begin(ENQ, v)
+            ok = yield from q.enqueue(ctx, tid, v)
+            yield from ctx.op_end(ok, ok)
+            k += 1
+            if not ok:
+                yield from ctx.step()
+
+    def consumer(ctx, tid):
+        while True:
+            yield from ctx.op_begin(DEQ, None)
+            ok, out = yield from q.dequeue(ctx, tid)
+            yield from ctx.op_end(out if ok else None, ok)
+            if not ok:
+                yield from ctx.step()
+
+    for i in range(threads):
+        sched.spawn(producer if i < n_prod else consumer)
+    sched.run(steps)
+    return sched.metrics()
+
+
+def main(out=sys.stdout, *, threads_list=(8, 16, 32, 64, 128),
+         steps: int = 120_000) -> None:
+    print("bench,queue,threads,mode,throughput_ops_per_kstep,"
+          "successful_ops,atomics_per_op", file=out)
+    for name, qcls in QUEUE_CLASSES.items():
+        for t in threads_list:
+            m = run_balanced(qcls, t, steps)
+            print(f"fig4_balanced,{name},{t},balanced,"
+                  f"{m['throughput_ops_per_kstep']:.2f},"
+                  f"{m['successful_ops']},{m['atomics_per_op']:.2f}", file=out)
+            for frac in (0.25, 0.50, 0.75):
+                m = run_split(qcls, t, steps, frac)
+                print(f"fig4_split,{name},{t},p{int(frac*100)},"
+                      f"{m['throughput_ops_per_kstep']:.2f},"
+                      f"{m['successful_ops']},{m['atomics_per_op']:.2f}",
+                      file=out)
+
+
+if __name__ == "__main__":
+    main()

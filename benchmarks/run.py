@@ -1,0 +1,42 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Sections: Fig. 4 throughput, Fig. 5 per-op profiling (+ Fig. 1 ablation),
+Table IV/Fig. 6 BFS, Fig. 7 ray tracing, kernel micro-benchmarks.
+CSV lines go to stdout: ``name,...`` per row.
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweeps (CI-sized)")
+    ap.add_argument("--section", default=None,
+                    choices=["throughput", "profiling", "bfs", "raytrace",
+                             "kernels", None])
+    args = ap.parse_args()
+    from . import (bench_bfs, bench_kernels, bench_profiling,
+                   bench_raytrace, bench_throughput)
+
+    kw_thr = dict(threads_list=(8, 32), steps=40_000) if args.quick else {}
+    kw_prof = dict(threads_list=(8, 32), steps=40_000) if args.quick else {}
+    sections = {
+        "throughput": lambda: bench_throughput.main(**kw_thr),
+        "profiling": lambda: bench_profiling.main(**kw_prof),
+        "bfs": bench_bfs.main,
+        "raytrace": bench_raytrace.main,
+        "kernels": bench_kernels.main,
+    }
+    todo = [args.section] if args.section else list(sections)
+    for name in todo:
+        print(f"# === {name} ===")
+        sections[name]()
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

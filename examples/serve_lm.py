@@ -1,0 +1,11 @@
+"""Continuous-batching serving demo: request queue + KV page ring.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import subprocess
+import sys
+
+subprocess.run([sys.executable, "-m", "repro.launch.serve",
+                "--arch", "h2o-danube-1.8b", "--requests", "8"],
+               check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})

@@ -1,0 +1,16 @@
+"""End-to-end training driver (deliverable b): a ~100M-param-class reduced
+model for a few hundred steps with checkpoints and an injected node failure
+mid-run to demonstrate restart.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+
+import subprocess
+import sys
+
+subprocess.run([sys.executable, "-m", "repro.launch.train",
+                "--arch", "mamba2-130m", "--steps", "200",
+                "--batch", "4", "--seq", "64",
+                "--ckpt-dir", "/tmp/repro_ckpt", "--save-every", "50",
+                "--inject-fault-at", "120"],
+               check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})

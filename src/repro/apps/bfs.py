@@ -1,0 +1,166 @@
+"""Level-synchronous BFS with queue-managed frontiers (paper § V-B-a).
+
+Two implementations over CSR graphs:
+
+* ``bfs_queue`` — the paper's design: two frontier queues alternate across
+  levels; frontier expansion is the Pallas ``frontier_expand`` kernel whose
+  next-frontier enqueue is ticket reservation (aggregate-then-commit).
+* ``bfs_baseline`` — the Gunrock-style stand-in: dense boolean frontier
+  masks with a segment-sum sweep over all vertices per level (no queue) —
+  the comparison baseline for benchmarks/bench_bfs.py.
+
+Synthetic graph generators mirror the Table IV families: road-like (low
+degree, high diameter), kron/social-like (power-law), delaunay-like
+(constant degree).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+
+
+@dataclass
+class CSRGraph:
+    row_ptr: np.ndarray  # (n+1,) int32
+    col_idx: np.ndarray  # (m,) int32
+    name: str = "g"
+
+    @property
+    def n(self) -> int:
+        return len(self.row_ptr) - 1
+
+    @property
+    def m(self) -> int:
+        return len(self.col_idx)
+
+
+def road_like(n: int, seed: int = 0) -> CSRGraph:
+    """Grid-ish graph: low avg degree, long diameter (road_usa family)."""
+    side = int(np.sqrt(n))
+    n = side * side
+    rows, cols = [], []
+    for v in range(n):
+        r, c = divmod(v, side)
+        for dr, dc in ((0, 1), (1, 0), (0, -1), (-1, 0)):
+            rr, cc = r + dr, c + dc
+            if 0 <= rr < side and 0 <= cc < side:
+                rows.append(v)
+                cols.append(rr * side + cc)
+    return _to_csr(n, rows, cols, f"road_{n}")
+
+
+def kron_like(n: int, avg_deg: int = 16, seed: int = 0) -> CSRGraph:
+    """Power-law graph (kron_g500 / hollywood family)."""
+    rng = np.random.default_rng(seed)
+    m = n * avg_deg
+    # preferential-attachment-ish: sample endpoints from a zipf-weighted pool
+    w = 1.0 / np.arange(1, n + 1) ** 0.6
+    p = w / w.sum()
+    src = rng.choice(n, m, p=p)
+    dst = rng.choice(n, m, p=p)
+    keep = src != dst
+    return _to_csr(n, src[keep], dst[keep], f"kron_{n}")
+
+
+def delaunay_like(n: int, deg: int = 6, seed: int = 0) -> CSRGraph:
+    """Constant-degree random graph (delaunay family)."""
+    rng = np.random.default_rng(seed)
+    src = np.repeat(np.arange(n), deg)
+    dst = rng.integers(0, n, n * deg)
+    return _to_csr(n, src, dst, f"delaunay_{n}")
+
+
+def _to_csr(n: int, rows, cols, name: str) -> CSRGraph:
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    order = np.argsort(rows, kind="stable")
+    rows, cols = rows[order], cols[order]
+    row_ptr = np.zeros(n + 1, np.int32)
+    np.add.at(row_ptr, rows + 1, 1)
+    row_ptr = np.cumsum(row_ptr).astype(np.int32)
+    return CSRGraph(row_ptr, cols.astype(np.int32), name)
+
+
+# ---------------------------------------------------------------------------
+
+
+def bfs_queue(g: CSRGraph, source: int = 0, *, use_kernel: bool = True
+              ) -> Tuple[np.ndarray, Dict]:
+    """Queue-driven BFS: alternate two frontier queues across levels."""
+    n = g.n
+    row_ptr = jnp.asarray(g.row_ptr)
+    col_idx = jnp.asarray(g.col_idx)
+    visited = jnp.zeros(n, jnp.int32).at[source].set(1)
+    dist = np.full(n, -1, np.int32)
+    dist[source] = 0
+    frontier = jnp.full(max(n, 16), -1, jnp.int32).at[0].set(source)
+    level, edges_scanned = 0, 0
+    flen = 1
+    while flen > 0:
+        nxt, cnt, visited = ops.frontier_expand(
+            row_ptr, col_idx, frontier, visited, max_out=max(n, 16),
+            use_kernel=use_kernel)
+        flen = int(cnt[0])
+        level += 1
+        f_np = np.asarray(nxt[:flen])
+        edges_scanned += int(np.sum(g.row_ptr[np.asarray(frontier[frontier >= 0]) + 1]
+                                    - g.row_ptr[np.asarray(frontier[frontier >= 0])]))
+        dist[f_np] = level
+        frontier = nxt
+    return dist, {"levels": level, "edges_scanned": edges_scanned}
+
+
+def bfs_baseline(g: CSRGraph, source: int = 0) -> Tuple[np.ndarray, Dict]:
+    """Gunrock-style dense sweep: per level, scatter frontier over all edges
+    with a boolean mask (no queue, no compaction)."""
+    n = g.n
+    row_ptr, col_idx = g.row_ptr, g.col_idx
+    # edge source vector
+    src = np.repeat(np.arange(n, dtype=np.int32),
+                    np.diff(row_ptr).astype(np.int64))
+    src_j = jnp.asarray(src)
+    col_j = jnp.asarray(col_idx)
+    front = jnp.zeros(n, jnp.bool_).at[source].set(True)
+    visited = front
+    dist = np.full(n, -1, np.int32)
+    dist[source] = 0
+    level = 0
+
+    @jax.jit
+    def sweep(front, visited):
+        active = front[src_j]
+        touched = jnp.zeros(n, jnp.bool_).at[col_j].max(active)
+        new = touched & (~visited)
+        return new, visited | new
+
+    while bool(front.any()):
+        front, visited = sweep(front, visited)
+        level += 1
+        newly = np.asarray(front)
+        dist[newly & (dist == -1)] = level
+        if not newly.any():
+            break
+    return dist, {"levels": level}
+
+
+def bfs_reference(g: CSRGraph, source: int = 0) -> np.ndarray:
+    """Plain numpy BFS oracle."""
+    from collections import deque
+    dist = np.full(g.n, -1, np.int32)
+    dist[source] = 0
+    dq = deque([source])
+    while dq:
+        u = dq.popleft()
+        for k in range(g.row_ptr[u], g.row_ptr[u + 1]):
+            v = g.col_idx[k]
+            if dist[v] < 0:
+                dist[v] = dist[u] + 1
+                dq.append(v)
+    return dist

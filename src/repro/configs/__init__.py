@@ -1,0 +1,5 @@
+"""Per-architecture configs (assignment pool) + registry."""
+from .base import ArchConfig, SHAPES
+from .registry import ARCHS, get_config, list_archs
+
+__all__ = ["ArchConfig", "SHAPES", "ARCHS", "get_config", "list_archs"]

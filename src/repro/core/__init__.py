@@ -1,0 +1,26 @@
+"""repro.core — the paper's contribution: linearizable GPU concurrent queues
+(G-LFQ, G-WFQ, G-WFQ-YMC, SFQ baseline) with wave-batched ticket reservation,
+packed 64-bit shared state, a simulated-concurrency validation layer, and the
+distributed (mesh-level) TPU adaptation."""
+
+from .atomics import AtomicMemory
+from .base import IndexedQueue, QueueAlgorithm
+from .glfq import GLFQ
+from .gwfq import GWFQ
+from .histories import (FifoReport, fifo_conformance, run_balanced,
+                        run_producer_consumer)
+from .linearizability import check_linearizable, fast_violation_screen
+from .packed import (ENTRY, GLOBAL, LOCAL, NOTE, REQ, RES, EntryFormat,
+                     GlobalFormat, LocalFormat, MASK64)
+from .sfq import SFQ
+from .sim import Ctx, DEQ, ENQ, HistoryEvent, Scheduler
+from .ymc import YMC
+
+QUEUE_CLASSES = {"glfq": GLFQ, "gwfq": GWFQ, "gwfq-ymc": YMC, "sfq": SFQ}
+
+__all__ = [
+    "AtomicMemory", "IndexedQueue", "QueueAlgorithm", "GLFQ", "GWFQ", "YMC",
+    "SFQ", "QUEUE_CLASSES", "Scheduler", "Ctx", "ENQ", "DEQ", "HistoryEvent",
+    "check_linearizable", "fast_violation_screen", "fifo_conformance",
+    "run_balanced", "run_producer_consumer", "FifoReport",
+]

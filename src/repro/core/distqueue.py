@@ -1,0 +1,166 @@
+"""The distributed (mesh-level) bounded FIFO queue — the paper's design
+carried above the chip (DESIGN.md § 2.3).
+
+Aggregation hierarchy: lane → block (Pallas wavefaa, one counter update) →
+chip → mesh (this module: one exclusive-prefix-sum collective hands every
+chip a contiguous ticket block).  The ring state (packed field planes) is
+replicated per shard and advanced by the deterministic per-round ticket
+order, so every chip holds an identical view after each round — FIFO and
+linearizability hold by construction: rounds are totally ordered by the
+collective schedule, and within a round tickets order operations exactly as
+per-thread FAA would (Lemma III.1 applied at mesh scope).
+
+API (pure-functional, jit/shard_map-compatible):
+
+    state = dist_queue_init(capacity)
+    state, granted = dist_enqueue_round(state, values, mask, axis="data")
+    state, vals, ok = dist_dequeue_round(state, want, axis="data")
+
+Each round costs exactly one psum (ticket aggregation); payload exchange
+uses all_gather of the round's compact blocks — the batched analogue of the
+paper's single leader atomic per wave.
+
+Note: the ring planes come back *deterministically identical* on every
+shard, but shard_map's replication checker cannot infer that through the
+gathered-scan; wrap calls with ``shard_map(..., check_rep=False)`` and
+out_spec the state as ``P()`` (see tests/test_distqueue.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.collectives import mesh_ticket_base
+
+IDX_BOT = jnp.int32(2 ** 31 - 1)
+IDX_BOTC = jnp.int32(2 ** 31 - 2)
+
+
+def _pvary(x, axis: str):
+    """Idempotent pvary: promote to axis-varying only if not already."""
+    try:
+        if axis in jax.typeof(x).vma:
+            return x
+    except AttributeError:
+        pass
+    return jax.lax.pvary(x, (axis,))
+
+
+class DistQueueState(NamedTuple):
+    """Replicated ring state (per-shard identical by construction)."""
+    cycles: jax.Array   # (2n,) int32
+    safes: jax.Array    # (2n,) int32
+    idxs: jax.Array     # (2n,) int32 — payload or ⊥ / ⊥_c
+    tail: jax.Array     # () int32
+    head: jax.Array     # () int32
+
+
+def dist_queue_init(capacity: int) -> DistQueueState:
+    n2 = 2 * capacity
+    return DistQueueState(
+        cycles=jnp.zeros((n2,), jnp.int32),
+        safes=jnp.ones((n2,), jnp.int32),
+        idxs=jnp.full((n2,), IDX_BOT),
+        tail=jnp.int32(n2),
+        head=jnp.int32(n2),
+    )
+
+
+def _apply_enqueue(state: DistQueueState, tickets, values, head_now):
+    n2 = state.cycles.shape[0]
+
+    def body(st, tv):
+        cyc, saf, idx = st
+        t, v = tv
+        j = jnp.where(t >= 0, t % n2, 0)
+        c = jnp.where(t >= 0, t // n2, 0)
+        empty = (idx[j] == IDX_BOT) | (idx[j] == IDX_BOTC)
+        can = (t >= 0) & (cyc[j] < c) & empty & ((saf[j] == 1) | (head_now <= t))
+        cyc = cyc.at[j].set(jnp.where(can, c, cyc[j]))
+        saf = saf.at[j].set(jnp.where(can, 1, saf[j]))
+        idx = idx.at[j].set(jnp.where(can, v, idx[j]))
+        return (cyc, saf, idx), can
+
+    (cyc, saf, idx), ok = jax.lax.scan(
+        body, (state.cycles, state.safes, state.idxs), (tickets, values))
+    return cyc, saf, idx, ok
+
+
+def dist_enqueue_round(state: DistQueueState, values: jax.Array,
+                       mask: jax.Array, axis: str):
+    """One enqueue round inside shard_map.  values/mask: (B,) local requests.
+    Returns (new_state, granted mask (B,))."""
+    b = values.shape[0]
+    count = jnp.sum(mask.astype(jnp.int32))
+    base, total = mesh_ticket_base(count, axis)
+    # local tickets: base + exclusive prefix rank (the wavefaa rule)
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - mask.astype(jnp.int32)
+    tickets = jnp.where(mask > 0, state.tail + base + rank, -1)
+    # gather the round's compact blocks so every shard applies every op
+    all_tickets = jax.lax.all_gather(tickets, axis).reshape(-1)
+    all_values = jax.lax.all_gather(values, axis).reshape(-1)
+    order = jnp.argsort(jnp.where(all_tickets >= 0, all_tickets, 2 ** 30))
+    # promote the replicated ring planes to device-varying so the scan
+    # carry types match the (axis-varying) gathered tickets
+    state = state._replace(
+        cycles=_pvary(state.cycles, axis),
+        safes=_pvary(state.safes, axis),
+        idxs=_pvary(state.idxs, axis))
+    cyc, saf, idx, ok_sorted = _apply_enqueue(
+        state, all_tickets[order], all_values[order],
+        _pvary(state.head, axis))
+    inv = jnp.argsort(order)
+    ok_all = ok_sorted[inv]
+    n = jax.lax.axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    ok_local = ok_all.reshape(n, b)[me]
+    new_state = state._replace(cycles=cyc, safes=saf, idxs=idx,
+                               tail=state.tail + total)
+    return new_state, ok_local & (mask > 0)
+
+
+def dist_dequeue_round(state: DistQueueState, want: jax.Array, axis: str):
+    """One dequeue round.  want: (B,) local request mask.
+    Returns (new_state, values (B,), ok (B,))."""
+    b = want.shape[0]
+    n2 = state.cycles.shape[0]
+    count = jnp.sum(want.astype(jnp.int32))
+    base, total = mesh_ticket_base(count, axis)
+    rank = jnp.cumsum(want.astype(jnp.int32)) - want.astype(jnp.int32)
+    tickets = jnp.where(want > 0, state.head + base + rank, -1)
+    all_tickets = jax.lax.all_gather(tickets, axis).reshape(-1)
+    order = jnp.argsort(jnp.where(all_tickets >= 0, all_tickets, 2 ** 30))
+    ts = all_tickets[order]
+    state = state._replace(
+        cycles=_pvary(state.cycles, axis),
+        safes=_pvary(state.safes, axis),
+        idxs=_pvary(state.idxs, axis))
+
+    def body(st, t):
+        cyc, saf, idx = st
+        j = jnp.where(t >= 0, t % n2, 0)
+        c = jnp.where(t >= 0, t // n2, 0)
+        empty = (idx[j] == IDX_BOT) | (idx[j] == IDX_BOTC)
+        hit = (t >= 0) & (cyc[j] == c) & (~empty)
+        val = jnp.where(hit, idx[j], -1)
+        idx = idx.at[j].set(jnp.where(hit, IDX_BOTC, idx[j]))
+        adv = (t >= 0) & (~hit) & empty & (cyc[j] < c)
+        cyc = cyc.at[j].set(jnp.where(adv, c, cyc[j]))
+        uns = (t >= 0) & (~hit) & (~empty) & (cyc[j] < c)
+        saf = saf.at[j].set(jnp.where(uns, 0, saf[j]))
+        return (cyc, saf, idx), (val, hit)
+
+    (cyc, saf, idx), (vals_sorted, ok_sorted) = jax.lax.scan(
+        body, (state.cycles, state.safes, state.idxs), ts)
+    inv = jnp.argsort(order)
+    vals_all = vals_sorted[inv]
+    ok_all = ok_sorted[inv]
+    n = jax.lax.axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    new_state = state._replace(cycles=cyc, safes=saf, idxs=idx,
+                               head=state.head + total)
+    return (new_state, vals_all.reshape(n, b)[me],
+            ok_all.reshape(n, b)[me] & (want > 0))

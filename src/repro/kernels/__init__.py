@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the queue framework's compute hot spots.
+
+Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` exposes the
+jit'd public API with a kernel/oracle switch.  Kernels run compiled on TPU
+and in interpret mode on CPU (how the test suite validates them)."""
+
+from . import ops, ref
+from .frontier import frontier_expand
+from .moe_route import expert_tickets, moe_route
+from .ring_slots import ring_dequeue, ring_enqueue
+from .wavefaa import LANES, wavefaa
+
+__all__ = ["ops", "ref", "wavefaa", "LANES", "ring_enqueue", "ring_dequeue",
+           "frontier_expand", "expert_tickets", "moe_route"]

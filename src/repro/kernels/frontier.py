@@ -1,0 +1,89 @@
+"""BFS frontier expansion as a Pallas TPU kernel (paper § V-B-a).
+
+The level-synchronous BFS dequeues the current frontier, scans CSR
+neighbors, marks unvisited vertices and enqueues them into the next
+frontier.  The next-frontier enqueue is queue-style ticket reservation: each
+accepted vertex takes ticket = running count (one logical FAA per accepted
+vertex, batched per frontier vertex — the wave-batched discipline).
+
+The kernel walks the frontier sequentially (grid=(1,), fori_loop) with the
+visited bitmap and output frontier resident in VMEM; the CSR neighbor lists
+are streamed via dynamic slices.  VMEM budget: visited (n int32) + frontier
+buffers; n ≤ 1M fits in 4 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _frontier_kernel(max_out, row_ptr_ref, col_idx_ref, frontier_ref,
+                     visited_in, out_ref, visited_ref, count_ref):
+    visited_ref[...] = visited_in[...]
+    out_ref[...] = jnp.full_like(out_ref, -1)
+    count_ref[0] = 0
+    f = frontier_ref.shape[1]
+
+    def vbody(i, _):
+        u = frontier_ref[0, i]
+        valid = u >= 0
+        uu = jnp.maximum(u, 0)
+        start = jnp.where(valid, row_ptr_ref[0, uu], 0)
+        stop = jnp.where(valid, row_ptr_ref[0, uu + 1], 0)
+
+        def ebody(k, _):
+            v = col_idx_ref[0, k]
+            fresh = visited_ref[0, v] == 0
+            visited_ref[0, v] = 1
+            cnt = count_ref[0]
+            # ticket reservation: accepted vertex takes slot = cnt
+            pos = jnp.where(fresh, jnp.minimum(cnt, max_out - 1), max_out - 1)
+            old = out_ref[0, pos]
+            out_ref[0, pos] = jnp.where(fresh, v, old)
+            count_ref[0] = cnt + fresh.astype(jnp.int32)
+            return 0
+
+        jax.lax.fori_loop(start, stop, ebody, 0)
+        return 0
+
+    jax.lax.fori_loop(0, f, vbody, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("max_out", "interpret"))
+def frontier_expand(row_ptr, col_idx, frontier, visited, *, max_out: int,
+                    interpret: bool = True):
+    """row_ptr: (n+1,), col_idx: (E,), frontier: (F,) padded with -1,
+    visited: (n,) int32 bitmap.  Returns (next_frontier (max_out,),
+    count (1,), visited')."""
+    n = visited.shape[0]
+    f = frontier.shape[0]
+    e = col_idx.shape[0]
+    kern = functools.partial(_frontier_kernel, max_out)
+    out, vis, cnt = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, n + 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, e), lambda i: (0, 0)),
+            pl.BlockSpec((1, f), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, max_out), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, max_out), jnp.int32),
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(row_ptr.reshape(1, n + 1), col_idx.reshape(1, e),
+      frontier.reshape(1, f), visited.reshape(1, n))
+    return out.reshape(max_out), cnt, vis.reshape(n)

@@ -1,0 +1,83 @@
+"""Capacity-bounded MoE dispatch via per-expert ticket reservation — the
+paper's wave-batched FAA applied to expert routing (DESIGN.md § 3).
+
+Each routed (token, choice) pair must claim a slot in its expert's bounded
+ring.  A naive implementation performs one atomic per pair on the expert's
+Tail counter; this kernel aggregates per tile: within a (TILE, E) one-hot
+block it computes exclusive prefix ranks, and commits **one** per-expert
+count update per tile into a VMEM accumulator carried across the sequential
+TPU grid — Fig. 1's contention collapse, per expert.  Slots ≥ capacity are
+dropped (the bounded ring's RETRY path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE = 128  # routed pairs per grid step
+
+
+def _route_kernel(capacity, eids_ref, slots_ref, base_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        base_ref[...] = jnp.zeros_like(base_ref)
+
+    e = eids_ref[...]                                  # (1, TILE) expert ids
+    n_e = base_ref.shape[1]
+    onehot = (e.reshape(TILE, 1)
+              == jax.lax.broadcasted_iota(jnp.int32, (TILE, n_e), 1))
+    onehot = onehot.astype(jnp.int32)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot        # exclusive, per expert
+    base = base_ref[...]                               # (1, E)
+    slot = jnp.sum((ranks + base) * onehot, axis=1)    # (TILE,)
+    valid = (e[0, :] >= 0) & (slot < capacity)
+    slots_ref[...] = jnp.where(valid, slot, -1).reshape(1, TILE)
+    # ONE per-expert commit per tile (aggregate-then-commit)
+    base_ref[...] = base + jnp.sum(
+        jnp.where((e.reshape(TILE, 1) >= 0), onehot, 0), axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_experts", "capacity", "interpret"))
+def expert_tickets(expert_ids: jax.Array, *, num_experts: int, capacity: int,
+                   interpret: bool = True):
+    """expert_ids: (N,) int32 (N % 128 == 0, -1 = inactive pair).
+    Returns slots (N,) int32: the pair's ring slot in its expert, or -1 when
+    the expert's bounded ring is full (dropped token)."""
+    n = expert_ids.shape[0]
+    assert n % TILE == 0
+    blocks = n // TILE
+    kern = functools.partial(_route_kernel, capacity)
+    slots = pl.pallas_call(
+        kern,
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((1, TILE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((blocks, TILE), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, num_experts), jnp.int32)],
+        interpret=interpret,
+    )(expert_ids.reshape(blocks, TILE))
+    return slots.reshape(n)
+
+
+def moe_route(gates: jax.Array, k: int, capacity: int, *,
+              interpret: bool = True):
+    """Full routing: top-k gating (jnp) + kernel-based ticket reservation.
+    Matches ref.moe_route_ref.  gates: (T, E) with T*k % 128 == 0."""
+    t, e = gates.shape
+    top_g, top_e = jax.lax.top_k(gates, k)
+    flat = top_e.reshape(t * k).astype(jnp.int32)
+    slots = expert_tickets(flat, num_experts=e, capacity=capacity,
+                           interpret=interpret)
+    dispatch = slots.reshape(t, k)
+    ok = dispatch >= 0
+    probs = jax.nn.softmax(top_g, axis=-1)
+    combine = jnp.where(ok, probs, 0.0)
+    return dispatch, top_e, combine

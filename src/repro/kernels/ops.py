@@ -1,0 +1,82 @@
+"""Public jit'd entry points for the kernel package.
+
+Every op takes ``use_kernel`` — True routes through the Pallas kernel
+(interpret-mode on CPU, compiled on TPU), False through the pure-jnp oracle
+in ``ref.py``.  The test suite asserts both paths agree across shape/dtype
+sweeps; the framework calls these wrappers everywhere so the kernel/oracle
+switch is a config flag, not a code change.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .frontier import frontier_expand as _frontier_kernel
+from .moe_route import expert_tickets as _expert_tickets_kernel
+from .moe_route import moe_route as _moe_route_kernel
+from .ring_slots import ring_dequeue as _ring_deq_kernel
+from .ring_slots import ring_enqueue as _ring_enq_kernel
+from .wavefaa import LANES, wavefaa as _wavefaa_kernel
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _interp() -> bool:
+    return not _ON_TPU
+
+
+def wavefaa(active, counter, *, use_kernel: bool = True):
+    if use_kernel and active.shape[0] % LANES == 0:
+        return _wavefaa_kernel(active, counter, interpret=_interp())
+    return ref.wavefaa_ref(active, counter)
+
+
+def ring_enqueue(cycles, safes, enqs, idxs, tickets, values, head, *,
+                 nslots_log2: int, idx_bot: int, use_kernel: bool = True):
+    if use_kernel:
+        return _ring_enq_kernel(cycles, safes, enqs, idxs, tickets, values,
+                                head, nslots_log2=nslots_log2,
+                                idx_bot=idx_bot, interpret=_interp())
+    return ref.ring_enqueue_ref(cycles, safes, enqs, idxs, tickets, values,
+                                head, nslots_log2, idx_bot)
+
+
+def ring_dequeue(cycles, safes, enqs, idxs, tickets, *, nslots_log2: int,
+                 idx_bot: int, use_kernel: bool = True):
+    if use_kernel:
+        return _ring_deq_kernel(cycles, safes, enqs, idxs, tickets,
+                                nslots_log2=nslots_log2, idx_bot=idx_bot,
+                                interpret=_interp())
+    return ref.ring_dequeue_ref(cycles, safes, enqs, idxs, tickets,
+                                nslots_log2, idx_bot)
+
+
+def frontier_expand(row_ptr, col_idx, frontier, visited, *, max_out: int,
+                    use_kernel: bool = True):
+    if use_kernel:
+        return _frontier_kernel(row_ptr, col_idx, frontier, visited,
+                                max_out=max_out, interpret=_interp())
+    out, cnt, vis = ref.frontier_expand_ref(row_ptr, col_idx, frontier,
+                                            None, visited, max_out)
+    return out, jnp.reshape(cnt, (1,)), vis
+
+
+def expert_tickets(expert_ids, *, num_experts: int, capacity: int,
+                   use_kernel: bool = True):
+    if use_kernel and expert_ids.shape[0] % 128 == 0:
+        return _expert_tickets_kernel(expert_ids, num_experts=num_experts,
+                                      capacity=capacity, interpret=_interp())
+    onehot = jax.nn.one_hot(jnp.maximum(expert_ids, 0), num_experts,
+                            dtype=jnp.int32)
+    onehot = onehot * (expert_ids >= 0)[:, None]
+    ranks = jnp.cumsum(onehot, axis=0) - onehot
+    slot = jnp.sum(ranks * onehot, axis=-1)
+    return jnp.where((expert_ids >= 0) & (slot < capacity), slot, -1)
+
+
+def moe_route(gates, k: int, capacity: int, *, use_kernel: bool = True):
+    if use_kernel and (gates.shape[0] * k) % 128 == 0:
+        return _moe_route_kernel(gates, k, capacity, interpret=_interp())
+    return ref.moe_route_ref(gates, k, capacity)

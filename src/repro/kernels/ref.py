@@ -1,0 +1,174 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated against
+(tests sweep shapes/dtypes and assert_allclose kernel-vs-ref).  They are also
+used directly by the pure-JAX fallback paths on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wavefaa_ref(active: jax.Array, counter: jax.Array):
+    """Wave-batched ticket reservation (paper Alg. 1 WAVEFAA, Lemma III.1).
+
+    active : (N,) int32/bool — the ballot mask (1 = lane requests a ticket)
+    counter: (1,)  int32     — the shared FAA counter
+
+    Returns (tickets, new_counter): tickets[i] = counter + (exclusive prefix
+    popcount of active up to lane i) for active lanes, -1 for inactive lanes;
+    new_counter = counter + popcount(active).  This is exactly the ticket
+    order per-thread FAA would produce (observational equivalence).
+    """
+    a = active.astype(jnp.int32)
+    rank = jnp.cumsum(a) - a  # exclusive prefix rank within the mask
+    tickets = jnp.where(a > 0, counter[0] + rank, -1).astype(jnp.int32)
+    return tickets, counter + jnp.sum(a, dtype=jnp.int32)
+
+
+def ring_enqueue_ref(cycles, safes, enqs, idxs, tickets, values, head,
+                     nslots_log2: int, idx_bot: int):
+    """Batched G-LFQ fast-path installs (paper Alg. 1 TRYENQ, lines 15-24).
+
+    The ring state is four parallel int32 field arrays (cycle, safe, enq,
+    idx) of length 2n = 1 << nslots_log2.  ``tickets`` is a batch of unique
+    tickets (wavefaa output; -1 = inactive).  Installs are applied in ticket
+    order — the linearization order.  Returns updated fields + success mask.
+    """
+    nslots = 1 << nslots_log2
+    idx_botc = idx_bot - 1
+
+    def body(state, tv):
+        cyc, saf, enq, idx = state
+        t, v = tv
+        j = jnp.where(t >= 0, t & (nslots - 1), 0)
+        c = jnp.where(t >= 0, t >> nslots_log2, 0)
+        e_c, e_s, e_i = cyc[j], saf[j], idx[j]
+        empty = (e_i == idx_bot) | (e_i == idx_botc)
+        can = (t >= 0) & (e_c < c) & empty & ((e_s == 1) | (head[0] <= t))
+        cyc = cyc.at[j].set(jnp.where(can, c, cyc[j]))
+        saf = saf.at[j].set(jnp.where(can, 1, saf[j]))
+        enq = enq.at[j].set(jnp.where(can, 1, enq[j]))
+        idx = idx.at[j].set(jnp.where(can, v, idx[j]))
+        return (cyc, saf, enq, idx), can
+
+    (cycles, safes, enqs, idxs), ok = jax.lax.scan(
+        body, (cycles, safes, enqs, idxs), (tickets, values))
+    return cycles, safes, enqs, idxs, ok
+
+
+def ring_dequeue_ref(cycles, safes, enqs, idxs, tickets,
+                     nslots_log2: int, idx_bot: int):
+    """Batched G-LFQ fast-path consumes (paper Alg. 1 TRYDEQ match branch):
+    for each ticket, if the slot's cycle matches and holds a visible value,
+    CONSUME it (index := ⊥_c); non-matching empty slots are ⊥-advanced.
+    Returns updated fields, dequeued values (-1 on miss), success mask."""
+    nslots = 1 << nslots_log2
+    idx_botc = idx_bot - 1
+
+    def body(state, t):
+        cyc, saf, enq, idx = state
+        j = jnp.where(t >= 0, t & (nslots - 1), 0)
+        c = jnp.where(t >= 0, t >> nslots_log2, 0)
+        e_c, e_i, e_e = cyc[j], idx[j], enq[j]
+        empty = (e_i == idx_bot) | (e_i == idx_botc)
+        hit = (t >= 0) & (e_c == c) & (~empty) & (e_e == 1)
+        # consume
+        idx = idx.at[j].set(jnp.where(hit, idx_botc, e_i))
+        # ⊥-advance stale empty slots (neutralize)
+        adv = (t >= 0) & (~hit) & empty & (e_c < c)
+        cyc = cyc.at[j].set(jnp.where(adv, c, cyc[j]))
+        # mark stale live slots unsafe
+        uns = (t >= 0) & (~hit) & (~empty) & (e_c < c)
+        saf = saf.at[j].set(jnp.where(uns, 0, saf[j]))
+        val = jnp.where(hit, e_i, -1)
+        return (cyc, saf, enq, idx), (val, hit)
+
+    (cycles, safes, enqs, idxs), (vals, ok) = jax.lax.scan(
+        body, (cycles, safes, enqs, idxs), tickets)
+    return cycles, safes, enqs, idxs, vals, ok
+
+
+def frontier_expand_ref(row_ptr, col_idx, frontier, frontier_len, visited,
+                        max_out: int):
+    """Level-synchronous BFS frontier expansion (paper § V-B-a).
+
+    For every vertex in the frontier (padded with -1), scan its CSR
+    neighbors; unvisited neighbors are marked and enqueued into the next
+    frontier with queue-style ticket reservation (aggregate-then-commit —
+    each accepted neighbor takes ticket = running popcount).  Returns
+    (next_frontier (max_out, padded -1), next_len, visited')."""
+    n = visited.shape[0]
+
+    def vbody(state, u):
+        visited, out, cnt = state
+
+        def ebody(k, st):
+            visited, out, cnt = st
+            v = col_idx[k]
+            fresh = visited[v] == 0
+            visited = visited.at[v].set(1)
+            out = out.at[jnp.where(fresh, cnt, max_out - 1)].set(
+                jnp.where(fresh, v, out[jnp.minimum(cnt, max_out - 1)]))
+            cnt = cnt + fresh.astype(jnp.int32)
+            return visited, out, cnt
+
+        valid = u >= 0
+        start = jnp.where(valid, row_ptr[jnp.maximum(u, 0)], 0)
+        stop = jnp.where(valid, row_ptr[jnp.maximum(u, 0) + 1], 0)
+        visited, out, cnt = jax.lax.fori_loop(start, stop, ebody,
+                                              (visited, out, cnt))
+        return (visited, out, cnt), None
+
+    out0 = jnp.full((max_out,), -1, dtype=jnp.int32)
+    (visited, out, cnt), _ = jax.lax.scan(
+        vbody, (visited, out0, jnp.int32(0)), frontier)
+    return out, cnt, visited
+
+
+def moe_route_ref(gates: jax.Array, k: int, capacity: int):
+    """Capacity-bounded top-k MoE dispatch via per-expert ticket reservation.
+
+    gates: (T, E) router logits.  Each token claims a ring ticket in each of
+    its top-k experts; tokens beyond an expert's capacity are dropped (the
+    RETRY path of the bounded ring).  Ticket order = token order, exactly
+    what a per-token FAA on the expert's Tail would produce.
+
+    Returns (dispatch (T, k) slot-or--1, expert_idx (T, k), combine (T, k)).
+    """
+    T, E = gates.shape
+    top_g, top_e = jax.lax.top_k(gates, k)          # (T, k)
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(T * k, E)
+    ranks = jnp.cumsum(flat, axis=0) - flat          # exclusive prefix per expert
+    slot = jnp.sum(ranks * flat, axis=-1).reshape(T, k)
+    ok = slot < capacity
+    dispatch = jnp.where(ok, slot, -1)
+    probs = jax.nn.softmax(top_g, axis=-1)
+    combine = jnp.where(ok, probs, 0.0)
+    return dispatch, top_e, combine
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap_val=0.0):
+    """Oracle for kernels.flash_attn: plain masked softmax attention.
+    q (B,H,Sq,hd); k/v (B,KV,Sk,hd)."""
+    b, h, sq, hd = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    rep = h // kvh
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / (hd ** 0.5)
+    if softcap_val:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok = ok & (kpos <= qpos)
+    if window:
+        ok = ok & (kpos > qpos - window)
+    s = jnp.where(ok[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)

@@ -1,0 +1,144 @@
+"""Batched bounded-ring slot operations as Pallas TPU kernels.
+
+These kernels apply a *wave* of fast-path queue operations (paper Alg. 1) to
+the ring state in one invocation.  The ring's packed 64-bit entry word is
+represented as four parallel int32 field planes (cycle / safe / enq / idx) —
+TPU-native layout: 32-bit lanes, single-writer-per-slot semantics guaranteed
+by ticket uniqueness (Lemma III.1), applied in ticket order, which *is* the
+linearization order.
+
+VMEM budget: the whole ring (4 × 2n × 4 B) plus the op batch live in VMEM;
+for n ≤ 64Ki that is ≤ 2 MiB — comfortably inside the 16 MiB/core budget.
+The field planes are aliased input→output so the update is in-place.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _enq_kernel(nslots_log2, idx_bot, head_ref, tickets_ref, values_ref,
+                cyc_in, saf_in, enq_in, idx_in,
+                cyc_ref, saf_ref, enq_ref, idx_ref, ok_ref):
+    nslots = 1 << nslots_log2
+    idx_botc = idx_bot - 1
+    cyc_ref[...] = cyc_in[...]
+    saf_ref[...] = saf_in[...]
+    enq_ref[...] = enq_in[...]
+    idx_ref[...] = idx_in[...]
+    ok_ref[...] = jnp.zeros_like(ok_ref)
+    head = head_ref[0]
+    b = tickets_ref.shape[1]
+
+    def body(i, _):
+        t = tickets_ref[0, i]
+        v = values_ref[0, i]
+        j = jnp.where(t >= 0, t & (nslots - 1), 0)
+        c = jnp.where(t >= 0, t >> nslots_log2, 0)
+        e_c, e_s, e_i = cyc_ref[0, j], saf_ref[0, j], idx_ref[0, j]
+        empty = (e_i == idx_bot) | (e_i == idx_botc)
+        can = (t >= 0) & (e_c < c) & empty & ((e_s == 1) | (head <= t))
+        cyc_ref[0, j] = jnp.where(can, c, e_c)
+        saf_ref[0, j] = jnp.where(can, 1, e_s)
+        enq_ref[0, j] = jnp.where(can, 1, enq_ref[0, j])
+        idx_ref[0, j] = jnp.where(can, v, e_i)
+        ok_ref[0, i] = can.astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, b, body, 0)
+
+
+def _deq_kernel(nslots_log2, idx_bot, tickets_ref,
+                cyc_in, saf_in, enq_in, idx_in,
+                cyc_ref, saf_ref, enq_ref, idx_ref, val_ref, ok_ref):
+    nslots = 1 << nslots_log2
+    idx_botc = idx_bot - 1
+    cyc_ref[...] = cyc_in[...]
+    saf_ref[...] = saf_in[...]
+    enq_ref[...] = enq_in[...]
+    idx_ref[...] = idx_in[...]
+    val_ref[...] = jnp.full_like(val_ref, -1)
+    ok_ref[...] = jnp.zeros_like(ok_ref)
+    b = tickets_ref.shape[1]
+
+    def body(i, _):
+        t = tickets_ref[0, i]
+        j = jnp.where(t >= 0, t & (nslots - 1), 0)
+        c = jnp.where(t >= 0, t >> nslots_log2, 0)
+        e_c, e_s, e_e, e_i = (cyc_ref[0, j], saf_ref[0, j],
+                              enq_ref[0, j], idx_ref[0, j])
+        empty = (e_i == idx_bot) | (e_i == idx_botc)
+        hit = (t >= 0) & (e_c == c) & (~empty) & (e_e == 1)
+        idx_ref[0, j] = jnp.where(hit, idx_botc, e_i)     # CONSUME
+        adv = (t >= 0) & (~hit) & empty & (e_c < c)
+        cyc_ref[0, j] = jnp.where(adv, c, e_c)            # ⊥-advance
+        uns = (t >= 0) & (~hit) & (~empty) & (e_c < c)
+        saf_ref[0, j] = jnp.where(uns, 0, e_s)            # mark unsafe
+        val_ref[0, i] = jnp.where(hit, e_i, -1)
+        ok_ref[0, i] = hit.astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, b, body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nslots_log2", "idx_bot", "interpret"))
+def ring_enqueue(cycles, safes, enqs, idxs, tickets, values, head, *,
+                 nslots_log2: int, idx_bot: int, interpret: bool = True):
+    """Apply a batch of TRYENQ installs in ticket order.  All field arrays
+    are (2n,) int32; tickets/values are (B,) int32 (ticket -1 = inactive).
+    Returns (cycles, safes, enqs, idxs, ok)."""
+    nslots = 1 << nslots_log2
+    b = tickets.shape[0]
+    kern = functools.partial(_enq_kernel, nslots_log2, idx_bot)
+    outs = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+        ] + [pl.BlockSpec((1, nslots), lambda i: (0, 0))] * 4,
+        out_specs=[pl.BlockSpec((1, nslots), lambda i: (0, 0))] * 4
+        + [pl.BlockSpec((1, b), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, nslots), jnp.int32)] * 4
+        + [jax.ShapeDtypeStruct((1, b), jnp.int32)],
+        interpret=interpret,
+    )(head.reshape(1), tickets.reshape(1, b), values.reshape(1, b),
+      cycles.reshape(1, nslots), safes.reshape(1, nslots),
+      enqs.reshape(1, nslots), idxs.reshape(1, nslots))
+    cyc, saf, enq, idx, ok = outs
+    return (cyc.reshape(nslots), saf.reshape(nslots), enq.reshape(nslots),
+            idx.reshape(nslots), ok.reshape(b).astype(bool))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nslots_log2", "idx_bot", "interpret"))
+def ring_dequeue(cycles, safes, enqs, idxs, tickets, *,
+                 nslots_log2: int, idx_bot: int, interpret: bool = True):
+    """Apply a batch of TRYDEQ consumes in ticket order.  Returns
+    (cycles, safes, enqs, idxs, values, ok)."""
+    nslots = 1 << nslots_log2
+    b = tickets.shape[0]
+    kern = functools.partial(_deq_kernel, nslots_log2, idx_bot)
+    outs = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, b), lambda i: (0, 0))]
+        + [pl.BlockSpec((1, nslots), lambda i: (0, 0))] * 4,
+        out_specs=[pl.BlockSpec((1, nslots), lambda i: (0, 0))] * 4
+        + [pl.BlockSpec((1, b), lambda i: (0, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((1, nslots), jnp.int32)] * 4
+        + [jax.ShapeDtypeStruct((1, b), jnp.int32)] * 2,
+        interpret=interpret,
+    )(tickets.reshape(1, b),
+      cycles.reshape(1, nslots), safes.reshape(1, nslots),
+      enqs.reshape(1, nslots), idxs.reshape(1, nslots))
+    cyc, saf, enq, idx, val, ok = outs
+    return (cyc.reshape(nslots), saf.reshape(nslots), enq.reshape(nslots),
+            idx.reshape(nslots), val.reshape(b), ok.reshape(b).astype(bool))

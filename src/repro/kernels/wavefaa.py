@@ -1,0 +1,75 @@
+"""WAVEFAA as a Pallas TPU kernel — vectorized aggregate-then-commit ticket
+reservation (paper Alg. 1 / Fig. 1, adapted per DESIGN.md § 2.1).
+
+On the GPU a wavefront ballots, one leader FAAs by the popcount, and lanes
+add their prefix rank.  On TPU the "wave" is a VMEM-resident block of request
+lanes: the kernel computes the in-block exclusive prefix rank on the VREG
+lane grid and commits **one** scalar counter update per block into an SMEM
+accumulator that carries across the (sequential) TPU grid — the same
+aggregation hierarchy, one level up.
+
+Block shape: (8, 128) int32 lanes per grid step — one VREG tile.  The mask
+is reshaped (N,) → (N/1024, 8, 128) by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 8 * 128  # one (8, 128) VREG tile per grid step
+
+
+def _wavefaa_kernel(counter_ref, active_ref, tickets_ref, newctr_ref, acc_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[0] = counter_ref[0]
+
+    a = active_ref[...].astype(jnp.int32)           # (8, 128) block
+    flat = a.reshape(1, LANES)
+    rank = jnp.cumsum(flat, axis=1) - flat          # exclusive prefix rank
+    base = acc_ref[0]
+    t = jnp.where(flat > 0, base + rank, -1)
+    tickets_ref[...] = t.reshape(a.shape)
+    # ONE commit per block — the leader FAA of Alg. 1
+    acc_ref[0] = base + jnp.sum(a)
+
+    @pl.when(step == pl.num_programs(0) - 1)
+    def _fin():
+        newctr_ref[0] = acc_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wavefaa(active: jax.Array, counter: jax.Array, *, interpret: bool = True):
+    """active: (N,) int32/bool with N % 1024 == 0; counter: (1,) int32.
+    Returns (tickets (N,) int32, new_counter (1,) int32)."""
+    n = active.shape[0]
+    assert n % LANES == 0, f"N={n} must be a multiple of {LANES}"
+    blocks = n // LANES
+    a = active.astype(jnp.int32).reshape(blocks * 8, 128)
+    ctr = counter.astype(jnp.int32).reshape(1)
+    tickets, newctr = pl.pallas_call(
+        _wavefaa_kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((8, 128), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((blocks * 8, 128), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(ctr, a)
+    return tickets.reshape(n), newctr

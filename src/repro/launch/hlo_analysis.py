@@ -1,0 +1,296 @@
+"""Post-SPMD HLO text analyzer for the roofline report.
+
+``compiled.cost_analysis()`` counts while-loop bodies **once** (probed in
+DESIGN.md §6), which under-reports every scanned layer stack by ~L×.  This
+module re-derives the three roofline inputs directly from
+``compiled.as_text()`` with while-loop trip-count multipliers:
+
+* FLOPs         — every ``dot``/``convolution`` (including inside fusions),
+                  2·out_elems·K, × the product of enclosing while trips;
+* HBM bytes     — Σ output-buffer bytes × 2 (write + subsequent read) for
+                  materializing top-level ops (fusion internals excluded —
+                  they never touch HBM), × trip multipliers;
+* collective B  — Σ operand bytes of all-reduce / all-gather /
+                  reduce-scatter / all-to-all / collective-permute, × trip
+                  multipliers, bucketed by opcode.
+
+Post-SPMD shapes are per-device shards, so all numbers are per-device.
+Trip counts come from the while condition's ``compare(iter, constant(L)),
+direction=LT`` pattern; loops whose trip cannot be extracted are counted
+once and reported in ``warnings``.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "s16": 2, "u16": 2, "f16": 2,
+    "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\(.*?\))|(?:\S+))\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*{\s*$")
+_REF_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "while", "conditional", "call"}
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    by_collective: Dict[str, float] = field(default_factory=dict)
+    dot_count: int = 0
+    warnings: List[str] = field(default_factory=list)
+
+
+class HloModule:
+    def __init__(self, text: str) -> None:
+        self.comps: Dict[str, List[Instr]] = {}
+        self.symtab: Dict[str, Dict[str, Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            m = _COMP_RE.match(line)
+            if m and "=" not in line.split("(")[0]:
+                cur = m.group(1)
+                self.comps[cur] = []
+                self.symtab[cur] = {}
+                if line.lstrip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            mi = _INSTR_RE.match(line)
+            if mi:
+                ins = Instr(mi.group(1), mi.group(2), mi.group(3), line)
+                self.comps[cur].append(ins)
+                self.symtab[cur][ins.name] = ins
+
+    # -- helpers ------------------------------------------------------------
+
+    def _attr_comp(self, line: str, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w\.\-]+)", line)
+        return m.group(1) if m else None
+
+    def _attr_comps(self, line: str, key: str) -> List[str]:
+        m = re.search(key + r"=\{([^}]*)\}", line)
+        if not m:
+            return []
+        return [c.strip().lstrip("%") for c in m.group(1).split(",") if c.strip()]
+
+    def _operands(self, ins: Instr) -> List[str]:
+        # take refs inside the operand parens only (strip attrs after ')')
+        body = ins.line.split(ins.opcode + "(", 1)[-1]
+        depth, out = 1, []
+        for i, ch in enumerate(body):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    body = body[:i]
+                    break
+        return _REF_RE.findall(body)
+
+    def _operand_bytes(self, comp: str, ins: Instr) -> int:
+        total = 0
+        tab = self.symtab[comp]
+        for r in self._operands(ins):
+            if r in tab:
+                total += shape_bytes(tab[r].type_str)
+        return total
+
+    def trip_count(self, cond_comp: str) -> Optional[int]:
+        """Trip count of a scan-generated while: the loop bound constant in
+        the condition.  The compare may be wrapped in a fusion, so first
+        resolve constants among the ROOT's operands, then fall back to the
+        unique positive constant in the computation."""
+        tab = self.symtab.get(cond_comp, {})
+        instrs = self.comps.get(cond_comp, [])
+        if not instrs:
+            return None
+
+        def const_val(ins: Instr) -> Optional[int]:
+            m = re.search(r"constant\((-?\d+)\)", ins.line)
+            return int(m.group(1)) if m else None
+
+        roots = [i for i in instrs if "ROOT " in i.line] or instrs[-1:]
+        for root in roots:
+            cands = [const_val(tab[r]) for r in self._operands(root)
+                     if r in tab and tab[r].opcode == "constant"]
+            cands = [c for c in cands if c is not None and c > 0]
+            if len(cands) == 1:
+                return cands[0]
+        for ins in instrs:
+            if ins.opcode != "compare":
+                continue
+            for r in self._operands(ins):
+                d = tab.get(r)
+                if d is not None and d.opcode == "constant":
+                    v = const_val(d)
+                    if v is not None and v > 0:
+                        return v
+        consts = {const_val(i) for i in instrs if i.opcode == "constant"}
+        consts = {c for c in consts if c is not None and c > 0}
+        if len(consts) == 1:
+            return consts.pop()
+        return None
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        out = shape_elems(ins.type_str)
+        ops = self._operands(ins)
+        tab = self.symtab[comp]
+        lhs = tab.get(ops[0]) if ops else None
+        k = 1
+        if lhs is not None:
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+            dims_m = _SHAPE_RE.search(lhs.type_str)
+            if m and dims_m and dims_m.group(2):
+                dims = [int(d) for d in dims_m.group(2).split(",")]
+                for ci in (int(c) for c in m.group(1).split(",") if c):
+                    if ci < len(dims):
+                        k *= dims[ci]
+        return 2.0 * out * k
+
+    def _conv_flops(self, comp: str, ins: Instr) -> float:
+        out = shape_elems(ins.type_str)
+        ops = self._operands(ins)
+        tab = self.symtab[comp]
+        rhs = tab.get(ops[1]) if len(ops) > 1 else None
+        if rhs is None:
+            return 2.0 * out
+        rhs_elems = shape_elems(rhs.type_str)
+        dims_m = _SHAPE_RE.search(ins.type_str)
+        oc = int(dims_m.group(2).split(",")[-1]) if dims_m and dims_m.group(2) else 1
+        return 2.0 * out * max(rhs_elems // max(oc, 1), 1)
+
+    # -- traversal --------------------------------------------------------------
+
+    def analyze(self) -> HloCosts:
+        costs = HloCosts()
+        if self.entry is None:
+            costs.warnings.append("no ENTRY computation found")
+            return costs
+        self._visit(self.entry, 1.0, costs, in_fusion=False, seen=())
+        return costs
+
+    def _visit(self, comp: str, mult: float, costs: HloCosts,
+               in_fusion: bool, seen: Tuple[str, ...]) -> None:
+        if comp in seen or comp not in self.comps:
+            return
+        seen = seen + (comp,)
+        for ins in self.comps[comp]:
+            op = ins.opcode
+            if op == "while":
+                cond = self._attr_comp(ins.line, "condition")
+                body = self._attr_comp(ins.line, "body")
+                trip = self.trip_count(cond) if cond else None
+                if trip is None:
+                    trip = 1
+                    costs.warnings.append(f"unknown trip count for {ins.name}")
+                if body:
+                    self._visit(body, mult * trip, costs, in_fusion, seen)
+                continue
+            if op == "fusion":
+                called = self._attr_comp(ins.line, "calls")
+                if not in_fusion:
+                    costs.bytes += 2.0 * shape_bytes(ins.type_str) * mult
+                if called:
+                    self._visit(called, mult, costs, in_fusion=True, seen=seen)
+                continue
+            if op == "conditional":
+                for br in (self._attr_comps(ins.line, "branch_computations")
+                           or [c for c in (self._attr_comp(ins.line, "true_computation"),
+                                           self._attr_comp(ins.line, "false_computation")) if c]):
+                    self._visit(br, mult, costs, in_fusion, seen)
+                continue
+            if op in ("call", "custom-call", "async-start"):
+                called = (self._attr_comp(ins.line, "to_apply")
+                          or self._attr_comp(ins.line, "calls"))
+                if called:
+                    self._visit(called, mult, costs, in_fusion, seen)
+                if op == "custom-call" and not in_fusion:
+                    costs.bytes += 2.0 * shape_bytes(ins.type_str) * mult
+                continue
+            if op == "dot":
+                costs.flops += self._dot_flops(comp, ins) * mult
+                costs.dot_count += 1
+                if not in_fusion:
+                    costs.bytes += (shape_bytes(ins.type_str)
+                                    + self._operand_bytes(comp, ins)) * mult
+                continue
+            if op == "convolution":
+                costs.flops += self._conv_flops(comp, ins) * mult
+                if not in_fusion:
+                    costs.bytes += (shape_bytes(ins.type_str)
+                                    + self._operand_bytes(comp, ins)) * mult
+                continue
+            if op in COLLECTIVES or any(op.startswith(c) for c in COLLECTIVES):
+                base = next((c for c in COLLECTIVES if op.startswith(c)), op)
+                b = self._operand_bytes(comp, ins) * mult
+                costs.collective_bytes += b
+                costs.by_collective[base] = costs.by_collective.get(base, 0.0) + b
+                if not in_fusion:
+                    costs.bytes += 2.0 * shape_bytes(ins.type_str) * mult
+                continue
+            if in_fusion or op in _SKIP_BYTES:
+                continue
+            costs.bytes += 2.0 * shape_bytes(ins.type_str) * mult
+        return
+
+
+def analyze_hlo_text(text: str) -> HloCosts:
+    return HloModule(text).analyze()

@@ -1,0 +1,213 @@
+"""Step builders: train_step / prefill_step / serve_step with their
+sharding specs for any (architecture × input shape × mesh) cell.
+
+Sharding strategy (DESIGN.md § 6): DP over ("pod","data"); Megatron TP over
+"model" (head/ff/vocab-sharded per `models.param_specs`); FSDP (ZeRO-3 param
++ optimizer-state sharding over "data") for the large configs; decode caches
+batch-sharded when the batch covers the DP axes, else sequence-sharded over
+every mesh axis (long_500k, batch 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import SHAPES, ArchConfig
+from ..models import (decode_step, init_decode_cache, init_params, loss_fn,
+                      param_specs, prefill)
+from ..optim import adamw
+from .mesh import dp_axes, dp_size
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _dp(mesh) -> Tuple[str, ...]:
+    return dp_axes(mesh)
+
+
+def sanitize_pspecs(spec_tree, struct_tree, mesh):
+    """Drop shardings whose mesh-axis product does not divide the dimension
+    (explicit in_shardings require exact divisibility: e.g. a 50280-entry
+    vocab cannot be 16-way sharded; granite's 40 experts cannot split over
+    16 — those fall back to replication and the roofline shows the cost)."""
+    def fix(spec, st):
+        if not isinstance(spec, P):
+            return spec
+        dims = st.shape
+        new = []
+        for i, ax in enumerate(spec):
+            if ax is None or i >= len(dims):
+                new.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            new.append(ax if dims[i] % size == 0 else None)
+        return P(*new)
+
+    return jax.tree.map(fix, spec_tree, struct_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_struct(cfg: ArchConfig, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.audio_frontend:
+        out["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        out["img"] = jax.ShapeDtypeStruct((b, cfg.n_image_tokens, cfg.d_model),
+                                          jnp.bfloat16)
+    return out
+
+
+def batch_pspecs(cfg: ArchConfig, shape_name: str, mesh) -> Dict[str, P]:
+    dp = _dp(mesh)
+    sh = SHAPES[shape_name]
+    b = sh["global_batch"]
+    bs = dp if b % max(dp_size(mesh), 1) == 0 else ()
+    out: Dict[str, P] = {}
+    if cfg.audio_frontend:
+        out["frames"] = P(bs, None, None)
+    else:
+        out["tokens"] = P(bs, None)
+    out["labels"] = P(bs, None)
+    if cfg.family == "vlm":
+        out["img"] = P(bs, None, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: Optional[adamw.AdamWConfig] = None,
+                    pspecs=None):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def train_step(state: adamw.OptState, batch: Dict[str, jax.Array]):
+        params = adamw.cast_params(state.master)
+        if pspecs is not None:
+            # pin the bf16 working copy to the FSDP/TP layout so GSPMD
+            # all-gathers per layer inside the scan (ZeRO-3), instead of
+            # materializing the full unsharded parameter stacks
+            params = jax.lax.with_sharding_constraint(params, pspecs)
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+        if pspecs is not None:
+            grads = jax.lax.with_sharding_constraint(grads, pspecs)
+        new_state, metrics = adamw.step(opt_cfg, state, grads)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return train_step
+
+
+def state_struct(cfg: ArchConfig) -> adamw.OptState:
+    """Optimizer-state ShapeDtypeStructs via eval_shape (no allocation)."""
+    def build():
+        return adamw.init(init_params(cfg))
+    return jax.eval_shape(build)
+
+
+def state_pspecs(cfg: ArchConfig) -> adamw.OptState:
+    specs = param_specs(cfg)
+    return adamw.OptState(master=specs,
+                          m=jax.tree.map(lambda s: s, specs),
+                          v=jax.tree.map(lambda s: s, specs),
+                          step=P())
+
+
+# ---------------------------------------------------------------------------
+# serve steps (prefill + decode)
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return prefill(params, batch.get("tokens"), cfg,
+                       img=batch.get("img"), frames=batch.get("frames"))
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, token, cur, img=None):
+        return decode_step(params, cache, token, cur, cfg, img=img)
+    return serve_step
+
+
+def cache_struct(cfg: ArchConfig, shape_name: str):
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    return jax.eval_shape(lambda: init_decode_cache(cfg, b, s))
+
+
+def cache_pspecs(cfg: ArchConfig, shape_name: str, mesh):
+    """Batch-sharded when possible; else sequence-sharded over all axes."""
+    sh = SHAPES[shape_name]
+    b = sh["global_batch"]
+    dp = _dp(mesh)
+    batch_ok = b % max(dp_size(mesh), 1) == 0
+    model = mesh.shape.get("model", 1)
+    all_axes = tuple(mesh.axis_names)
+
+    def kv_spec(ndim: int) -> P:
+        # (B, S, kv, hd).  Never shard S: the decode ring-buffer write is a
+        # dynamic_update_slice at a traced index, and GSPMD handles a DUS
+        # on a sharded dim by fully rematerializing the cache every step
+        # (§Perf hillclimb #3: gemma3 long_500k spent 44 GB/step on it).
+        # Prefer kv-heads on "model"; else head_dim over as many axes as
+        # divide it; else leave replicated (small caches only).
+        if batch_ok:
+            if cfg.n_kv_heads and cfg.n_kv_heads % model == 0:
+                return P(dp, None, "model", None)
+            if cfg.hd % model == 0:
+                return P(dp, None, None, "model")
+            return P(dp, None, None, None)
+        # batch == 1 (long-context): sequence-sharded over the whole mesh;
+        # the mask-select cache write keeps every step's collective tiny
+        return P(None, all_axes, None, None)
+
+    def entry_specs(entry):
+        sp = {}
+        for k, v in entry.items():
+            if k in ("k", "v"):
+                sp[k] = kv_spec(len(v.shape))
+            elif k == "ssm":  # (B, nh, hd, st)
+                nh = cfg.ssm_nheads
+                if batch_ok:
+                    sp[k] = (P(dp, "model", None, None)
+                             if nh % model == 0 else P(dp, None, None, None))
+                else:
+                    sp[k] = (P(None, "model", None, None)
+                             if nh % model == 0 else P(None, None, None, None))
+            else:  # conv state (B, K-1, C)
+                sp[k] = P(dp, None, None) if batch_ok else P(None, None, None)
+        return sp
+
+    struct = cache_struct(cfg, shape_name)
+    return [entry_specs(e) for e in struct]
+
+
+def token_pspecs(cfg: ArchConfig, shape_name: str, mesh):
+    sh = SHAPES[shape_name]
+    b = sh["global_batch"]
+    dp = _dp(mesh)
+    bs = dp if b % max(dp_size(mesh), 1) == 0 else ()
+    return P(bs, None)
+
+
+def params_struct(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(cfg))

@@ -1,0 +1,7 @@
+"""Model zoo: one functional transformer covering the assigned pool."""
+from .transformer import (decode_step, forward, init_decode_cache,
+                          init_params, layer_flags, loss_fn, param_specs,
+                          prefill)
+
+__all__ = ["forward", "loss_fn", "prefill", "decode_step", "init_params",
+           "init_decode_cache", "param_specs", "layer_flags"]

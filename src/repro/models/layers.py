@@ -1,0 +1,456 @@
+"""Core transformer layers, functional style.
+
+Params are plain dicts of jnp arrays; every constructor has a matching
+``*_specs`` function returning the same-structure tree of PartitionSpec for
+the production mesh (DP/FSDP over "data"(+"pod"), TP over "model").
+
+All attention variants required by the assigned pool live in one code path:
+GQA, sliding windows (per-layer *dynamic* window scalar so heterogeneous
+local/global stacks stay inside a single lax.scan), logit soft-capping,
+bidirectional (encoder) masks, and cross-attention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+Params = Dict[str, jax.Array]
+
+# Axis conventions: activations (batch, seq, d); batch sharded over
+# ("pod","data") ≡ "dp"; hidden/heads sharded over "model".
+DP = ("pod", "data")  # collapsed to ("data",) on single-pod meshes
+
+
+def dp_axes(mesh_axes: Tuple[str, ...]):
+    return tuple(a for a in DP if a in mesh_axes)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _dense(key, shape, scale_axis: int = 0, dtype=jnp.bfloat16):
+    scale = 1.0 / (shape[scale_axis] ** 0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, hd); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (jnp.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attn_params(key, cfg: ArchConfig, cross: bool = False) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    pfx = "c" if cross else ""
+    return {
+        f"{pfx}wq": _dense(ks[0], (d, h * hd)),
+        f"{pfx}wk": _dense(ks[1], (d, kv * hd)),
+        f"{pfx}wv": _dense(ks[2], (d, kv * hd)),
+        f"{pfx}wo": _dense(ks[3], (h * hd, d)),
+    }
+
+
+def attn_specs(cfg: ArchConfig, cross: bool = False, fsdp_axis=None):
+    f = fsdp_axis
+    pfx = "c" if cross else ""
+    return {
+        f"{pfx}wq": P(f, "model"),
+        f"{pfx}wk": P(f, "model"),
+        f"{pfx}wv": P(f, "model"),
+        f"{pfx}wo": P("model", f),
+    }
+
+
+def _mask_bias(q_pos, k_pos, window, causal: bool):
+    """Additive mask: causal + optional sliding window (dynamic scalar)."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), jnp.bool_)
+    if causal:
+        ok = ok & (k_pos[None, :] <= q_pos[:, None])
+    # window: 0 = full; else key must be within `window` of the query
+    ok = ok & jnp.where(window > 0,
+                        k_pos[None, :] > q_pos[:, None] - jnp.maximum(window, 1),
+                        True)
+    return jnp.where(ok, 0.0, -1e30)
+
+
+FLASH_BLOCK_Q = 512
+FLASH_BLOCK_K = 512
+FLASH_MIN_SEQ = 2048  # use the blocked path above this many keys
+
+
+def _pin(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint iff a mesh with the named axes is ambient
+    and every sharded dim divides; no-op otherwise (tests run mesh-less)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    for i, ax in enumerate(spec):
+        if ax is None or ax is P.UNCONSTRAINED:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            if a not in mesh.axis_names:
+                return x
+            size *= mesh.shape[a]
+        if x.shape[i] % size:
+            return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _blk_logits(static, qb, kb, qpb, kpb, window):
+    """One (q-block, k-block) logits tile with scaling, soft-capping and
+    causal/window bias.  qb (b,bq,kv,rep,hd); kb (b,bk,kv,hd)."""
+    cap, causal, scale = static
+    raw = jnp.einsum("bqgrd,bkgd->bgrqk", qb, kb).astype(jnp.float32) * scale
+    capped = softcap(raw, cap)
+    bias = _mask_bias(qpb, kpb, window, causal)
+    return raw, capped + bias[None, None, None, :, :]
+
+
+
+
+def _q_block_spec(kvh: int) -> P:
+    """Layout for the per-iteration q block inside the flash scans, aligned
+    with `_kv_stack_spec`: when kv-heads divide the TP degree both q and K/V
+    shard on the head dim (tiles shrink, no per-tile resharding); otherwise
+    shard the query rows."""
+    U = P.UNCONSTRAINED
+    mesh = jax.sharding.get_abstract_mesh()
+    model = (mesh.shape.get("model", 1)
+             if mesh is not None and mesh.axis_names else 1)
+    if model > 1 and kvh % model == 0:
+        return P(U, U, "model", U, U)
+    return P(U, "model", U, U, U)
+
+def _kv_stack_spec(kvh: int) -> P:
+    """Layout for the stacked K/V blocks feeding the flash scans: kv-heads
+    over "model" when divisible (memory /TP, slices local), else fully
+    gathered (one gather per layer — still far better than the per-tile
+    re-gathers the partitioner produces if left unpinned)."""
+    U = P.UNCONSTRAINED
+    mesh = jax.sharding.get_abstract_mesh()
+    model = (mesh.shape.get("model", 1)
+             if mesh is not None and mesh.axis_names else 1)
+    if model > 1 and kvh % model == 0:
+        return P(None, U, None, "model", None)
+    return P(None, U, None, None, None)
+
+def _flash_fwd_impl(static, q, k, v, q_pos, k_pos, window):
+    b, sq, kvh, rep, hd = q.shape
+    sk = k.shape[1]
+    bq = min(FLASH_BLOCK_Q, sq)
+    bk = min(FLASH_BLOCK_K, sk)
+    nq, nk = sq // bq, sk // bk
+    qg = jnp.moveaxis(q.reshape(b, nq, bq, kvh, rep, hd), 1, 0)
+    kg = jnp.moveaxis(k.reshape(b, nk, bk, kvh, hd), 1, 0)
+    vg = jnp.moveaxis(v.reshape(b, nk, bk, kvh, hd), 1, 0)
+    # Pin the stacked K/V blocks so the scan slices locally — one gather
+    # per layer instead of one per (q-block × k-block) iteration (48% of
+    # yi-prefill's collective term); head-sharded when kv divides the TP
+    # degree so prefill memory does not regress.
+    U = P.UNCONSTRAINED
+    kg = _pin(kg, _kv_stack_spec(kvh))
+    vg = _pin(vg, _kv_stack_spec(kvh))
+    qp = q_pos.reshape(nq, bq)
+    kp = k_pos.reshape(nk, bk)
+
+    def q_block(_, inp):
+        qb, qpb = inp
+        # shard the query block so every logits tile (and its HBM
+        # round-trip) shrinks by the TP degree (§Perf hillclimb)
+        qb = _pin(qb, _q_block_spec(kvh))
+
+        def k_block(carry, kin):
+            m, l, acc = carry
+            kb, vb, kpb = kin
+            _, s = _blk_logits(static, qb, kb, qpb, kpb, window)
+            new_m = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - new_m[..., None])
+            corr = jnp.exp(m - new_m)
+            l = l * corr + p.sum(axis=-1)
+            acc = (acc * corr[..., None]
+                   + jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(vb.dtype),
+                                vb).astype(jnp.float32))
+            return (new_m, l, acc), None
+
+        m0 = jnp.full((b, kvh, rep, bq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kvh, rep, bq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, rep, bq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(k_block, (m0, l0, a0), (kg, vg, kp))
+        l = jnp.maximum(l, 1e-30)
+        out = (acc / l[..., None]).astype(q.dtype)       # (b,kv,rep,bq,hd)
+        return None, (out.transpose(0, 3, 1, 2, 4),      # (b,bq,kv,rep,hd)
+                      m.transpose(0, 3, 1, 2), l.transpose(0, 3, 1, 2))
+
+    _, (outs, ms, ls) = jax.lax.scan(q_block, None, (qg, qp))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, kvh, rep, hd)
+    m = jnp.moveaxis(ms, 0, 1).reshape(b, sq, kvh, rep)
+    l = jnp.moveaxis(ls, 0, 1).reshape(b, sq, kvh, rep)
+    return out, m, l
+
+
+import functools as _ft
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_core(static, q, k, v, q_pos, k_pos, window):
+    out, _, _ = _flash_fwd_impl(static, q, k, v, q_pos, k_pos, window)
+    return out
+
+
+def _flash_core_fwd(static, q, k, v, q_pos, k_pos, window):
+    out, m, l = _flash_fwd_impl(static, q, k, v, q_pos, k_pos, window)
+    return out, (q, k, v, out, m, l, q_pos, k_pos, window)
+
+
+def _flash_core_bwd(static, res, dout):
+    """Flash backward: recompute the logits tile per (k-block, q-block) pair
+    using the saved per-row (m, l) statistics — O(S·blk) memory, never the
+    full S² tensor.  Outer scan over k blocks emits (dk, dv) blocks and
+    carries the full dq accumulator."""
+    cap, causal, scale = static
+    q, k, v, out, m, l, q_pos, k_pos, window = res
+    b, sq, kvh, rep, hd = q.shape
+    sk = k.shape[1]
+    bq = min(FLASH_BLOCK_Q, sq)
+    bk = min(FLASH_BLOCK_K, sk)
+    nq, nk = sq // bq, sk // bk
+    d_row = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                              # (b,sq,kv,rep)
+    qg = jnp.moveaxis(q.reshape(b, nq, bq, kvh, rep, hd), 1, 0)
+    dg = jnp.moveaxis(dout.reshape(b, nq, bq, kvh, rep, hd), 1, 0)
+    mg = jnp.moveaxis(m.reshape(b, nq, bq, kvh, rep), 1, 0)
+    lg = jnp.moveaxis(l.reshape(b, nq, bq, kvh, rep), 1, 0)
+    Dg = jnp.moveaxis(d_row.reshape(b, nq, bq, kvh, rep), 1, 0)
+    kg = jnp.moveaxis(k.reshape(b, nk, bk, kvh, hd), 1, 0)
+    vg = jnp.moveaxis(v.reshape(b, nk, bk, kvh, hd), 1, 0)
+    qp = q_pos.reshape(nq, bq)
+    kp = k_pos.reshape(nk, bk)
+
+    dq0 = jnp.zeros((nq, b, bq, kvh, rep, hd), jnp.float32)
+
+    U = P.UNCONSTRAINED
+
+    def k_block2(dq_acc, kin):
+        kb, vb, kpb = kin
+
+        def q_block(carry, qin):
+            dkb, dvb = carry
+            qb, doutb, mb, lb, Db, qpb = qin
+            qb = _pin(qb, _q_block_spec(kvh))
+            doutb = _pin(doutb, _q_block_spec(kvh))
+            raw, s = _blk_logits(static, qb, kb, qpb, kpb, window)
+            p = jnp.exp(s - mb.transpose(0, 2, 3, 1)[..., None]) \
+                / lb.transpose(0, 2, 3, 1)[..., None]
+            doutg = doutb.transpose(0, 2, 3, 1, 4)
+            dvb = dvb + jnp.einsum("bgrqk,bgrqd->bkgd", p,
+                                   doutg.astype(p.dtype))
+            dp = jnp.einsum("bgrqd,bkgd->bgrqk", doutg.astype(vb.dtype), vb)
+            ds = p * (dp.astype(jnp.float32)
+                      - Db.transpose(0, 2, 3, 1)[..., None])
+            if cap:
+                ds = ds * (1.0 - jnp.tanh(raw / cap) ** 2)
+            ds = ds * scale
+            dq_blk = jnp.einsum("bgrqk,bkgd->bqgrd", ds.astype(kb.dtype), kb)
+            dkb = dkb + jnp.einsum("bgrqk,bqgrd->bkgd", ds.astype(qb.dtype), qb)
+            return (dkb, dvb), dq_blk.astype(jnp.float32)
+
+        z = jnp.zeros((b, bk, kvh, hd), jnp.float32)
+        (dkb, dvb), dq_blocks = jax.lax.scan(
+            q_block, (z, z), (qg, dg, mg, lg, Dg, qp))
+        return dq_acc + dq_blocks, (dkb, dvb)
+
+    dq_all, (dks, dvs) = jax.lax.scan(k_block2, dq0, (kg, vg, kp))
+    dq = jnp.moveaxis(dq_all, 0, 1).reshape(b, sq, kvh, rep, hd).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, sk, kvh, hd).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(b, sk, kvh, hd).astype(v.dtype)
+    return dq, dk, dv, None, None, None
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def _flash_attention(q, k, v, cfg: ArchConfig, q_pos, k_pos, window):
+    """Blocked online-softmax attention (flash-style) with a custom VJP that
+    recomputes logits tiles in the backward pass: O(S·blk) memory in both
+    directions instead of O(S²) saved residuals.  GQA without materializing
+    repeated KV: q grouped (b, sq, kv, rep, hd) vs k/v (b, sk, kv, hd).
+
+    On a TPU backend with a *static* window (uniform-pattern inference
+    forward), the fused Pallas kernel (`kernels.flash_attn`) takes over:
+    tiles never leave VMEM — the remedy for the memory term EXPERIMENTS.md
+    § Perf identifies.  The XLA path below remains the differentiable /
+    CPU / traced-window implementation; both are validated against the same
+    oracle."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    if jax.default_backend() == "tpu" and isinstance(window, int):
+        from ..kernels.flash_attn import flash_attention as _pallas_flash
+        out = _pallas_flash(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=cfg.causal,
+                            window=int(window),
+                            softcap_val=float(cfg.attn_softcap),
+                            interpret=False)
+        return out.transpose(0, 2, 1, 3).reshape(b, sq, h * hd)
+    static = (float(cfg.attn_softcap), bool(cfg.causal), 1.0 / (hd ** 0.5))
+    out = _flash_core(static, q.reshape(b, sq, kvh, rep, hd), k, v,
+                      q_pos, k_pos, window)
+    return out.reshape(b, sq, h * hd)
+
+
+def attention(p: Params, x: jax.Array, cfg: ArchConfig, *,
+              positions: jax.Array, window, kv_override=None,
+              cache: Optional[Tuple] = None, cross: bool = False):
+    """x: (B, S, d).  kv_override: (B, Skv, d) for cross-attention.
+    cache: (k, v, cur_len) for decode — k/v (B, Sc, kv, hd).
+    Returns (out, new_cache)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pfx = "c" if cross else ""
+    q = (x @ p[f"{pfx}wq"]).reshape(b, s, h, hd)
+    src = kv_override if kv_override is not None else x
+    k = (src @ p[f"{pfx}wk"]).reshape(b, src.shape[1], kv, hd)
+    v = (src @ p[f"{pfx}wv"]).reshape(b, src.shape[1], kv, hd)
+    if not cross:
+        q = rope(q, positions, cfg.rope_theta)
+        kpos = positions if cache is None else positions  # decode: pos of new tok
+        k = rope(k, kpos, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        ck, cv, cur = cache
+        sc = ck.shape[1]
+        # Ring-buffer write at cur % Sc.  Window caches are sized Sc ==
+        # window and wrap; full caches have Sc >= max len (mod is a no-op).
+        idx = cur % sc
+        if b == 1 and s == 1:
+            # B=1 long-context decode: the cache is sequence-sharded across
+            # the whole mesh.  A dynamic_update_slice at a traced index on a
+            # sharded dim makes GSPMD rematerialize the full cache (f32
+            # gathers, 43 GB/step at 500k) — a mask-select write is fully
+            # shardable elementwise instead (§Perf hillclimb #3).
+            sel = (jnp.arange(sc, dtype=jnp.int32) == idx)[None, :, None, None]
+            ck = jnp.where(sel, k.astype(ck.dtype), ck)
+            cv = jnp.where(sel, v.astype(cv.dtype), cv)
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, idx, 0, 0))
+        k, v = ck, cv
+        new_cache = (ck, cv, cur + s)
+        # Slot j holds the most recent token p ≤ cur with p ≡ j (mod Sc):
+        slot = jnp.arange(sc, dtype=jnp.int32)
+        kpos = cur - ((cur - slot) % sc)
+        bias = _mask_bias(positions, kpos, window, cfg.causal)
+        bias = jnp.where(kpos[None, :] >= 0, bias, -1e30)  # unwritten slots
+    else:
+        k_positions = (jnp.arange(src.shape[1], dtype=jnp.int32)
+                       if cross else positions)
+        if cross:
+            bias = jnp.zeros((s, src.shape[1]), jnp.float32)
+        else:
+            bias = _mask_bias(positions, k_positions, window, cfg.causal)
+    sk = k.shape[1]
+    if (cache is None and not cross and sk >= FLASH_MIN_SEQ
+            and s % min(FLASH_BLOCK_Q, s) == 0 and sk % min(FLASH_BLOCK_K, sk) == 0):
+        # Pin K/V to their inside-flash layout (kv heads over "model" when
+        # divisible, else fully gathered) BEFORE the q/k block scans — the
+        # partitioner otherwise re-gathers the sequence-sharded K/V on
+        # every (q-block × k-block) iteration (§Perf: yi-34b prefill was
+        # 1190 s collective-bound from exactly this).
+        U = P.UNCONSTRAINED
+        mesh = jax.sharding.get_abstract_mesh()
+        model_sz = (mesh.shape.get("model", 1)
+                    if mesh is not None and mesh.axis_names else 1)
+        kv_axis = "model" if (model_sz > 1 and kv % model_sz == 0) else None
+        k = _pin(k, P(U, None, kv_axis, U))
+        v = _pin(v, P(U, None, kv_axis, U))
+        out = _flash_attention(q, k, v, cfg, positions, k_positions, window)
+        return out @ p[f"{pfx}wo"], new_cache
+    # dense path (short sequences / decode / cross) — grouped GQA einsums
+    # (no materialized kv repeat)
+    rep = h // kv
+    qg = q.reshape(b, s, kv, rep, hd)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32)
+    if cache is not None and b == 1:
+        # B=1 long-context decode: keep the logits sequence-sharded like the
+        # cache so attention needs only tiny softmax/value psums instead of
+        # f32 all-gathers of the whole cache (§Perf hillclimb #3)
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and mesh.axis_names:
+            logits = _pin(logits, P(None, None, None, None,
+                                    tuple(mesh.axis_names)))
+    logits = logits / (hd ** 0.5)
+    logits = softcap(logits, cfg.attn_softcap)
+    logits = logits + bias[None, None, None, :, :]
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w, v).reshape(b, s, h * hd)
+    return out @ p[f"{pfx}wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(key, d: int, ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense(ks[0], (d, ff)),
+        "w_up": _dense(ks[1], (d, ff)),
+        "w_down": _dense(ks[2], (ff, d), scale_axis=0),
+    }
+
+
+def mlp_specs(fsdp_axis=None):
+    f = fsdp_axis
+    return {"w_gate": P(f, "model"), "w_up": P(f, "model"),
+            "w_down": P("model", f)}
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]

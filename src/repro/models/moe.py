@@ -1,0 +1,166 @@
+"""Mixture-of-Experts layer with ring-ticket dispatch.
+
+Token→expert routing is the paper's bounded-ring admission problem: each
+routed (token, choice) pair claims a slot in its expert's capacity-bounded
+buffer via ticket reservation; over-capacity pairs take the RETRY path
+(dropped, weight zeroed) exactly like a full bounded ring rejects enqueues.
+`repro.kernels.moe_route` is the Pallas aggregate-then-commit version of the
+same semantics; inside the model graph we use the einsum formulation so XLA
+can shard it (experts over "model" = EP), asserting equality in tests.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .layers import _dense
+
+Params = Dict[str, jax.Array]
+
+
+def _shard_expert_buffers(buf: jax.Array, n_experts: int) -> jax.Array:
+    """Pin (g, E, C, d) expert buffers to the mesh: groups over the DP axes,
+    experts over "model" when divisible (classic EP) else the capacity dim.
+    Without this an indivisible expert count (granite's 40 on a 16-way
+    axis) replicates the whole expert GEMM on every chip."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in (mesh.axis_names or ()):
+        return buf
+    model = mesh.shape["model"]
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    gspec = dp if buf.shape[0] > 1 else None
+    if model <= 1:
+        return jax.lax.with_sharding_constraint(buf, P(gspec, None, None, None))
+    if n_experts % model == 0:
+        return jax.lax.with_sharding_constraint(buf, P(gspec, "model", None, None))
+    if buf.shape[2] % model == 0:
+        return jax.lax.with_sharding_constraint(buf, P(gspec, None, "model", None))
+    return buf
+
+
+def moe_params(key, cfg: ArchConfig) -> Params:
+    d, fe, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense(ks[0], (d, e), dtype=jnp.float32),
+        "e_gate": _dense(ks[1], (e, d, fe)),
+        "e_up": _dense(ks[2], (e, d, fe)),
+        "e_down": _dense(ks[3], (e, fe, d)),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * fe
+        kss = jax.random.split(ks[4], 3)
+        p["s_gate"] = _dense(kss[0], (d, fs))
+        p["s_up"] = _dense(kss[1], (d, fs))
+        p["s_down"] = _dense(kss[2], (fs, d))
+    return p
+
+
+def moe_specs(cfg: ArchConfig, fsdp_axis=None):
+    f = fsdp_axis
+    sp = {
+        "router": P(None, None),
+        "e_gate": P("model", f, None),   # EP: experts sharded over "model"
+        "e_up": P("model", f, None),
+        "e_down": P("model", f, None),
+    }
+    if cfg.n_shared_experts:
+        sp["s_gate"] = P(f, "model")
+        sp["s_up"] = P(f, "model")
+        sp["s_down"] = P("model", f)
+    return sp
+
+
+def _dp_groups(t: int) -> int:
+    """Dispatch group count = the mesh's data-parallel degree (1 off-mesh).
+    Group-local dispatch is what EP systems actually do: each DP shard
+    ranks and capacity-bounds its own tokens, so the ticket cumsum and the
+    (E, C, d) buffers are batch-parallel instead of a global prefix that
+    forces every chip through the full global capacity (§Perf hillclimb #1:
+    granite's expert GEMMs were 40×262k×d on *every* chip)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return 1
+    g = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            g *= mesh.shape[a]
+    # grouping only pays when each group still has a meaningful token count
+    # (decode batches are small: capacity padding would dominate)
+    return g if g > 1 and t % g == 0 and t // g >= 256 else 1
+
+
+def moe_forward(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x: (B, S, d) → (B, S, d).  Top-k dispatch with group-local per-expert
+    capacity C = ceil(T_local·k/E · capacity_factor); over-capacity pairs in
+    each group are dropped (the bounded ring's RETRY path, applied at the
+    same scope a per-chip expert ring would be)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+    gates = (xt.astype(jnp.float32) @ p["router"])           # (T, E)
+    top_g, top_e = jax.lax.top_k(gates, k)                   # (T, k)
+    probs = jax.nn.softmax(top_g, axis=-1)                   # (T, k)
+
+    g = _dp_groups(t)
+    tl = t // g                                               # tokens per group
+    capacity = int((tl * k) / e * cfg.capacity_factor) + 1
+    capacity = -(-capacity // 32) * 32                        # shardable C
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32)        # (T, k, E)
+    grouped = onehot.reshape(g, tl * k, e)
+    # ring-ticket reservation per expert, group-local (batch-parallel):
+    ranks = jnp.cumsum(grouped, axis=1) - grouped             # (g, tl·k, E)
+    slot = jnp.sum(ranks * grouped, axis=-1).reshape(t, k)    # (T, k)
+    keep = slot < capacity                                    # RETRY path: drop
+    combine = jnp.where(keep, probs, 0.0)                     # (T, k)
+
+    # Scatter-based dispatch into (g, E, C, d) expert buffers — O(T·k·d).
+    # The scatter/gather are vmapped over the group dim so the partitioner
+    # can keep them (and the buffers) sharded over the DP axes instead of
+    # materializing replicated global-capacity copies.
+    e_g = top_e.reshape(g, tl * k)
+    s_g = jnp.where(keep, slot, capacity).reshape(g, tl * k)  # C = drop bin
+    src_g = jnp.repeat(xt, k, axis=0).reshape(g, tl * k, d).astype(x.dtype)
+
+    def disp(e_i, s_i, src_i):
+        buf = jnp.zeros((e, capacity + 1, d), x.dtype)
+        return buf.at[e_i, s_i].add(src_i)[:, :capacity]
+
+    xin = jax.vmap(disp)(e_g, s_g, src_g)                     # (g, E, C, d)
+    xin = _shard_expert_buffers(xin, e)
+    hg = _shard_expert_buffers(
+        jnp.einsum("gecd,edf->gecf", xin, p["e_gate"]), e)
+    hu = _shard_expert_buffers(
+        jnp.einsum("gecd,edf->gecf", xin, p["e_up"]), e)
+    hout = jnp.einsum("gecf,efd->gecd", jax.nn.silu(hg) * hu, p["e_down"])
+    # For the combine gather, reshard hout from capacity-sharded to
+    # d-sharded: the gather output then stays "model"-sharded on d instead
+    # of needing a full-width partial-sum all-reduce (76% of this cell's
+    # collective volume before this change).
+    mesh = jax.sharding.get_abstract_mesh()
+    if (mesh is not None and "model" in (mesh.axis_names or ())
+            and d % mesh.shape["model"] == 0):
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        gspec = dp if g > 1 else None
+        hout = jax.lax.with_sharding_constraint(
+            hout, P(gspec, None, None, "model"))
+    else:
+        hout = _shard_expert_buffers(hout, e)
+
+    def undisp(h_i, e_i, s_i):
+        return h_i[e_i, jnp.minimum(s_i, capacity - 1)]
+
+    gathered = jax.vmap(undisp)(hout, e_g, s_g).reshape(t * k, d)
+    gathered = gathered * keep.reshape(t * k, 1).astype(x.dtype)
+    yt = jnp.sum(gathered.reshape(t, k, d)
+                 * combine[..., None].astype(x.dtype), axis=1)  # (T, d)
+
+    if cfg.n_shared_experts:
+        yt = yt + (jax.nn.silu(xt @ p["s_gate"]) * (xt @ p["s_up"])) @ p["s_down"]
+    return yt.reshape(b, s, d)

@@ -1,0 +1,188 @@
+"""Mamba2 — SSD (state-space duality) layer, chunked matmul form.
+
+The SSD algorithm splits the sequence into chunks: within a chunk the
+recurrence is computed in its quadratic "attention-like" matmul form (MXU
+friendly), and chunk boundary states are propagated with a short scan —
+O(S·state) work with matmul arithmetic intensity, which is the TPU-native
+reading of the paper's duality.
+
+Decode keeps O(1) state per layer: (conv_state (B, d_conv-1, d_conv_in),
+ssm_state (B, nh, hd, state)).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .layers import _dense, _pin, rms_norm
+
+CHUNK = 256
+
+U = P.UNCONSTRAINED
+
+
+def _ssd_axis(nh: int, ck: int):
+    """Shard axis for the per-chunk SSD tensors: prefer the head dim (zamba:
+    112 % 16 == 0), else the intra-chunk time dim (mamba2: nh=24 does not
+    divide) — without a pin the (b, ck, ck, nh) decay/gate chain is fully
+    replicated per device (§Perf: 6% of zamba-train bytes per tensor)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    model = (mesh.shape.get("model", 1)
+             if mesh is not None and mesh.axis_names else 1)
+    if model <= 1:
+        return None
+    if nh % model == 0:
+        return "head"
+    if ck % model == 0:
+        return "time"
+    return None
+
+
+def ssm_params(key, cfg: ArchConfig) -> Dict:
+    d, di, st, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    conv_in = di + 2 * st  # x, B, C share the conv (n_groups = 1)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _dense(ks[0], (d, 2 * di + 2 * st + nh)),
+        "conv_w": _dense(ks[1], (cfg.ssm_conv, conv_in)),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "ssm_norm": jnp.zeros((di,), jnp.bfloat16),
+        "out_proj": _dense(ks[2], (di, d)),
+    }
+
+
+def ssm_specs(cfg: ArchConfig, fsdp_axis=None):
+    f = fsdp_axis
+    return {
+        "in_proj": P(f, "model"),
+        "conv_w": P(None, "model"),
+        "A_log": P(None), "D": P(None), "dt_bias": P(None),
+        "ssm_norm": P("model"),
+        "out_proj": P("model", f),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * st]
+    dt = zxbcdt[..., di + di + 2 * st:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv.  xbc (B, S, C), w (K, C).
+    Returns (out, new_state (B, K-1, C))."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, init_state):
+    """Chunked SSD.  x (b, s, nh, hd); dt (b, s, nh); A (nh,);
+    B, C (b, s, st); init_state (b, nh, hd, st).
+    Returns (y (b, s, nh, hd), final_state).
+
+    One lax.scan over chunks: the intra-chunk quadratic (matmul) form uses
+    O(b·ck²·nh) transient memory for a single chunk only, and the
+    inter-chunk state recurrence rides the same scan carry."""
+    b, s, nh, hd = x.shape
+    st = B.shape[-1]
+    ck = min(CHUNK, s)
+    nc = s // ck
+    negA = -jnp.exp(A)                                       # (nh,) < 0
+    xc = jnp.moveaxis(x.reshape(b, nc, ck, nh, hd), 1, 0)    # (nc,b,ck,nh,hd)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, ck, nh), 1, 0)
+    Bc = jnp.moveaxis(B.reshape(b, nc, ck, st), 1, 0)
+    Cc = jnp.moveaxis(C.reshape(b, nc, ck, st), 1, 0)
+    mask = jnp.tril(jnp.ones((ck, ck), bool))
+
+    ssd_ax = _ssd_axis(nh, ck)
+
+    def chunk_body(h, inp):
+        xk, dk, Bk, Ck = inp              # (b,ck,nh,hd) (b,ck,nh) (b,ck,st) ×2
+        if ssd_ax == "head":
+            xk = _pin(xk, P(U, None, "model", U))
+            dk = _pin(dk, P(U, None, "model"))
+        dA = dk * negA[None, None, :]                        # (b,ck,nh) ≤ 0
+        seg = jnp.cumsum(dA, axis=1)                         # (b,ck,nh)
+        # intra-chunk:  y[t] = Σ_{u≤t} C_t·B_u exp(seg_t-seg_u) dt_u x_u
+        gate = seg[:, :, None, :] - seg[:, None, :, :]       # (b,t,u,nh)
+        gate = jnp.where(mask[None, :, :, None], gate, -jnp.inf)
+        if ssd_ax == "head":
+            gate = _pin(gate, P(U, None, None, "model"))
+        elif ssd_ax == "time":
+            gate = _pin(gate, P(U, "model", None, None))
+        cb = jnp.einsum("bts,bus->btu", Ck, Bk)              # (b,t,u)
+        w = cb[..., None] * jnp.exp(gate)                    # (b,t,u,nh)
+        y_intra = jnp.einsum("btuh,buh,buhd->bthd",
+                             w.astype(xk.dtype), dk.astype(xk.dtype), xk)
+        # inter-chunk:  y[t] += exp(seg_t) · C_t · h_in
+        y_inter = jnp.einsum("bts,bhds,bth->bthd",
+                             Ck.astype(jnp.float32), h,
+                             jnp.exp(seg).astype(jnp.float32)).astype(xk.dtype)
+        # state update: h' = exp(seg_last)·h + Σ_u exp(seg_last-seg_u) dt_u B_u x_u
+        decay_last = jnp.exp(seg[:, -1:, :] - seg)           # (b,ck,nh)
+        contrib = jnp.einsum("buh,buh,buhd,bus->bhds",
+                             decay_last.astype(jnp.float32),
+                             dk.astype(jnp.float32),
+                             xk.astype(jnp.float32),
+                             Bk.astype(jnp.float32))
+        h = h * jnp.exp(jnp.sum(dA, axis=1))[:, :, None, None] + contrib
+        return h, y_intra + y_inter
+
+    h_final, ys = jax.lax.scan(chunk_body, init_state.astype(jnp.float32),
+                               (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, hd)
+    return y, h_final
+
+
+def ssm_forward(p: Dict, x: jax.Array, cfg: ArchConfig, *,
+                state: Optional[Tuple] = None):
+    """x (B, S, d).  state = (conv_state, ssm_state) for decode.
+    Returns (out (B, S, d), new_state)."""
+    b, s, d = x.shape
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    conv_state = state[0] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state)
+    xs = xbc[..., :di].reshape(b, s, nh, hd)
+    B = xbc[..., di:di + st]
+    C = xbc[..., di + st:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])      # (b, s, nh)
+    init = (state[1] if state is not None
+            else jnp.zeros((b, nh, hd, st), jnp.float32))
+    if s == 1:
+        # decode: single recurrence step
+        dA = jnp.exp(dt[:, 0, :] * (-jnp.exp(p["A_log"]))[None, :])  # (b,nh)
+        h = init * dA[:, :, None, None] + jnp.einsum(
+            "bh,bhd,bs->bhds", dt[:, 0].astype(jnp.float32),
+            xs[:, 0].astype(jnp.float32), B[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bs,bhds->bhd", C[:, 0].astype(jnp.float32),
+                       h).astype(x.dtype).reshape(b, 1, nh, hd)
+        final = h
+    else:
+        y, final = ssd_chunked(xs, dt, p["A_log"], B, C, init)
+    y = y + xs * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"])
+    out = y @ p["out_proj"]
+    new_state = (new_conv, final)
+    return out, new_state

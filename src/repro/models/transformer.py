@@ -1,0 +1,402 @@
+"""The LM: one functional transformer covering the whole assigned pool.
+
+Families: dense (GQA / SWA / alternating local-global / soft-capping), MoE
+(fine-grained + shared experts), SSM (Mamba2 SSD), hybrid (Mamba2 + shared
+attention block), VLM (periodic cross-attention, stubbed patch frontend),
+audio encoder (stubbed frame frontend).
+
+Execution paths:
+
+* ``forward`` / ``loss_fn`` — training & encoder inference: **one flat
+  lax.scan over layers** with per-layer scanned flag arrays (window /
+  is_cross / use_shared), keeping the HLO a single layer body regardless of
+  depth — critical for the 80-compile dry-run matrix on one CPU core.
+* ``prefill`` — scan that additionally emits per-layer KV (uniform cache).
+* ``decode_step`` — python-unrolled layers with per-layer ring caches sized
+  to each layer's attention window (local layers keep O(window) KV at 500k
+  context; SSM layers keep O(1) state) — the sub-quadratic decode paths of
+  DESIGN.md § 5.
+
+Params are dicts; ``param_specs`` mirrors the tree with PartitionSpec
+(TP over "model", optional FSDP over "data", replicated across "pod").
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .layers import (attention, attn_params, attn_specs, mlp, mlp_params,
+                     mlp_specs, rms_norm, softcap, _dense)
+from .moe import moe_forward, moe_params, moe_specs
+from .ssm import ssm_forward, ssm_params, ssm_specs
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _layer_params(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Params = {"ln1": jnp.zeros((d,), jnp.bfloat16)}
+    if cfg.family in ("ssm", "hybrid"):
+        p.update(ssm_params(ks[0], cfg))
+        return p
+    p.update(attn_params(ks[0], cfg))
+    p["ln2"] = jnp.zeros((d,), jnp.bfloat16)
+    if cfg.family == "moe":
+        p.update(moe_params(ks[1], cfg))
+    else:
+        p.update(mlp_params(ks[1], d, cfg.d_ff))
+    if cfg.family == "vlm":
+        p.update(attn_params(ks[2], cfg, cross=True))
+        p["cln"] = jnp.zeros((d,), jnp.bfloat16)
+    return p
+
+
+def _layer_specs(cfg: ArchConfig, f) -> Params:
+    sp: Params = {"ln1": P(None)}
+    if cfg.family in ("ssm", "hybrid"):
+        sp.update(ssm_specs(cfg, f))
+        return sp
+    sp.update(attn_specs(cfg))
+    sp["ln2"] = P(None)
+    if cfg.family == "moe":
+        sp.update(moe_specs(cfg, f))
+    else:
+        sp.update(mlp_specs(f))
+    if cfg.family == "vlm":
+        sp.update(attn_specs(cfg, cross=True, fsdp_axis=f))
+        sp["cln"] = P(None)
+    # FSDP-shard the attention/mlp matrices' non-model axis
+    if f is not None:
+        for k in ("wq", "wk", "wv", "cwq", "cwk", "cwv", "w_gate", "w_up"):
+            if k in sp:
+                sp[k] = P(f, "model")
+        for k in ("wo", "cwo", "w_down"):
+            if k in sp:
+                sp[k] = P("model", f)
+    return sp
+
+
+def _shared_block_params(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    p = {"ln1": jnp.zeros((d,), jnp.bfloat16),
+         "ln2": jnp.zeros((d,), jnp.bfloat16)}
+    p.update(attn_params(ks[0], cfg))
+    p.update(mlp_params(ks[1], d, cfg.d_ff))
+    return p
+
+
+def init_params(cfg: ArchConfig, key=None) -> Params:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    layers = [_layer_params(ks[i], cfg) for i in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    params: Params = {
+        "embed": _dense(ks[-1], (cfg.vocab, cfg.d_model)),
+        "lm_head": _dense(ks[-2], (cfg.d_model, cfg.vocab)),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.bfloat16),
+        "layers": stacked,
+    }
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        params["shared_attn"] = _shared_block_params(ks[-3], cfg)
+    return params
+
+
+def param_specs(cfg: ArchConfig, *, fsdp: Optional[bool] = None) -> Params:
+    f = "data" if (cfg.fsdp if fsdp is None else fsdp) else None
+    lsp = _layer_specs(cfg, f)
+    specs: Params = {
+        "embed": P("model", f),        # vocab-parallel embedding
+        "lm_head": P(f, "model"),
+        "final_norm": P(None),
+        "layers": jax.tree.map(lambda s: P(None, *s), lsp,
+                               is_leaf=lambda s: isinstance(s, P)),
+    }
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        ssp = {"ln1": P(None), "ln2": P(None)}
+        ssp.update(attn_specs(cfg, fsdp_axis=f))
+        ssp.update(mlp_specs(f))
+        specs["shared_attn"] = ssp
+    return specs
+
+
+def layer_flags(cfg: ArchConfig) -> Dict[str, jax.Array]:
+    """Per-layer scanned flag arrays (static content, dynamic inside scan)."""
+    L = cfg.n_layers
+    window = jnp.array([cfg.window_for_layer(i) for i in range(L)], jnp.int32)
+    is_cross = jnp.array(
+        [1 if (cfg.cross_attn_every and (i + 1) % cfg.cross_attn_every == 0)
+         else 0 for i in range(L)], jnp.int32)
+    use_shared = jnp.array(
+        [1 if (cfg.shared_attn_every and (i + 1) % cfg.shared_attn_every == 0)
+         else 0 for i in range(L)], jnp.int32)
+    return {"window": window, "is_cross": is_cross, "use_shared": use_shared}
+
+
+# ---------------------------------------------------------------------------
+# flat-scan forward (train / encode)
+# ---------------------------------------------------------------------------
+
+
+def _dense_layer(p, x, cfg, positions, window, is_cross, img):
+    if cfg.family == "vlm":
+        def self_branch(args):
+            p_, h_ = args
+            out, _ = attention(p_, rms_norm(h_, p_["ln1"]), cfg,
+                               positions=positions, window=window)
+            return out
+
+        def cross_branch(args):
+            p_, h_ = args
+            out, _ = attention(p_, rms_norm(h_, p_["cln"]), cfg,
+                               positions=positions, window=window,
+                               kv_override=img, cross=True)
+            return out
+
+        a = jax.lax.cond(is_cross > 0, cross_branch, self_branch, (p, x))
+    else:
+        a, _ = attention(p, rms_norm(x, p["ln1"]), cfg,
+                         positions=positions, window=window)
+    h = x + a
+    inner = rms_norm(h, p["ln2"])
+    if cfg.family == "moe":
+        return h + moe_forward(p, inner, cfg)
+    return h + mlp(p, inner)
+
+
+def _ssm_layer(p, x, cfg, shared, positions, use_shared):
+    out, _ = ssm_forward(p, rms_norm(x, p["ln1"]), cfg)
+    h = x + out
+    if cfg.family == "hybrid" and shared is not None:
+        def with_attn(h_):
+            a, _ = attention(shared, rms_norm(h_, shared["ln1"]), cfg,
+                             positions=positions, window=0)
+            g = h_ + a
+            return g + mlp(shared, rms_norm(g, shared["ln2"]))
+
+        h = jax.lax.cond(use_shared > 0, with_attn, lambda h_: h_, h)
+    return h
+
+
+def _seq_shard(x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Megatron sequence parallelism: between layers the residual stream is
+    sharded over "model" along the sequence axis (batch stays on the DP
+    axes — leaving it unconstrained lets GSPMD un-shard the batch at the
+    vocabulary projection, which costs ~15 GiB/device at yi-34b scale), so
+    the per-layer saved activations of the remat'd scan shrink by the TP
+    degree.  GSPMD derives the all-gather/reduce-scatter pairs around
+    attention/MLP automatically.  Only applied when the dry-run sets
+    cfg.seq_parallel (mesh context present; seq divisible)."""
+    if not cfg.seq_parallel or x.ndim != 3:
+        return x
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in (mesh.axis_names or ()):
+        return x
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return jax.lax.with_sharding_constraint(x, P(dp, "model", None))
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
+            img: Optional[jax.Array] = None,
+            frames: Optional[jax.Array] = None) -> jax.Array:
+    """tokens (B, S) int32 — or, for the audio frontend, ``frames``
+    (B, S, d) pre-embedded.  Returns logits (B, S, V)."""
+    if cfg.audio_frontend:
+        x = frames.astype(jnp.bfloat16)
+        b, s, _ = x.shape
+    else:
+        x = params["embed"][tokens] * jnp.sqrt(float(cfg.d_model)).astype(jnp.bfloat16)
+        b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    flags = layer_flags(cfg)
+    shared = params.get("shared_attn")
+    x = _seq_shard(x, cfg)
+
+    def body(h, xs):
+        lp, fl = xs
+        if cfg.family in ("ssm", "hybrid"):
+            h = _ssm_layer(lp, h, cfg, shared, positions, fl["use_shared"])
+        else:
+            h = _dense_layer(lp, h, cfg, positions, fl["window"],
+                             fl["is_cross"], img)
+        return _seq_shard(h, cfg), None
+
+    layer_fn = body
+    if cfg.remat:
+        # full remat: only the layer-boundary residual stream is saved —
+        # the minimum for a scanned stack; everything else is recomputed.
+        layer_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(layer_fn, x, (params["layers"], flags))
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    logits = _seq_shard(logits, cfg)
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array],
+            cfg: ArchConfig) -> jax.Array:
+    logits = forward(params, batch.get("tokens"), cfg,
+                     img=batch.get("img"), frames=batch.get("frames"))
+    logits = _seq_shard(logits, cfg)
+    labels = batch["labels"]
+    # cross-entropy without a full log_softmax materialization:
+    # nll = logsumexp(logits) - logits[label]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    mask = (labels >= 0).astype(jnp.float32)
+    mask = _seq_shard(mask[..., None], cfg)[..., 0] if cfg.seq_parallel else mask
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# prefill (emit uniform KV caches) and decode (per-layer ring caches)
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
+            img: Optional[jax.Array] = None,
+            frames: Optional[jax.Array] = None):
+    """Forward over the prompt, returning (last-token logits, cache).
+    Attention layers emit (K, V) stacked (L, B, S, kv, hd); SSM layers emit
+    their final states."""
+    if cfg.audio_frontend:
+        x = frames.astype(jnp.bfloat16)
+        b, s, _ = x.shape
+    else:
+        x = params["embed"][tokens] * jnp.sqrt(float(cfg.d_model)).astype(jnp.bfloat16)
+        b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    flags = layer_flags(cfg)
+    shared = params.get("shared_attn")
+    from .layers import rope  # local import to avoid cycle noise
+
+    def body(h, xs):
+        lp, fl = xs
+        if cfg.family in ("ssm", "hybrid"):
+            inner = rms_norm(h, lp["ln1"])
+            out, st = ssm_forward(lp, inner, cfg)
+            h = h + out
+            aux = {"ssm": st[1], "conv": st[0]}
+            if cfg.family == "hybrid" and shared is not None:
+                def with_attn(h_):
+                    a, _ = attention(shared, rms_norm(h_, shared["ln1"]), cfg,
+                                     positions=positions, window=0)
+                    g = h_ + a
+                    return g + mlp(shared, rms_norm(g, shared["ln2"]))
+                h = jax.lax.cond(fl["use_shared"] > 0, with_attn,
+                                 lambda h_: h_, h)
+                # shared-attn KV recomputed at decode prefill boundary; emit
+                # the block input so decode can rebuild (uniform aux shape)
+            return h, aux
+        # attention families: emit roped K / V
+        inner = rms_norm(h, lp["ln1"])
+        kv = cfg.n_kv_heads
+        k = (inner @ lp["wk"]).reshape(b, s, kv, cfg.hd)
+        v = (inner @ lp["wv"]).reshape(b, s, kv, cfg.hd)
+        k = rope(k, positions, cfg.rope_theta)
+        h = _dense_layer(lp, h, cfg, positions, fl["window"],
+                         fl["is_cross"], img)
+        return h, {"k": k, "v": v}
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], flags))
+    x = rms_norm(x[:, -1:, :], params["final_norm"])
+    logits = softcap((x @ params["lm_head"]).astype(jnp.float32),
+                     cfg.final_softcap)
+    return logits, caches
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16) -> List:
+    """Per-layer ring caches: local layers O(window), global layers O(S),
+    SSM layers O(1) state; the hybrid's shared block caches O(S) per
+    invocation."""
+    cache: List = []
+    for i in range(cfg.n_layers):
+        if cfg.family in ("ssm", "hybrid"):
+            entry = {
+                "conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                                   cfg.d_inner + 2 * cfg.ssm_state), dtype),
+                "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                                  cfg.ssm_state), jnp.float32),
+            }
+            if (cfg.family == "hybrid" and cfg.shared_attn_every
+                    and (i + 1) % cfg.shared_attn_every == 0):
+                entry["k"] = jnp.zeros((batch, max_seq, cfg.n_kv_heads,
+                                        cfg.hd), dtype)
+                entry["v"] = jnp.zeros((batch, max_seq, cfg.n_kv_heads,
+                                        cfg.hd), dtype)
+            cache.append(entry)
+        else:
+            w = cfg.window_for_layer(i)
+            sc = min(w, max_seq) if w else max_seq
+            cache.append({
+                "k": jnp.zeros((batch, sc, cfg.n_kv_heads, cfg.hd), dtype),
+                "v": jnp.zeros((batch, sc, cfg.n_kv_heads, cfg.hd), dtype),
+            })
+    return cache
+
+
+def decode_step(params: Params, cache: List, token: jax.Array,
+                cur: jax.Array, cfg: ArchConfig, *,
+                img: Optional[jax.Array] = None):
+    """One decode step.  token (B, 1) int32; cur () int32 current length.
+    Returns (logits (B, 1, V), new_cache)."""
+    x = params["embed"][token] * jnp.sqrt(float(cfg.d_model)).astype(jnp.bfloat16)
+    positions = cur[None].astype(jnp.int32)
+    is_cross = [bool(cfg.cross_attn_every and (i + 1) % cfg.cross_attn_every == 0)
+                for i in range(cfg.n_layers)]  # static (unrolled decode)
+    shared = params.get("shared_attn")
+    new_cache: List = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        c = cache[i]
+        if cfg.family in ("ssm", "hybrid"):
+            inner = rms_norm(x, lp["ln1"])
+            out, st = ssm_forward(lp, inner, cfg, state=(c["conv"], c["ssm"]))
+            x = x + out
+            nc = {"conv": st[0], "ssm": st[1]}
+            if "k" in c:  # hybrid shared-attn invocation
+                a, kvc = attention(shared, rms_norm(x, shared["ln1"]), cfg,
+                                   positions=positions, window=0,
+                                   cache=(c["k"], c["v"], cur))
+                g = x + a
+                x = g + mlp(shared, rms_norm(g, shared["ln2"]))
+                nc["k"], nc["v"] = kvc[0], kvc[1]
+            new_cache.append(nc)
+            continue
+        w = int(cfg.window_for_layer(i))
+        if cfg.family == "vlm" and is_cross[i]:
+            a, _ = attention(lp, rms_norm(x, lp["cln"]), cfg,
+                             positions=positions, window=w,
+                             kv_override=img, cross=True)
+            x = x + a
+            new_cache.append(c)
+        else:
+            a, kvc = attention(lp, rms_norm(x, lp["ln1"]), cfg,
+                               positions=positions, window=w,
+                               cache=(c["k"], c["v"], cur))
+            x = x + a
+            new_cache.append({"k": kvc[0], "v": kvc[1]})
+        inner = rms_norm(x, lp["ln2"])
+        if cfg.family == "moe":
+            x = x + moe_forward(lp, inner, cfg)
+        else:
+            x = x + mlp(lp, inner)
+    x = rms_norm(x, params["final_norm"])
+    logits = softcap((x @ params["lm_head"]).astype(jnp.float32),
+                     cfg.final_softcap)
+    return logits, new_cache

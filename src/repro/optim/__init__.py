@@ -1,0 +1,6 @@
+"""Optimizer substrate: AdamW (mixed precision, ZeRO-sharded via param
+specs), schedules, and gradient compression (distributed/compression)."""
+from . import adamw
+from .adamw import AdamWConfig, OptState, cast_params, global_norm
+
+__all__ = ["adamw", "AdamWConfig", "OptState", "cast_params", "global_norm"]

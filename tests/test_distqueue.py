@@ -1,0 +1,93 @@
+"""Distributed mesh-level queue: exactly-once + FIFO under shard_map.
+
+The 8-device run needs XLA_FLAGS set before jax initializes, so it executes
+in a subprocess (the main test process must keep 1 device for the other
+tests)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.distqueue import (dist_dequeue_round, dist_enqueue_round,
+                                  dist_queue_init)
+
+
+def test_single_device_semantics():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    state = dist_queue_init(16)
+
+    def inner(state, values, emask, want):
+        state, granted = dist_enqueue_round(state, values, emask, "data")
+        state, vals, ok = dist_dequeue_round(state, want, "data")
+        return state, granted, vals, ok
+
+    f = jax.jit(shard_map(inner, mesh=mesh,
+                          in_specs=(P(), P("data"), P("data"), P("data")),
+                          out_specs=(P(), P("data"), P("data"), P("data")),
+                          check_rep=False))
+    vals = jnp.asarray([5, 6, 7, 8], jnp.int32)
+    ones = jnp.ones(4, jnp.int32)
+    state, granted, dv, ok = f(state, vals, ones, ones)
+    assert bool(granted.all())
+    np.testing.assert_array_equal(np.asarray(dv), np.asarray(vals))  # FIFO
+    assert bool(ok.all())
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, {src!r})
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from repro.core.distqueue import (dist_queue_init, dist_enqueue_round,
+                                      dist_dequeue_round)
+
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    B = 4
+
+    def inner(state, values, emask, want):
+        state, granted = dist_enqueue_round(state, values, emask, "data")
+        state, vals, ok = dist_dequeue_round(state, want, "data")
+        return state, granted, vals, ok
+
+    f = jax.jit(shard_map(inner, mesh=mesh,
+                          in_specs=(P(), P("data"), P("data"), P("data")),
+                          out_specs=(P(), P("data"), P("data"), P("data")),
+                          check_rep=False))
+    state = dist_queue_init(64)
+    rng = np.random.default_rng(0)
+    sent, got = [], []
+    for rnd in range(6):
+        vals = jnp.asarray(rng.integers(1, 1000, (8 * B,)), jnp.int32) + rnd * 10000
+        em = jnp.asarray(rng.random(8 * B) < 0.7, jnp.int32)
+        wm = jnp.asarray(rng.random(8 * B) < 0.7, jnp.int32)
+        state, granted, dv, ok = f(state, vals, em, wm)
+        sent += [int(v) for v, g in zip(vals, granted) if g]
+        got += [int(v) for v, o in zip(dv, ok) if o]
+    for _ in range(6):
+        state, granted, dv, ok = f(state, jnp.zeros(8 * B, jnp.int32),
+                                   jnp.zeros(8 * B, jnp.int32),
+                                   jnp.ones(8 * B, jnp.int32))
+        got += [int(v) for v, o in zip(dv, ok) if o]
+    assert got == sent, f"FIFO/exactly-once violated: {{len(sent)}} vs {{len(got)}}"
+    print("OK", len(sent))
+""")
+
+
+def test_eight_device_fifo_exactly_once():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = _SUBPROC.format(src=os.path.abspath(src))
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout

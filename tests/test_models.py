@@ -1,0 +1,172 @@
+"""Model-zoo smoke + consistency tests on the reduced configs: every
+assigned architecture instantiates, runs a train step (finite loss) and a
+decode step; flash attention matches dense; chunked SSD matches the naive
+recurrence; prefill+decode agrees with teacher-forced forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import (decode_step, forward, init_decode_cache,
+                          init_params, loss_fn)
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {}
+    if cfg.audio_frontend:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, s, cfg.d_model)), jnp.bfloat16)
+        batch["tokens"] = None
+    else:
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                                      jnp.int32)
+    if cfg.family == "vlm":
+        batch["img"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_image_tokens, cfg.d_model)),
+            jnp.bfloat16)
+    batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    return batch
+
+
+def test_all_archs_listed():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_loss_and_grad(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss not finite"
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: degenerate grads"
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(a).causal])
+def test_decode_matches_forward(arch):
+    """Greedy decode logits must match teacher-forced forward logits.
+    MoE capacity is made effectively unbounded: token dropping legitimately
+    differs between an 8-token forward and 1-token decode steps."""
+    import dataclasses
+    cfg = get_config(arch).reduced()
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=100.0)
+    params = init_params(cfg)
+    b, s = 1, 8
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    img = None
+    if cfg.family == "vlm":
+        img = jnp.asarray(rng.standard_normal((b, cfg.n_image_tokens,
+                                               cfg.d_model)), jnp.bfloat16)
+    full = forward(params, toks, cfg, img=img)              # (b, s, V)
+    cache = init_decode_cache(cfg, b, 32)
+    outs = []
+    for t in range(s):
+        lg, cache = decode_step(params, cache, toks[:, t:t + 1],
+                                jnp.int32(t), cfg, img=img)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    if cfg.family == "moe":
+        # a near-tie router choice may flip under bf16 accumulation-order
+        # differences (discontinuous routing): a flipped position diverges
+        # wholesale.  Require ≥70% of positions fully close and that the
+        # mean deviation stays small.
+        close = np.isclose(np.asarray(dec), np.asarray(full),
+                           rtol=0.15, atol=0.15)
+        pos_close = close.all(axis=-1).mean()
+        mean_dev = np.abs(np.asarray(dec) - np.asarray(full)).mean()
+        assert pos_close >= 0.7 and mean_dev < 0.2, (pos_close, mean_dev)
+    else:
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                                   rtol=0.15, atol=0.15)
+
+
+def test_flash_matches_dense():
+    import repro.models.layers as LY
+    from repro.models.layers import attention
+    cfg = get_config("gemma2-27b").reduced()   # softcap + window exercised
+    params = init_params(cfg)
+    lp = jax.tree.map(lambda a: a[0], params["layers"])
+    x = (0.2 * jax.random.normal(jax.random.PRNGKey(0),
+                                 (2, 2048, cfg.d_model))).astype(jnp.bfloat16)
+    pos = jnp.arange(2048, dtype=jnp.int32)
+
+    def f(x_, w):
+        out, _ = attention(lp, x_, cfg, positions=pos, window=w)
+        return jnp.sum(out.astype(jnp.float32) ** 2)
+
+    for w in (0, 16):
+        vf, gf = jax.value_and_grad(f)(x, w)
+        orig, LY.FLASH_MIN_SEQ = LY.FLASH_MIN_SEQ, 10 ** 9
+        vd, gd = jax.value_and_grad(f)(x, w)
+        LY.FLASH_MIN_SEQ = orig
+        assert abs(float(vf) - float(vd)) / abs(float(vd)) < 1e-2
+        err = float(jnp.max(jnp.abs(gf.astype(jnp.float32)
+                                    - gd.astype(jnp.float32))))
+        mag = float(jnp.max(jnp.abs(gd.astype(jnp.float32)))) + 1e-9
+        assert err / mag < 0.05, f"window={w}: grad mismatch {err} vs {mag}"
+
+
+def test_ssd_matches_naive_recurrence():
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.default_rng(0)
+    b, s, nh, hd, st = 2, 512, 3, 8, 16
+    x = jnp.asarray(rng.normal(size=(b, s, nh, hd)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, s, nh)) * 0.5, jnp.float32)
+    A = jnp.asarray(rng.random(nh) * 0.5, jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, st)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, st)), jnp.float32)
+    y, hf = ssd_chunked(x, dt, A, B, C, jnp.zeros((b, nh, hd, st)))
+    h = np.zeros((b, nh, hd, st))
+    ys = np.zeros((b, s, nh, hd))
+    negA = -np.exp(np.asarray(A))
+    for t in range(s):
+        dA = np.exp(np.asarray(dt[:, t]) * negA)
+        h = h * dA[:, :, None, None] + np.einsum(
+            "bh,bhd,bs->bhds", np.asarray(dt[:, t]), np.asarray(x[:, t]),
+            np.asarray(B[:, t]))
+        ys[:, t] = np.einsum("bs,bhds->bhd", np.asarray(C[:, t]), h)
+    np.testing.assert_allclose(np.asarray(y), ys, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(hf), h, atol=5e-4)
+
+
+def test_param_count_matches_init():
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        params = init_params(cfg)
+        actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / analytic < 0.35, \
+            f"{arch}: init {actual} vs analytic {analytic}"
+
+
+def test_training_reduces_loss():
+    """A few AdamW steps on a tiny model reduce the loss on a fixed batch."""
+    from repro.optim import adamw
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    params = init_params(cfg)
+    state = adamw.init(params)
+    ocfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=1, total_steps=40)
+    batch = _batch(cfg, b=4, s=16)
+
+    @jax.jit
+    def step(state, batch):
+        p = adamw.cast_params(state.master)
+        loss, grads = jax.value_and_grad(loss_fn)(p, batch, cfg)
+        state, _ = adamw.step(ocfg, state, grads)
+        return state, loss
+
+    losses = []
+    for _ in range(8):
+        state, loss = step(state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.2, losses

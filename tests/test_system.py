@@ -1,0 +1,66 @@
+"""End-to-end system test: data pipeline → jitted train step (AdamW) →
+async checkpoints → injected node failure → restart from the committed
+checkpoint → training completes with a lower loss.  The full stack of
+deliverable (b)'s training driver, exercised on a reduced config."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.distributed.fault_tolerance import RestartManager
+from repro.models import init_params, loss_fn
+from repro.optim import adamw
+
+
+def test_train_restart_end_to_end(tmp_path):
+    cfg = get_config("mamba2-130m").reduced()
+    dcfg = DataConfig(seq_len=16, global_batch=4, prefetch=4)
+    ocfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=30)
+    num_steps = 20
+
+    params = init_params(cfg)
+    state = adamw.init(params)
+
+    @jax.jit
+    def jstep(state, tokens, labels):
+        p = adamw.cast_params(state.master)
+        loss, grads = jax.value_and_grad(loss_fn)(
+            p, {"tokens": tokens, "labels": labels}, cfg)
+        state, _ = adamw.step(ocfg, state, grads)
+        return state, loss
+
+    losses = {}
+
+    def step_fn(state, i):
+        from repro.data.pipeline import synth_batch
+        b = synth_batch(cfg, dcfg, i % 2)      # two recurring batches:
+        state, loss = jstep(state, jnp.asarray(b["tokens"]),
+                            jnp.asarray(b["labels"]))  # memorizable signal
+        losses[i] = float(loss)
+        return state
+
+    ckpt = CheckpointManager(str(tmp_path), async_write=True)
+    rm = RestartManager(ckpt, save_every=5, max_restarts=2)
+    final_step, state = rm.run(state, step_fn, num_steps=num_steps,
+                               inject_fault_at=13)
+    assert final_step == num_steps
+    assert rm.restarts == 1
+    assert losses[num_steps - 2] < losses[0]   # trained through the fault
+    assert int(state.step) == num_steps        # optimizer steps preserved
+
+
+def test_pipeline_feeds_training():
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    dcfg = DataConfig(seq_len=8, global_batch=2, prefetch=2)
+    pipe = DataPipeline(cfg, dcfg, 5).start()
+    params = init_params(cfg)
+    seen = 0
+    for i, batch in pipe:
+        loss = loss_fn(params, {k: jnp.asarray(v) for k, v in batch.items()},
+                       cfg)
+        assert bool(jnp.isfinite(loss))
+        seen += 1
+    assert seen == 5
