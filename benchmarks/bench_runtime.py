@@ -1,0 +1,130 @@
+"""Task-runtime benchmark: single shared queue vs. sharded fabric vs.
+sharded fabric + work stealing, across arrival scenarios (DESIGN.md § 4.6).
+
+Three open-loop scenarios, each executed by ≥32 persistent sim workers:
+
+* ``uniform``   — tasks arrive evenly spaced, uniform small costs, sprayed
+                  round-robin across shards (the balanced regime: isolates
+                  pure queue-contention cost),
+* ``powerlaw``  — all tasks arrive up front with Pareto-tailed costs (the
+                  heavy-tail regime: a few giant tasks, load imbalance from
+                  cost skew),
+* ``bursty``    — periodic bursts land on a *single rotating shard* each
+                  (wave-affinity arrivals: placement skew, the regime work
+                  stealing exists for).
+
+The headline comparison (acceptance): under power-law costs the
+sharded+stealing fabric must beat the single shared queue on both
+``throughput_ops_per_kstep`` (higher) and ``idle_steps`` (lower).  The
+no-steal sharded column is the placement-oracle upper bound: when arrivals
+are already balanced it can edge out stealing (steal scans add consumers to
+hot rings) — the fabric's win over `single` comes from de-contending the
+rings, stealing's role is robustness to skew (`bursty`; and without it,
+skewed placement can starve outright when no worker's wave covers a shard).
+
+CSV columns: scenario, queue, config, workers, tasks,
+throughput_ops_per_kstep, idle_steps, idle_per_task, steals, steal_rate,
+load_imbalance, total_steps.
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.runtime import ExecutorConfig, TaskFabric, TaskRuntime
+
+CONFIGS: Tuple[Tuple[str, int, bool], ...] = (
+    ("single", 1, False),
+    ("sharded", 4, False),
+    ("sharded+steal", 4, True),
+)
+
+
+def _build(scenario: str, rt: TaskRuntime, shards: int, n_tasks: int,
+           seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    if scenario == "uniform":
+        for i in range(n_tasks):
+            rt.add_task(i, cost=int(rng.integers(1, 9)), at_step=i * 40)
+    elif scenario == "powerlaw":
+        costs = np.minimum((rng.pareto(1.2, n_tasks) * 4 + 1).astype(int), 64)
+        for i in range(n_tasks):
+            rt.add_task(i, cost=int(costs[i]))
+    elif scenario == "bursty":
+        bursts = max(n_tasks // 32, 1)
+        for b in range(bursts):
+            for k in range(32):
+                rt.add_task(b * 32 + k, cost=int(rng.integers(32, 129)),
+                            at_step=b * 3000, affinity=b)
+    else:
+        raise ValueError(f"unknown scenario {scenario!r}")
+
+
+def run_scenario(scenario: str, algo: str, config: str, shards: int,
+                 steal: bool, *, workers: int = 32, n_tasks: int = 256,
+                 seed: int = 0, policy: str = "gang") -> Dict[str, float]:
+    fabric = TaskFabric(algo=algo, shards=shards,
+                        capacity_per_shard=max(2 * n_tasks // shards, 64),
+                        num_threads=workers + 1, steal=steal)
+    rt = TaskRuntime(fabric, lambda rec: [],
+                     ExecutorConfig(workers=workers, policy=policy, seed=seed))
+    _build(scenario, rt, shards, n_tasks, seed)
+    m = rt.run()
+    m["tasks"] = len(rt.executed)
+    return m
+
+
+def main(out=sys.stdout, *, workers: int = 32, n_tasks: int = 256,
+         algos=("glfq", "gwfq", "gwfq-ymc", "sfq"),
+         scenarios=("uniform", "powerlaw", "bursty"),
+         seed: int = 0) -> List[Dict]:
+    print("bench,scenario,queue,config,workers,tasks,"
+          "throughput_ops_per_kstep,idle_steps,idle_per_task,steals,"
+          "steal_rate,load_imbalance,total_steps", file=out)
+    rows: List[Dict] = []
+    for scenario in scenarios:
+        for algo in algos:
+            for config, shards, steal in CONFIGS:
+                m = run_scenario(scenario, algo, config, shards, steal,
+                                 workers=workers, n_tasks=n_tasks, seed=seed)
+                row = {
+                    "bench": "runtime", "scenario": scenario, "queue": algo,
+                    "config": config, "workers": workers,
+                    "tasks": int(m["tasks"]),
+                    "throughput_ops_per_kstep":
+                        round(m["throughput_ops_per_kstep"], 3),
+                    "idle_steps": int(m["idle_steps"]),
+                    "idle_per_task": round(m["idle_steps_per_task"], 2),
+                    "steals": int(m["steals"]),
+                    "steal_rate": round(m["steal_rate"], 3),
+                    "load_imbalance": round(m["load_imbalance"], 3),
+                    "total_steps": int(m["total_steps"]),
+                }
+                rows.append(row)
+                print("runtime,{scenario},{queue},{config},{workers},{tasks},"
+                      "{throughput_ops_per_kstep},{idle_steps},"
+                      "{idle_per_task},{steals},{steal_rate},"
+                      "{load_imbalance},{total_steps}".format(**row), file=out)
+                out.flush()
+    # headline acceptance summary for the default algorithm
+    for algo in algos[:1]:
+        base = next(r for r in rows if r["scenario"] == "powerlaw"
+                    and r["queue"] == algo and r["config"] == "single")
+        st = next(r for r in rows if r["scenario"] == "powerlaw"
+                  and r["queue"] == algo and r["config"] == "sharded+steal")
+        verdict = (st["throughput_ops_per_kstep"]
+                   > base["throughput_ops_per_kstep"]
+                   and st["idle_steps"] < base["idle_steps"])
+        print(f"# powerlaw/{algo}: sharded+steal thr "
+              f"{st['throughput_ops_per_kstep']} vs single "
+              f"{base['throughput_ops_per_kstep']}, idle {st['idle_steps']} "
+              f"vs {base['idle_steps']} -> "
+              f"{'PASS' if verdict else 'FAIL'}", file=out)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,41 +1,107 @@
 """Benchmark driver — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json results.json]
 
 Sections: Fig. 4 throughput, Fig. 5 per-op profiling (+ Fig. 1 ablation),
-Table IV/Fig. 6 BFS, Fig. 7 ray tracing, kernel micro-benchmarks.
-CSV lines go to stdout: ``name,...`` per row.
+Table IV/Fig. 6 BFS, Fig. 7 ray tracing, kernel micro-benchmarks, and the
+task-runtime fabric comparison (bench_runtime).
+
+CSV lines go to stdout: ``name,...`` per row.  With ``--json`` the same
+rows are parsed into ``{section: [row dicts]}`` and written to the given
+path (``-`` = stdout) — the machine-readable trajectory format.
 """
 
 import argparse
+import io
+import json
 import sys
+
+
+class _Tee(io.TextIOBase):
+    """Forward writes to stdout while keeping a copy for CSV parsing."""
+
+    def __init__(self) -> None:
+        self.buf = io.StringIO()
+
+    def write(self, s: str) -> int:
+        sys.stdout.write(s)
+        return self.buf.write(s)
+
+    def flush(self) -> None:
+        sys.stdout.flush()
+
+
+def _parse_csv(text: str):
+    """Parse a section's output: every bench header leads with the literal
+    cell ``bench`` (possibly mid-section — sub-tables need no separator);
+    later comma lines are rows under the current header (numbers coerced);
+    ``#`` lines are commentary."""
+    rows, header = [], None
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = line.split(",")
+        if parts[0] == "bench" or header is None:
+            header = parts
+            continue
+        row = {}
+        for k, v in zip(header, parts):
+            try:
+                row[k] = int(v)
+            except ValueError:
+                try:
+                    row[k] = float(v)
+                except ValueError:
+                    row[k] = v
+        rows.append(row)
+    return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller sweeps (CI-sized)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also emit {section: [rows]} JSON to PATH ('-' = stdout)")
     ap.add_argument("--section", default=None,
                     choices=["throughput", "profiling", "bfs", "raytrace",
-                             "kernels", None])
+                             "kernels", "runtime", None])
     args = ap.parse_args()
     from . import (bench_bfs, bench_kernels, bench_profiling,
-                   bench_raytrace, bench_throughput)
+                   bench_raytrace, bench_runtime, bench_throughput)
 
     kw_thr = dict(threads_list=(8, 32), steps=40_000) if args.quick else {}
     kw_prof = dict(threads_list=(8, 32), steps=40_000) if args.quick else {}
+    kw_rt = (dict(algos=("glfq",), n_tasks=96) if args.quick
+             else dict(algos=("glfq", "gwfq", "gwfq-ymc", "sfq")))
     sections = {
-        "throughput": lambda: bench_throughput.main(**kw_thr),
-        "profiling": lambda: bench_profiling.main(**kw_prof),
-        "bfs": bench_bfs.main,
-        "raytrace": bench_raytrace.main,
-        "kernels": bench_kernels.main,
+        "throughput": lambda out: bench_throughput.main(out, **kw_thr),
+        "profiling": lambda out: bench_profiling.main(out, **kw_prof),
+        "bfs": lambda out: bench_bfs.main(out),
+        "raytrace": lambda out: bench_raytrace.main(out),
+        "kernels": lambda out: bench_kernels.main(out),
+        "runtime": lambda out: bench_runtime.main(out, **kw_rt),
     }
     todo = [args.section] if args.section else list(sections)
+    if args.json and args.json != "-":
+        with open(args.json, "a"):     # fail on an unwritable path up front,
+            pass                       # not after the whole sweep has run
+    results = {}
     for name in todo:
         print(f"# === {name} ===")
-        sections[name]()
+        tee = _Tee()
+        sections[name](tee)
+        results[name] = _parse_csv(tee.buf.getvalue())
         sys.stdout.flush()
+    if args.json:
+        payload = json.dumps(results, indent=1, sort_keys=True)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w") as f:
+                f.write(payload + "\n")
+            print(f"# json -> {args.json}")
 
 
 if __name__ == "__main__":

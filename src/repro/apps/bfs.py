@@ -150,6 +150,63 @@ def bfs_baseline(g: CSRGraph, source: int = 0) -> Tuple[np.ndarray, Dict]:
     return dist, {"levels": level}
 
 
+def bfs_runtime(g: CSRGraph, source: int = 0, *, algo: str = "glfq",
+                shards: int = 4, workers: int = 16, steal: bool = True,
+                policy: str = "gang", seed: int = 0
+                ) -> Tuple[np.ndarray, Dict]:
+    """Task-runtime BFS: frontier expansion as dynamically spawned tasks on
+    the sharded fabric (DESIGN.md § 4.5).
+
+    One task = relax one vertex; its handler scans the adjacency list
+    (simulated cost = degree, so power-law graphs yield power-law task
+    costs) and spawns a child for every neighbour whose tentative distance
+    improves (the handler runs atomically between simulator instructions —
+    the host stand-in for an atomic min on the distance array).  Unlike
+    ``bfs_queue`` there is no level barrier: the fabric's interleaving may
+    discover a vertex via a long path first, and the asynchronous relaxation
+    re-spawns it when a shorter path arrives — distances are exact at
+    quiescence (monotone label-correcting, Wang et al.'s dynamic
+    load-balancing discipline), while the *fabric* still executes every
+    spawned task exactly once."""
+    from ..runtime import ExecutorConfig, TaskFabric, TaskRuntime, TaskSpec
+
+    dist = np.full(g.n, -1, np.int32)
+    dist[source] = 0
+    edges_scanned = 0
+
+    def handler(rec):
+        nonlocal edges_scanned
+        v = rec.payload
+        dv = int(dist[v])
+        lo, hi = int(g.row_ptr[v]), int(g.row_ptr[v + 1])
+        edges_scanned += hi - lo
+        children = []
+        for w in g.col_idx[lo:hi]:
+            w = int(w)
+            nd = dv + 1
+            if dist[w] < 0 or nd < dist[w]:   # atomic relax (host = one step)
+                dist[w] = nd
+                deg_w = int(g.row_ptr[w + 1]) - int(g.row_ptr[w])
+                children.append(TaskSpec(w, cost=max(deg_w, 1)))
+        return children
+
+    fabric = TaskFabric(algo=algo, shards=shards,
+                        capacity_per_shard=max(2 * g.n // max(shards, 1), 64),
+                        num_threads=workers + 1, steal=steal)
+    rt = TaskRuntime(fabric, handler,
+                     ExecutorConfig(workers=workers, policy=policy, seed=seed,
+                                    max_steps=50_000_000))
+    rt.add_task(source,
+                cost=max(int(g.row_ptr[source + 1]) - int(g.row_ptr[source]), 1))
+    metrics = rt.run()
+    info = {"tasks": len(rt.executed), "edges_scanned": edges_scanned,
+            "steal_rate": metrics["steal_rate"],
+            "idle_steps": metrics["idle_steps"],
+            "load_imbalance": metrics["load_imbalance"],
+            "throughput_ops_per_kstep": metrics["throughput_ops_per_kstep"]}
+    return dist, info
+
+
 def bfs_reference(g: CSRGraph, source: int = 0) -> np.ndarray:
     """Plain numpy BFS oracle."""
     from collections import deque

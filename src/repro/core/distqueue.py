@@ -34,19 +34,10 @@ import jax
 import jax.numpy as jnp
 
 from ..distributed.collectives import mesh_ticket_base
+from ..jaxcompat import axis_size as _axis_size, pvary as _pvary
 
 IDX_BOT = jnp.int32(2 ** 31 - 1)
 IDX_BOTC = jnp.int32(2 ** 31 - 2)
-
-
-def _pvary(x, axis: str):
-    """Idempotent pvary: promote to axis-varying only if not already."""
-    try:
-        if axis in jax.typeof(x).vma:
-            return x
-    except AttributeError:
-        pass
-    return jax.lax.pvary(x, (axis,))
 
 
 class DistQueueState(NamedTuple):
@@ -114,7 +105,7 @@ def dist_enqueue_round(state: DistQueueState, values: jax.Array,
         _pvary(state.head, axis))
     inv = jnp.argsort(order)
     ok_all = ok_sorted[inv]
-    n = jax.lax.axis_size(axis)
+    n = _axis_size(axis)
     me = jax.lax.axis_index(axis)
     ok_local = ok_all.reshape(n, b)[me]
     new_state = state._replace(cycles=cyc, safes=saf, idxs=idx,
@@ -158,7 +149,7 @@ def dist_dequeue_round(state: DistQueueState, want: jax.Array, axis: str):
     inv = jnp.argsort(order)
     vals_all = vals_sorted[inv]
     ok_all = ok_sorted[inv]
-    n = jax.lax.axis_size(axis)
+    n = _axis_size(axis)
     me = jax.lax.axis_index(axis)
     new_state = state._replace(cycles=cyc, safes=saf, idxs=idx,
                                head=state.head + total)

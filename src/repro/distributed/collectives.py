@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from . import compression
+from ..jaxcompat import axis_size as _axis_size
 
 
 # ---------------------------------------------------------------------------
@@ -31,7 +32,7 @@ def mesh_ticket_base(count: jax.Array, axis: str) -> Tuple[jax.Array, jax.Array]
     total).  One collective round hands out globally unique, ordered ticket
     blocks — the paper's leader-FAA one level up the hierarchy."""
     idx = jax.lax.axis_index(axis)
-    n = jax.lax.axis_size(axis)
+    n = _axis_size(axis)
     onehot = (jax.lax.broadcasted_iota(jnp.int32, (n,), 0) == idx)
     contrib = jnp.where(onehot, count, 0)
     sums = jax.lax.psum(contrib, axis)              # (n,) per-shard counts

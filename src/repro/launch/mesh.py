@@ -10,23 +10,22 @@ from __future__ import annotations
 
 import jax
 
+from ..jaxcompat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16×16 = 256 chips over ("data", "model").
     Multi-pod: 2×16×16 = 512 chips over ("pod", "data", "model")."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model: int = 1):
     """Tiny mesh over the locally visible devices (tests / examples)."""
     n = jax.device_count()
     data = max(n // model, 1)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple:

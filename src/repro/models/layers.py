@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
+from ..jaxcompat import current_mesh
 
 Params = Dict[str, jax.Array]
 
@@ -123,7 +124,7 @@ FLASH_MIN_SEQ = 2048  # use the blocked path above this many keys
 def _pin(x: jax.Array, spec: P) -> jax.Array:
     """with_sharding_constraint iff a mesh with the named axes is ambient
     and every sharded dim divides; no-op otherwise (tests run mesh-less)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     for i, ax in enumerate(spec):
@@ -158,7 +159,7 @@ def _q_block_spec(kvh: int) -> P:
     shard on the head dim (tiles shrink, no per-tile resharding); otherwise
     shard the query rows."""
     U = P.UNCONSTRAINED
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     model = (mesh.shape.get("model", 1)
              if mesh is not None and mesh.axis_names else 1)
     if model > 1 and kvh % model == 0:
@@ -171,7 +172,7 @@ def _kv_stack_spec(kvh: int) -> P:
     gathered (one gather per layer — still far better than the per-tile
     re-gathers the partitioner produces if left unpinned)."""
     U = P.UNCONSTRAINED
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     model = (mesh.shape.get("model", 1)
              if mesh is not None and mesh.axis_names else 1)
     if model > 1 and kvh % model == 0:
@@ -403,7 +404,7 @@ def attention(p: Params, x: jax.Array, cfg: ArchConfig, *,
         # every (q-block × k-block) iteration (§Perf: yi-34b prefill was
         # 1190 s collective-bound from exactly this).
         U = P.UNCONSTRAINED
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = current_mesh()
         model_sz = (mesh.shape.get("model", 1)
                     if mesh is not None and mesh.axis_names else 1)
         kv_axis = "model" if (model_sz > 1 and kv % model_sz == 0) else None
@@ -420,7 +421,7 @@ def attention(p: Params, x: jax.Array, cfg: ArchConfig, *,
         # B=1 long-context decode: keep the logits sequence-sharded like the
         # cache so attention needs only tiny softmax/value psums instead of
         # f32 all-gathers of the whole cache (§Perf hillclimb #3)
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = current_mesh()
         if mesh is not None and mesh.axis_names:
             logits = _pin(logits, P(None, None, None, None,
                                     tuple(mesh.axis_names)))

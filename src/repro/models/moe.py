@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
+from ..jaxcompat import current_mesh
 from .layers import _dense
 
 Params = Dict[str, jax.Array]
@@ -28,7 +29,7 @@ def _shard_expert_buffers(buf: jax.Array, n_experts: int) -> jax.Array:
     experts over "model" when divisible (classic EP) else the capacity dim.
     Without this an indivisible expert count (granite's 40 on a 16-way
     axis) replicates the whole expert GEMM on every chip."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or "model" not in (mesh.axis_names or ()):
         return buf
     model = mesh.shape["model"]
@@ -83,7 +84,7 @@ def _dp_groups(t: int) -> int:
     (E, C, d) buffers are batch-parallel instead of a global prefix that
     forces every chip through the full global capacity (§Perf hillclimb #1:
     granite's expert GEMMs were 40×262k×d on *every* chip)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or not mesh.axis_names:
         return 1
     g = 1
@@ -143,7 +144,7 @@ def moe_forward(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     # d-sharded: the gather output then stays "model"-sharded on d instead
     # of needing a full-width partial-sum all-reduce (76% of this cell's
     # collective volume before this change).
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if (mesh is not None and "model" in (mesh.axis_names or ())
             and d % mesh.shape["model"] == 0):
         dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)

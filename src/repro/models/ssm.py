@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
+from ..jaxcompat import current_mesh
 from .layers import _dense, _pin, rms_norm
 
 CHUNK = 256
@@ -31,7 +32,7 @@ def _ssd_axis(nh: int, ck: int):
     112 % 16 == 0), else the intra-chunk time dim (mamba2: nh=24 does not
     divide) — without a pin the (b, ck, ck, nh) decay/gate chain is fully
     replicated per device (§Perf: 6% of zamba-train bytes per tensor)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     model = (mesh.shape.get("model", 1)
              if mesh is not None and mesh.axis_names else 1)
     if model <= 1:

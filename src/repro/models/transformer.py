@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
+from ..jaxcompat import current_mesh
 from .layers import (attention, attn_params, attn_specs, mlp, mlp_params,
                      mlp_specs, rms_norm, softcap, _dense)
 from .moe import moe_forward, moe_params, moe_specs
@@ -201,7 +202,7 @@ def _seq_shard(x: jax.Array, cfg: ArchConfig) -> jax.Array:
     cfg.seq_parallel (mesh context present; seq divisible)."""
     if not cfg.seq_parallel or x.ndim != 3:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or "model" not in (mesh.axis_names or ()):
         return x
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,23 @@
+"""repro.runtime — the queue-backed task-parallel execution engine
+(DESIGN.md § 4).
+
+Two faces over the same queue core:
+
+* **sim face** — ``TaskFabric`` (sharded MPMC rings, wave-affinity
+  placement, work stealing, priority lanes) driven by ``TaskRuntime``
+  persistent workers under the adversarial interleaving scheduler;
+* **JAX face** — ``RoundRunner`` (deterministic jitted rounds over the
+  Pallas ring) and ``mesh_task_round`` (the same round at mesh scope on
+  ``core.distqueue``).
+"""
+
+from .executor import Arrival, ExecutorConfig, Handler, TaskRuntime
+from .rounds import RingState, RoundRunner, mesh_task_round, ring_init
+from .taskpool import (FabricMetrics, HostTaskPool, TaskFabric, TaskRecord,
+                       TaskSpec)
+
+__all__ = [
+    "Arrival", "ExecutorConfig", "FabricMetrics", "Handler", "HostTaskPool",
+    "RingState", "RoundRunner", "TaskFabric", "TaskRecord", "TaskSpec",
+    "TaskRuntime", "mesh_task_round", "ring_init",
+]

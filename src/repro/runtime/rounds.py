@@ -1,0 +1,151 @@
+"""Round-based deterministic task loop on the Pallas ring (DESIGN.md § 4.3).
+
+The sim face (`executor.py`) explores adversarial interleavings; this face is
+the *device* execution model: task scheduling advances in jitted rounds, and
+within a round every queue operation is ordered by ticket — the batched
+analogue of Lemma III.1, with no nondeterminism left.  One round is
+
+    dequeue a batch of task values from the ring (``ring_dequeue``),
+    run the user's jitted step function on the batch,
+    enqueue the children it emits (``ring_enqueue``) in row-major order.
+
+Head/Tail live on the host between rounds (the round loop is data-dependent:
+it stops at quiescence), so tickets are computed exactly and every kernel
+invocation uses fixed ``batch``-sized operands — two compilations total.
+Because ticket issue is exact, TRYENQ/TRYDEQ never miss: the kernels'
+conditional paths are exercised but the ``ok`` flags certify every op, and
+the whole run is bit-deterministic (pure integer jnp + host ints, no RNG).
+
+At mesh scope the same round structure runs on ``core.distqueue``:
+``mesh_task_round`` composes one enqueue round and one dequeue round inside
+shard_map — each chip contributes its spawn/claim masks, one prefix-sum
+collective orders the whole mesh's tickets (DESIGN.md § 2.3).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.distqueue import dist_dequeue_round, dist_enqueue_round
+from ..kernels.ring_slots import ring_dequeue, ring_enqueue
+
+IDX_BOT = 2 ** 31 - 1           # ⊥ (⊥_c = IDX_BOT - 1); payloads must be smaller
+
+
+class RingState(NamedTuple):
+    """Field planes of the 2n-slot ring plus host-side head/tail tickets."""
+    cycles: jax.Array
+    safes: jax.Array
+    enqs: jax.Array
+    idxs: jax.Array
+    head: int
+    tail: int
+
+    @property
+    def occupancy(self) -> int:
+        return self.tail - self.head
+
+
+def ring_init(capacity_log2: int) -> RingState:
+    """Ring with logical capacity 2^capacity_log2 (2n physical slots).
+    Head = Tail = 2n, so first tickets carry cycle 1 over cycle-0 slots."""
+    nslots = 2 << capacity_log2
+    return RingState(
+        cycles=jnp.zeros((nslots,), jnp.int32),
+        safes=jnp.ones((nslots,), jnp.int32),
+        enqs=jnp.zeros((nslots,), jnp.int32),
+        idxs=jnp.full((nslots,), IDX_BOT, jnp.int32),
+        head=nslots, tail=nslots,
+    )
+
+
+# StepFn: (acc, vals (B,), valid (B,)) -> (acc, child_vals (B,F), child_mask (B,F))
+StepFn = Callable[[Any, jax.Array, jax.Array], Tuple[Any, jax.Array, jax.Array]]
+
+
+class RoundRunner:
+    """Drives ``step_fn`` to quiescence through the Pallas ring."""
+
+    def __init__(self, step_fn: StepFn, *, capacity_log2: int = 10,
+                 batch: int = 64, interpret: bool = True) -> None:
+        self.step_fn = jax.jit(step_fn)
+        self.capacity_log2 = capacity_log2
+        self.nslots_log2 = capacity_log2 + 1
+        self.capacity = 1 << capacity_log2
+        self.batch = batch
+        self.interpret = interpret
+        self.stats: Dict[str, int] = {}
+
+    def _enq_chunk(self, st: RingState, vals: np.ndarray) -> RingState:
+        b, k = self.batch, len(vals)
+        assert k <= b
+        if st.occupancy + k > self.capacity:
+            raise RuntimeError(
+                f"ring overflow: occupancy {st.occupancy} + {k} children "
+                f"exceeds capacity {self.capacity} (raise capacity_log2 or "
+                f"lower the fanout)")
+        tickets = np.full(b, -1, np.int32)
+        tickets[:k] = st.tail + np.arange(k, dtype=np.int32)
+        values = np.full(b, -1, np.int32)
+        values[:k] = vals
+        cyc, saf, enq, idx, ok = ring_enqueue(
+            st.cycles, st.safes, st.enqs, st.idxs,
+            jnp.asarray(tickets), jnp.asarray(values),
+            jnp.asarray([st.head], jnp.int32).reshape(()),
+            nslots_log2=self.nslots_log2, idx_bot=IDX_BOT,
+            interpret=self.interpret)
+        assert bool(ok[:k].all()), "exact tickets cannot miss"
+        return RingState(cyc, saf, enq, idx, st.head, st.tail + k)
+
+    def run(self, initial: np.ndarray, acc: Any = None,
+            max_rounds: int = 10_000) -> Tuple[Any, RingState]:
+        """Seed the ring with ``initial`` task values, run rounds until the
+        ring drains (or max_rounds).  Returns (acc, final ring state)."""
+        st = ring_init(self.capacity_log2)
+        initial = np.asarray(initial, np.int32)
+        for i in range(0, len(initial), self.batch):
+            st = self._enq_chunk(st, initial[i:i + self.batch])
+        rounds = processed = spawned = 0
+        max_occ = st.occupancy
+        while st.occupancy > 0 and rounds < max_rounds:
+            k = min(self.batch, st.occupancy)
+            tickets = np.full(self.batch, -1, np.int32)
+            tickets[:k] = st.head + np.arange(k, dtype=np.int32)
+            cyc, saf, enq, idx, vals, ok = ring_dequeue(
+                st.cycles, st.safes, st.enqs, st.idxs, jnp.asarray(tickets),
+                nslots_log2=self.nslots_log2, idx_bot=IDX_BOT,
+                interpret=self.interpret)
+            assert bool(ok[:k].all()), "exact tickets cannot miss"
+            st = RingState(cyc, saf, enq, idx, st.head + k, st.tail)
+            acc, cvals, cmask = self.step_fn(acc, vals, ok)
+            cv = np.asarray(cvals).reshape(-1)
+            cm = np.broadcast_to(np.asarray(cmask).astype(bool),
+                                 np.asarray(cvals).shape).reshape(-1)
+            children = cv[cm]                      # row-major ⇒ deterministic
+            for i in range(0, len(children), self.batch):
+                st = self._enq_chunk(st, children[i:i + self.batch])
+            rounds += 1
+            processed += k
+            spawned += len(children)
+            max_occ = max(max_occ, st.occupancy)
+        self.stats = {"rounds": rounds, "processed": processed,
+                      "spawned": spawned, "max_occupancy": max_occ,
+                      "drained": int(st.occupancy == 0)}
+        return acc, st
+
+
+def mesh_task_round(state, spawn_vals: jax.Array, spawn_mask: jax.Array,
+                    claim_mask: jax.Array, axis: str):
+    """One mesh-scope task round inside shard_map: publish this chip's
+    spawned tasks, then claim up to ``claim_mask.sum()`` tasks for local
+    execution.  Returns (state, granted, claimed_vals, claimed_ok).
+
+    Composes ``dist_enqueue_round`` + ``dist_dequeue_round`` — two prefix-sum
+    collectives per round, the mesh analogue of a wave's two leader FAAs."""
+    state, granted = dist_enqueue_round(state, spawn_vals, spawn_mask, axis)
+    state, vals, ok = dist_dequeue_round(state, claim_mask, axis)
+    return state, granted, vals, ok

@@ -2,9 +2,11 @@
 
 Two queue roles (DESIGN.md § 3):
 
-* **request queue** — incoming generation requests land in a G-LFQ-style
-  bounded ring (host port); the scheduler drains it into free decode slots
-  each step (admission = dequeue; backpressure = ring full).
+* **request queue** — incoming generation requests land in the runtime's
+  priority-laned ``HostTaskPool`` (sharded G-LFQ-style host rings, strict
+  urgent-lane-first admission with cross-shard stealing, DESIGN.md § 4.4);
+  the scheduler drains it into free decode slots each step (admission =
+  dequeue; backpressure = every shard of the request's lane full).
 * **KV page allocator** — the KV cache is paged; free page indices live in a
   bounded ring and are claimed by *ticket reservation* exactly like the
   paper's index indirection (enqueue of a released page, dequeue of a free
@@ -33,6 +35,7 @@ import numpy as np
 from ..configs.base import ArchConfig
 from ..data.pipeline import HostRing
 from ..models import decode_step, init_decode_cache
+from ..runtime import HostTaskPool
 
 
 @dataclasses.dataclass
@@ -40,6 +43,7 @@ class Request:
     rid: int
     prompt: np.ndarray           # (P,) int32
     max_new_tokens: int
+    priority: int = 1            # 0 = urgent admission lane
     out: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     pages: List[int] = dataclasses.field(default_factory=list)
@@ -53,6 +57,7 @@ class EngineConfig:
     num_pages: int = 64          # total page budget
     max_seq: int = 256
     request_ring_capacity: int = 16
+    request_shards: int = 2      # HostTaskPool shards per lane
 
 
 class ServingEngine:
@@ -61,7 +66,10 @@ class ServingEngine:
 
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig) -> None:
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
-        self.requests = HostRing(ecfg.request_ring_capacity)
+        self.requests = HostTaskPool(ecfg.request_ring_capacity,
+                                     shards=ecfg.request_shards, lanes=2)
+        self.stalled: List[Request] = []   # page-stalled, awaiting re-admission
+        self.admission_log: List[int] = []
         # free-page ring (index indirection: pages move as indices)
         self.free_pages = HostRing(ecfg.num_pages)
         for p in range(ecfg.num_pages):
@@ -78,7 +86,8 @@ class ServingEngine:
     # -- client API ------------------------------------------------------------
 
     def submit(self, req: Request, timeout: float = 1.0) -> bool:
-        return self.requests.enqueue(req, timeout=timeout)
+        return self.requests.enqueue(req, timeout=timeout,
+                                     priority=req.priority)
 
     # -- scheduler -------------------------------------------------------------
 
@@ -89,7 +98,8 @@ class ServingEngine:
         for s in range(self.ecfg.max_slots):
             if self.slots[s] is not None:
                 continue
-            req = self.requests.dequeue(timeout=0.0)
+            req = (self.stalled.pop(0) if self.stalled
+                   else self.requests.dequeue(timeout=0.0))
             if req is None:
                 return
             need = self._pages_needed(len(req.prompt) + req.max_new_tokens)
@@ -104,10 +114,13 @@ class ServingEngine:
                 for p in pages:
                     self.free_pages.enqueue(p, timeout=0.1)
                 self.metrics["page_stalls"] += 1
-                self.requests.enqueue(req, timeout=0.1)
+                # park the request engine-side: it retries ahead of the pool
+                # next tick and cannot be dropped if its lane has refilled
+                self.stalled.append(req)
                 return
             req.slot, req.pages = s, pages
             self.slots[s] = req
+            self.admission_log.append(req.rid)
             self.metrics["admitted"] += 1
             # prefill (token-by-token through decode_step for simplicity;
             # slot-local so other slots keep decoding)
@@ -152,6 +165,6 @@ class ServingEngine:
     def run(self, max_ticks: int = 1000) -> Dict[str, int]:
         for _ in range(max_ticks):
             self.step()
-            if not any(self.slots) and self.requests.empty():
+            if not any(self.slots) and not self.stalled and self.requests.empty():
                 break
         return dict(self.metrics)

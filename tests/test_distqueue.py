@@ -17,11 +17,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.distqueue import (dist_dequeue_round, dist_enqueue_round,
                                   dist_queue_init)
+from repro.jaxcompat import make_mesh
 
 
 def test_single_device_semantics():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     state = dist_queue_init(16)
 
     def inner(state, values, emask, want):
@@ -50,9 +50,9 @@ _SUBPROC = textwrap.dedent("""
     from jax.experimental.shard_map import shard_map
     from repro.core.distqueue import (dist_queue_init, dist_enqueue_round,
                                       dist_dequeue_round)
+    from repro.jaxcompat import make_mesh
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     B = 4
 
     def inner(state, values, emask, want):

@@ -5,6 +5,7 @@ cost_analysis counts while bodies once)."""
 import jax
 import jax.numpy as jnp
 
+from repro.jaxcompat import cost_analysis_dict, make_mesh
 from repro.launch.hlo_analysis import analyze_hlo_text
 
 
@@ -27,13 +28,12 @@ def test_scan_trip_count_multiplies_flops():
     assert c.flops >= 2.5 * fwd, (c.flops, fwd)
     assert c.flops <= 4.0 * fwd, (c.flops, fwd)
     # cost_analysis counts the body once — the analyzer must exceed it
-    assert c.flops > float(compiled.cost_analysis()["flops"]) * (L - 1) / 2
+    assert c.flops > float(cost_analysis_dict(compiled)["flops"]) * (L - 1) / 2
 
 
 def test_collectives_counted():
     import numpy as np
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 

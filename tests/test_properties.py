@@ -12,7 +12,11 @@
 import random
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import AtomicMemory, check_linearizable
 from repro.core.linearizability import check_linearizable_search
