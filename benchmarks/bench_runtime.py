@@ -1,5 +1,6 @@
 """Task-runtime benchmark: single shared queue vs. sharded fabric vs.
-sharded fabric + work stealing, across arrival scenarios (DESIGN.md § 4.6).
+sharded fabric + work stealing, across arrival scenarios (DESIGN.md § 4.6),
+plus the priority-policy comparison on the G-PQ fabric (DESIGN.md § 5.7).
 
 Three open-loop scenarios, each executed by ≥32 persistent sim workers:
 
@@ -34,13 +35,16 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.runtime import ExecutorConfig, TaskFabric, TaskRuntime
+from repro.runtime import (ExecutorConfig, PriorityFabric, TaskFabric,
+                           TaskRuntime)
 
 CONFIGS: Tuple[Tuple[str, int, bool], ...] = (
     ("single", 1, False),
     ("sharded", 4, False),
     ("sharded+steal", 4, True),
 )
+
+POLICIES: Tuple[str, ...] = ("strict", "weighted", "edf")
 
 
 def _build(scenario: str, rt: TaskRuntime, shards: int, n_tasks: int,
@@ -75,6 +79,119 @@ def run_scenario(scenario: str, algo: str, config: str, shards: int,
     m = rt.run()
     m["tasks"] = len(rt.executed)
     return m
+
+
+def fifo_acceptance(single: Dict, fab: Dict) -> Tuple[bool, str]:
+    """Headline FIFO-fabric criterion: sharded+steal must beat the single
+    shared queue on throughput and idle steps (powerlaw costs)."""
+    ok = (fab["throughput_ops_per_kstep"] > single["throughput_ops_per_kstep"]
+          and fab["idle_steps"] < single["idle_steps"])
+    msg = (f"sharded+steal thr {fab['throughput_ops_per_kstep']:.3f} vs "
+           f"single {single['throughput_ops_per_kstep']:.3f}, idle "
+           f"{int(fab['idle_steps'])} vs {int(single['idle_steps'])} -> "
+           f"{'PASS' if ok else 'FAIL'}")
+    return ok, msg
+
+
+def priority_acceptance(strict: Dict, row: Dict) -> Tuple[bool, str]:
+    """Headline G-PQ criterion: a starvation-free policy must match or
+    beat strict on throughput with strictly lower normal-class max wait."""
+    ok = (row["throughput_ops_per_kstep"]
+          >= strict["throughput_ops_per_kstep"]
+          and row["normal_max_wait"] < strict["normal_max_wait"])
+    msg = (f"thr {row['throughput_ops_per_kstep']:.3f} vs strict "
+           f"{strict['throughput_ops_per_kstep']:.3f}, normal max wait "
+           f"{int(row['normal_max_wait'])} vs "
+           f"{int(strict['normal_max_wait'])} -> "
+           f"{'PASS' if ok else 'FAIL'}")
+    return ok, msg
+
+
+def _make_policy(name: str):
+    """Bench-tuned policy instances: weighted 6:1 shares; EDF with zero
+    urgent slack and a 4096-step normal slack (≈ the urgent inter-burst
+    horizon, so normal tasks age to the front within a few bursts)."""
+    from repro.sched.policy import EDFPolicy, StrictPolicy, WeightedPolicy
+    return {"strict": lambda: StrictPolicy(),
+            "weighted": lambda: WeightedPolicy(weights=(6, 1), scale=96),
+            "edf": lambda: EDFPolicy(slack=(0, 4096))}[name]()
+
+
+def run_priority_scenario(policy: str, *, workers: int = 8, sources: int = 8,
+                          n_normal: int = 64, bursts: int = 16,
+                          burst: int = 8, gap: int = 500, shards: int = 4,
+                          capacity_per_shard: int = 16, seed: int = 0,
+                          sched_policy: str = "gang") -> Dict[str, float]:
+    """Powerlaw + bursty mixed-class workload on the G-PQ PriorityFabric
+    (DESIGN.md § 5.7): heavy-tailed *normal* tasks all pending up front,
+    *heavy urgent* bursts (think priority prefills) arriving steadily on a
+    rotating affinity shard across the whole horizon, released by parallel
+    open-loop sources against deliberately tight shard capacity.  A policy
+    that starves the normal class (strict) keeps shards full of aged
+    normal tasks and serializes the heavy urgent work head-of-line, so
+    starvation shows up as *both* a normal-class max-wait blowup and a
+    throughput loss (admission backpressure + slot-turnover stalls)."""
+    fabric = PriorityFabric(policy=_make_policy(policy), shards=shards,
+                            capacity_per_shard=capacity_per_shard,
+                            num_threads=workers + sources)
+    rt = TaskRuntime(fabric, lambda rec: [],
+                     ExecutorConfig(workers=workers, sources=sources,
+                                    policy=sched_policy, seed=seed))
+    rng = np.random.default_rng(seed)
+    costs = np.minimum((rng.pareto(1.2, n_normal) * 8 + 2).astype(int), 48)
+    for i in range(n_normal):
+        rt.add_task(("n", i), priority=1, cost=int(costs[i]), at_step=0)
+    for b in range(bursts):
+        for k in range(burst):
+            rt.add_task(("u", b * burst + k), priority=0,
+                        cost=int(rng.integers(32, 97)),
+                        at_step=100 + b * gap, affinity=b % shards)
+    m = rt.run()
+    m["tasks"] = len(rt.executed)
+    return m
+
+
+def priority_main(out=sys.stdout, *, workers: int = 8, bursts: int = 16,
+                  seed: int = 0) -> List[Dict]:
+    """Policy comparison rows + acceptance: EDF and weighted must match or
+    beat strict on throughput while strictly reducing normal-class
+    starvation (max wait)."""
+    print("bench,scenario,policy,workers,tasks,throughput_ops_per_kstep,"
+          "idle_steps,steals,steal_rate,load_imbalance,normal_max_wait,"
+          "normal_p99_wait,urgent_max_wait,urgent_p99_wait,total_steps",
+          file=out)
+    rows: List[Dict] = []
+    for policy in POLICIES:
+        m = run_priority_scenario(policy, workers=workers, bursts=bursts,
+                                  seed=seed)
+        row = {
+            "bench": "priority", "scenario": "powerlaw+bursty",
+            "policy": policy, "workers": workers, "tasks": int(m["tasks"]),
+            "throughput_ops_per_kstep":
+                round(m["throughput_ops_per_kstep"], 3),
+            "idle_steps": int(m["idle_steps"]),
+            "steals": int(m["steals"]),
+            "steal_rate": round(m["steal_rate"], 3),
+            "load_imbalance": round(m["load_imbalance"], 3),
+            "normal_max_wait": int(m["normal_max_wait"]),
+            "normal_p99_wait": int(m["normal_p99_wait"]),
+            "urgent_max_wait": int(m["urgent_max_wait"]),
+            "urgent_p99_wait": int(m["urgent_p99_wait"]),
+            "total_steps": int(m["total_steps"]),
+        }
+        rows.append(row)
+        print("priority,{scenario},{policy},{workers},{tasks},"
+              "{throughput_ops_per_kstep},{idle_steps},{steals},"
+              "{steal_rate},{load_imbalance},{normal_max_wait},"
+              "{normal_p99_wait},{urgent_max_wait},{urgent_p99_wait},"
+              "{total_steps}".format(**row), file=out)
+        out.flush()
+    strict = next(r for r in rows if r["policy"] == "strict")
+    for policy in ("weighted", "edf"):
+        r = next(x for x in rows if x["policy"] == policy)
+        _, msg = priority_acceptance(strict, r)
+        print(f"# powerlaw+bursty/{policy}: {msg}", file=out)
+    return rows
 
 
 def main(out=sys.stdout, *, workers: int = 32, n_tasks: int = 256,
@@ -115,16 +232,38 @@ def main(out=sys.stdout, *, workers: int = 32, n_tasks: int = 256,
                     and r["queue"] == algo and r["config"] == "single")
         st = next(r for r in rows if r["scenario"] == "powerlaw"
                   and r["queue"] == algo and r["config"] == "sharded+steal")
-        verdict = (st["throughput_ops_per_kstep"]
-                   > base["throughput_ops_per_kstep"]
-                   and st["idle_steps"] < base["idle_steps"])
-        print(f"# powerlaw/{algo}: sharded+steal thr "
-              f"{st['throughput_ops_per_kstep']} vs single "
-              f"{base['throughput_ops_per_kstep']}, idle {st['idle_steps']} "
-              f"vs {base['idle_steps']} -> "
-              f"{'PASS' if verdict else 'FAIL'}", file=out)
+        _, msg = fifo_acceptance(base, st)
+        print(f"# powerlaw/{algo}: {msg}", file=out)
     return rows
 
 
+def smoke() -> int:
+    """CI-sized acceptance gate: both headline comparisons must PASS.
+    Returns a process exit code (0 = all acceptance criteria hold)."""
+    failures = 0
+    single = run_scenario("powerlaw", "glfq", "single", 1, False,
+                          workers=32, n_tasks=96)
+    fab = run_scenario("powerlaw", "glfq", "sharded+steal", 4, True,
+                       workers=32, n_tasks=96)
+    ok, msg = fifo_acceptance(single, fab)
+    print(f"# smoke powerlaw/glfq: {msg}")
+    failures += not ok
+    strict = run_priority_scenario("strict", bursts=12)
+    for policy in ("weighted", "edf"):
+        m = run_priority_scenario(policy, bursts=12)
+        ok, msg = priority_acceptance(strict, m)
+        print(f"# smoke powerlaw+bursty/{policy}: {msg}")
+        failures += not ok
+    return 1 if failures else 0
+
+
 if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="acceptance gate only (exit 1 on FAIL)")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
     main()
+    priority_main()

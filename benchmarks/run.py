@@ -3,17 +3,28 @@
     PYTHONPATH=src python -m benchmarks.run [--quick] [--json results.json]
 
 Sections: Fig. 4 throughput, Fig. 5 per-op profiling (+ Fig. 1 ablation),
-Table IV/Fig. 6 BFS, Fig. 7 ray tracing, kernel micro-benchmarks, and the
-task-runtime fabric comparison (bench_runtime).
+Table IV/Fig. 6 BFS, Fig. 7 ray tracing, kernel micro-benchmarks, the
+task-runtime fabric comparison (bench_runtime), and the G-PQ priority
+policy comparison (bench_runtime.priority_main).
 
 CSV lines go to stdout: ``name,...`` per row.  With ``--json`` the same
 rows are parsed into ``{section: [row dicts]}`` and written to the given
 path (``-`` = stdout) — the machine-readable trajectory format.
+
+``--emit-trajectory`` additionally writes ``BENCH_<n>.json`` at the repo
+root (n auto-increments over existing ``BENCH_*.json``): the scheduling
+perf trajectory — throughput / idle / steal / imbalance / starvation rows
+plus config and git-rev metadata — one snapshot per PR, so regressions
+are visible across the series.
 """
 
 import argparse
+import glob
 import io
 import json
+import os
+import re
+import subprocess
 import sys
 
 
@@ -58,6 +69,52 @@ def _parse_csv(text: str):
     return rows
 
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Trajectory rows keep only scheduling-relevant metrics; everything else in
+# a row (configs, counts) rides along untouched.
+_TRAJECTORY_SECTIONS = ("runtime", "priority")
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def _next_bench_id() -> int:
+    ids = [int(m.group(1)) for p in glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json"))
+           if (m := re.match(r"BENCH_(\d+)\.json$", os.path.basename(p)))]
+    return max(ids, default=1) + 1
+
+
+def emit_trajectory(results: dict, *, quick: bool, bench_id=None) -> str:
+    """Write BENCH_<n>.json at the repo root: the perf-trajectory snapshot
+    (scheduling sections + config + git rev)."""
+    n = _next_bench_id() if bench_id is None else int(bench_id)
+    sections = {k: v for k, v in results.items() if k in _TRAJECTORY_SECTIONS}
+    if not sections:
+        raise ValueError(
+            f"no scheduling sections in results (need one of "
+            f"{_TRAJECTORY_SECTIONS}); refusing to burn trajectory id {n} "
+            f"on a heterogeneous snapshot")
+    payload = {
+        "bench_id": n,
+        "git_rev": _git_rev(),
+        "config": {"quick": quick,
+                   "sections": sorted(results)},
+        "sections": sections,
+    }
+    path = os.path.join(REPO_ROOT, f"BENCH_{n}.json")
+    with open(path, "w") as f:
+        f.write(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    print(f"# trajectory -> {path}")
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -65,9 +122,19 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also emit {section: [rows]} JSON to PATH ('-' = stdout)")
     ap.add_argument("--section", default=None,
-                    choices=["throughput", "profiling", "bfs", "raytrace",
-                             "kernels", "runtime", None])
+                    help="comma-separated subset of: throughput, profiling, "
+                         "bfs, raytrace, kernels, runtime, priority")
+    ap.add_argument("--emit-trajectory", nargs="?", const="auto",
+                    default=None, metavar="N",
+                    help="write BENCH_<n>.json at the repo root (n "
+                         "auto-increments unless given)")
     args = ap.parse_args()
+    if args.emit_trajectory not in (None, "auto"):
+        try:                       # validate before the sweep, not after
+            args.emit_trajectory = int(args.emit_trajectory)
+        except ValueError:
+            ap.error(f"--emit-trajectory expects an integer, got "
+                     f"{args.emit_trajectory!r}")
     from . import (bench_bfs, bench_kernels, bench_profiling,
                    bench_raytrace, bench_runtime, bench_throughput)
 
@@ -75,6 +142,7 @@ def main() -> None:
     kw_prof = dict(threads_list=(8, 32), steps=40_000) if args.quick else {}
     kw_rt = (dict(algos=("glfq",), n_tasks=96) if args.quick
              else dict(algos=("glfq", "gwfq", "gwfq-ymc", "sfq")))
+    kw_pri = dict(bursts=12) if args.quick else {}
     sections = {
         "throughput": lambda out: bench_throughput.main(out, **kw_thr),
         "profiling": lambda out: bench_profiling.main(out, **kw_prof),
@@ -82,8 +150,19 @@ def main() -> None:
         "raytrace": lambda out: bench_raytrace.main(out),
         "kernels": lambda out: bench_kernels.main(out),
         "runtime": lambda out: bench_runtime.main(out, **kw_rt),
+        "priority": lambda out: bench_runtime.priority_main(out, **kw_pri),
     }
-    todo = [args.section] if args.section else list(sections)
+    if args.section:
+        todo = [s.strip() for s in args.section.split(",") if s.strip()]
+        unknown = [s for s in todo if s not in sections]
+        if unknown:
+            ap.error(f"unknown section(s) {unknown}; pick from {list(sections)}")
+    else:
+        todo = list(sections)
+    if (args.emit_trajectory is not None
+            and not any(s in _TRAJECTORY_SECTIONS for s in todo)):
+        ap.error(f"--emit-trajectory needs at least one scheduling section "
+                 f"({', '.join(_TRAJECTORY_SECTIONS)}) in the run")
     if args.json and args.json != "-":
         with open(args.json, "a"):     # fail on an unwritable path up front,
             pass                       # not after the whole sweep has run
@@ -102,6 +181,10 @@ def main() -> None:
             with open(args.json, "w") as f:
                 f.write(payload + "\n")
             print(f"# json -> {args.json}")
+    if args.emit_trajectory is not None:
+        emit_trajectory(results, quick=args.quick,
+                        bench_id=None if args.emit_trajectory == "auto"
+                        else args.emit_trajectory)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,108 @@
+"""G-PQ priority scheduling demo (DESIGN.md § 5): EDF admission vs strict
+lanes in the serving engine, and the policy comparison on the runtime
+fabric.
+
+Part 1 — the serving engine's priority-inversion fix.  Legacy strict-lane
+admission parks page-stalled requests engine-side and retries them *ahead
+of the pool every tick*: one big normal request stuck waiting for KV pages
+head-of-line-blocks the whole admission path, so urgent requests queue
+behind it — urgent p99 latency inflates.  EDF admission re-enqueues the
+stalled request at its original deadline instead: fresh urgent requests
+(earlier deadlines) cut ahead, while the stalled request ages toward the
+front as new arrivals take later deadlines — urgent p99 drops, and the
+normal request still completes (no starvation).
+
+Part 2 — strict vs weighted vs EDF on the PriorityFabric under sustained
+urgent bursts (the bench scenario): strict starves the normal class;
+weighted/EDF bound its wait at equal-or-better throughput.
+
+    PYTHONPATH=src python examples/priority_demo.py
+"""
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+
+# -- Part 1: EDF admission vs strict lanes ------------------------------------
+
+cfg = get_config("h2o-danube-1.8b").reduced()
+params = init_params(cfg)
+
+
+def run_engine_latencies(admission: str):
+    """Two big normal requests land first (5 KV pages each — the second
+    must page-stall); a stream of small urgent requests arrives a few
+    ticks later, while the stall is live.  Urgent latency is measured in
+    ticks from each urgent request's submission."""
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_slots=2, page_size=16, num_pages=8, max_seq=128,
+        request_ring_capacity=64, admission=admission, normal_slack=64))
+    rng = np.random.default_rng(0)
+    normals = [Request(rid=rid,
+                       prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                       max_new_tokens=72, priority=1)
+               for rid in (900, 901)]
+    urgents = [Request(rid=rid,
+                       prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                       max_new_tokens=4, priority=0)
+               for rid in range(12)]
+    for r in normals:
+        assert eng.submit(r)
+    submit_tick = {}
+    done_tick = {}
+    pending = list(urgents)
+    for tick in range(1, 6000):
+        if tick == 4 and pending:   # urgent stream arrives mid-stall
+            for r in pending:
+                assert eng.submit(r)
+                submit_tick[r.rid] = tick
+            pending = []
+        eng.step()
+        for r in normals + urgents:
+            if r.done and r.rid not in done_tick:
+                done_tick[r.rid] = tick
+        if (not pending and not any(eng.slots) and not eng.stalled
+                and eng.requests.empty()):
+            break
+    urgent = sorted(done_tick[r.rid] - submit_tick[r.rid] for r in urgents)
+    normal_done = max(done_tick[r.rid] for r in normals)
+    p99 = urgent[min(len(urgent) - 1, int(0.99 * len(urgent)))]
+    return {"urgent_p50": urgent[len(urgent) // 2], "urgent_p99": p99,
+            "normal_done": normal_done, "stalls": eng.metrics["page_stalls"],
+            "completed": eng.metrics["completed"]}
+
+
+print("Part 1 — serving admission: page-stalled normal request vs urgent "
+      "stream (2 slots, 8 KV pages)\n")
+results = {}
+for mode in ("lanes", "edf"):
+    r = run_engine_latencies(mode)
+    results[mode] = r
+    print(f"  {mode:5s}  urgent p50={r['urgent_p50']:5d}  "
+          f"p99={r['urgent_p99']:5d} ticks   normal done by {r['normal_done']:5d}  "
+          f"page_stalls={r['stalls']:4d}  completed={r['completed']}")
+speedup = results["lanes"]["urgent_p99"] / max(results["edf"]["urgent_p99"], 1)
+print(f"\n  EDF admission cuts urgent p99 latency {speedup:.1f}x "
+      f"(stalled normal no longer head-of-line-blocks admission)\n")
+
+# -- Part 2: fabric policies under sustained urgent bursts --------------------
+
+from benchmarks.bench_runtime import run_priority_scenario  # noqa: E402
+
+print("Part 2 — PriorityFabric policies, powerlaw normal + sustained "
+      "urgent bursts (8 workers, tight capacity)\n")
+for policy in ("strict", "weighted", "edf"):
+    m = run_priority_scenario(policy, bursts=12)
+    print(f"  {policy:9s} thr={m['throughput_ops_per_kstep']:7.3f} ops/kstep  "
+          f"normal max wait={m['normal_max_wait']:7.0f}  "
+          f"urgent p99 wait={m['urgent_p99_wait']:7.0f}  "
+          f"steal_rate={m['steal_rate']:.2f}")
+print("\n  strict starves the normal class; weighted/EDF bound its wait at "
+      "equal-or-better throughput")

@@ -6,9 +6,10 @@ and in interpret mode on CPU (how the test suite validates them)."""
 
 from . import ops, ref
 from .frontier import frontier_expand
+from .heap_batch import heap_apply
 from .moe_route import expert_tickets, moe_route
 from .ring_slots import ring_dequeue, ring_enqueue
 from .wavefaa import LANES, wavefaa
 
 __all__ = ["ops", "ref", "wavefaa", "LANES", "ring_enqueue", "ring_dequeue",
-           "frontier_expand", "expert_tickets", "moe_route"]
+           "frontier_expand", "expert_tickets", "heap_apply", "moe_route"]

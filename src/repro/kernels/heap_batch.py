@@ -1,0 +1,150 @@
+"""Batched d-ary heap operations as a Pallas TPU kernel (DESIGN.md § 5.6).
+
+The device face of G-PQ, mirroring ``ring_slots.py``: the heap's packed
+node words are unpacked into two parallel int32 field planes (key / val —
+TPU-native 32-bit lanes) living in VMEM, and one kernel invocation applies
+a *ticket-ordered batch* of operations — the wave's announce-ring drain
+plus its delete-mins — in batch-index order, which is the linearization
+order (the deterministic analogue of the latch-combined drain).
+
+Each op is ``(opcode, key, val)``: opcode 0 = INSERT (sift-up, rejected
+when full), 1 = DELETE-MIN (root out, last node sifts down, rejected when
+empty), anything else = inactive lane padding.  Sifts are fixed-trip
+``fori_loop``s over the heap's static depth with a moving flag — no
+data-dependent control flow, so the kernel compiles to straight-line TPU
+code.  The heap size rides in SMEM alongside the op batch.
+
+VMEM budget: 2 planes × 2^cap_log2 × 4 B plus the batch — a 64Ki-node
+heap costs 512 KiB, comfortably inside the 16 MiB/core budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+KEY_INF = 2 ** 31 - 1    # empty-slot / inactive-lane key sentinel
+
+OP_INSERT, OP_DELMIN, OP_NOP = 0, 1, -1
+
+
+def _heap_kernel(cap_log2, arity_log2, size_ref, ops_ref, okeys_ref,
+                 ovals_ref, keys_in, vals_in, keys_ref, vals_ref,
+                 outk_ref, outv_ref, ok_ref, size_out_ref):
+    cap = 1 << cap_log2
+    d = 1 << arity_log2
+    # static depth: levels needed to cover cap nodes with arity d
+    max_depth = -(-cap_log2 // arity_log2) + 1
+    keys_ref[...] = keys_in[...]
+    vals_ref[...] = vals_in[...]
+    outk_ref[...] = jnp.full_like(outk_ref, KEY_INF)
+    outv_ref[...] = jnp.full_like(outv_ref, -1)
+    ok_ref[...] = jnp.zeros_like(ok_ref)
+    b = ops_ref.shape[1]
+
+    def body(i, size):
+        op = ops_ref[0, i]
+        key = okeys_ref[0, i]
+        val = ovals_ref[0, i]
+
+        # ---- INSERT: hole starts at `size`, parents move down ----------
+        do_ins = (op == OP_INSERT) & (size < cap)
+
+        def up(_, carry):
+            j, moving = carry
+            p = jnp.where(j > 0, (j - 1) >> arity_log2, 0)
+            pk = keys_ref[0, p]
+            cond = moving & (j > 0) & (pk > key)
+            jc = jnp.where(cond, j, 0)          # clamp for the masked store
+            keys_ref[0, jc] = jnp.where(cond, pk, keys_ref[0, jc])
+            vals_ref[0, jc] = jnp.where(cond, vals_ref[0, p], vals_ref[0, jc])
+            return (jnp.where(cond, p, j), moving & cond)
+
+        j0 = jnp.where(do_ins, size, 0)
+        jf, _ = jax.lax.fori_loop(0, max_depth, up, (j0, do_ins))
+        keys_ref[0, jf] = jnp.where(do_ins, key, keys_ref[0, jf])
+        vals_ref[0, jf] = jnp.where(do_ins, val, vals_ref[0, jf])
+
+        # ---- DELETE-MIN: root out, last node sifts down into the hole --
+        do_pop = (op == OP_DELMIN) & (size > 0)
+        outk_ref[0, i] = jnp.where(do_pop, keys_ref[0, 0], KEY_INF)
+        outv_ref[0, i] = jnp.where(do_pop, vals_ref[0, 0], -1)
+        nsize = jnp.where(do_pop, size - 1, size)
+        lpos = jnp.where(do_pop & (size > 0), size - 1, 0)
+        lk = keys_ref[0, lpos]
+        lv = vals_ref[0, lpos]
+
+        def down(_, carry):
+            j, moving = carry
+            base = (j << arity_log2) + 1
+
+            def child(c, acc):
+                bk, bj = acc
+                cj = base + c
+                in_r = cj < nsize
+                ck = jnp.where(in_r, keys_ref[0, jnp.where(in_r, cj, 0)],
+                               KEY_INF)
+                better = ck < bk
+                return (jnp.where(better, ck, bk), jnp.where(better, cj, bj))
+
+            bk, bj = jax.lax.fori_loop(0, d, child, (KEY_INF, -1))
+            cond = moving & (bj >= 0) & (bk < lk)
+            jc = jnp.where(cond, j, 0)
+            keys_ref[0, jc] = jnp.where(cond, bk, keys_ref[0, jc])
+            vals_ref[0, jc] = jnp.where(
+                cond, vals_ref[0, jnp.where(cond, bj, 0)], vals_ref[0, jc])
+            return (jnp.where(cond, bj, j), moving & cond)
+
+        moving0 = do_pop & (nsize > 0)
+        jf2, _ = jax.lax.fori_loop(0, max_depth, down, (0, moving0))
+        place = jnp.where(moving0, jf2, 0)
+        keys_ref[0, place] = jnp.where(moving0, lk, keys_ref[0, place])
+        vals_ref[0, place] = jnp.where(moving0, lv, vals_ref[0, place])
+        # scrub the vacated tail slot so stale keys can't resurface
+        keys_ref[0, lpos] = jnp.where(do_pop, KEY_INF, keys_ref[0, lpos])
+        vals_ref[0, lpos] = jnp.where(do_pop, -1, vals_ref[0, lpos])
+
+        ok_ref[0, i] = (do_ins | do_pop).astype(jnp.int32)
+        return jnp.where(do_ins, size + 1, nsize)
+
+    final = jax.lax.fori_loop(0, b, body, size_ref[0])
+    size_out_ref[0, 0] = final
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap_log2", "arity_log2", "interpret"))
+def heap_apply(keys, vals, size, ops, opkeys, opvals, *, cap_log2: int,
+               arity_log2: int = 2, interpret: bool = True):
+    """Apply a batch of heap ops in batch order.  ``keys``/``vals`` are
+    (cap,) int32 planes (empty slots KEY_INF / -1); ``size`` a scalar
+    int32; ``ops``/``opkeys``/``opvals`` are (B,) int32.  Returns
+    ``(keys, vals, new_size, out_keys, out_vals, ok)`` where ``out_*[i]``
+    carry delete-min results and ``ok[i]`` certifies op i applied."""
+    cap = 1 << cap_log2
+    b = ops.shape[0]
+    kern = functools.partial(_heap_kernel, cap_log2, arity_log2)
+    outs = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+        ] + [pl.BlockSpec((1, cap), lambda i: (0, 0))] * 2,
+        out_specs=[pl.BlockSpec((1, cap), lambda i: (0, 0))] * 2
+        + [pl.BlockSpec((1, b), lambda i: (0, 0))] * 3
+        + [pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, cap), jnp.int32)] * 2
+        + [jax.ShapeDtypeStruct((1, b), jnp.int32)] * 3
+        + [jax.ShapeDtypeStruct((1, 1), jnp.int32)],
+        interpret=interpret,
+    )(size.reshape(1), ops.reshape(1, b), opkeys.reshape(1, b),
+      opvals.reshape(1, b), keys.reshape(1, cap), vals.reshape(1, cap))
+    k, v, outk, outv, ok, nsize = outs
+    return (k.reshape(cap), v.reshape(cap), nsize.reshape(())[()],
+            outk.reshape(b), outv.reshape(b), ok.reshape(b).astype(bool))

@@ -12,12 +12,14 @@ Two faces over the same queue core:
 """
 
 from .executor import Arrival, ExecutorConfig, Handler, TaskRuntime
-from .rounds import RingState, RoundRunner, mesh_task_round, ring_init
-from .taskpool import (FabricMetrics, HostTaskPool, TaskFabric, TaskRecord,
-                       TaskSpec)
+from .rounds import (HeapState, PriorityRoundRunner, RingState, RoundRunner,
+                     heap_init, mesh_task_round, ring_init)
+from .taskpool import (FabricMetrics, HostTaskPool, PriorityFabric,
+                       TaskFabric, TaskRecord, TaskSpec)
 
 __all__ = [
     "Arrival", "ExecutorConfig", "FabricMetrics", "Handler", "HostTaskPool",
-    "RingState", "RoundRunner", "TaskFabric", "TaskRecord", "TaskSpec",
-    "TaskRuntime", "mesh_task_round", "ring_init",
+    "HeapState", "PriorityFabric", "PriorityRoundRunner", "RingState",
+    "RoundRunner", "TaskFabric", "TaskRecord", "TaskSpec", "TaskRuntime",
+    "heap_init", "mesh_task_round", "ring_init",
 ]

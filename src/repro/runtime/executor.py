@@ -36,6 +36,7 @@ Handler = Callable[[TaskRecord], Optional[Iterable[TaskSpec]]]
 @dataclass
 class ExecutorConfig:
     workers: int = 32
+    sources: int = 1                # parallel arrival-release threads
     wave_size: int = 8
     policy: str = "gang"            # random | gang | rr
     seed: int = 0
@@ -69,21 +70,33 @@ class TaskRuntime:
     # -- workload construction ----------------------------------------------
 
     def add_task(self, payload: Any, *, priority: int = 1, cost: int = 0,
-                 at_step: int = 0, affinity: Optional[int] = None) -> None:
+                 at_step: int = 0, affinity: Optional[int] = None,
+                 deadline: Optional[int] = None) -> None:
+        # Fail fast at workload-construction time: register() would raise
+        # the same ValueError, but only mid-simulation inside the source
+        # thread, after arbitrary simulated work.
+        self.fabric.validate_priority(priority)
+        self.fabric.validate_deadline(deadline)
         self.arrivals.append(
-            Arrival(at_step, TaskSpec(payload, priority, cost), affinity))
+            Arrival(at_step, TaskSpec(payload, priority, cost, deadline),
+                    affinity))
 
     # -- thread bodies -------------------------------------------------------
 
-    def _source_body(self, ctx, tid):
+    def _source_body(self, ctx, tid, lane: int = 0):
         """Release scheduled arrivals at their step; OUTSTANDING was
-        pre-charged with the full schedule, so no increment here."""
-        pending = sorted(self.arrivals, key=lambda a: a.at_step)
+        pre-charged with the full schedule, so no increment here.  With
+        ``cfg.sources > 1`` the schedule is striped across that many
+        source threads, so one arrival stalled on a full fabric (admission
+        backpressure) does not head-of-line-block the rest of the open
+        loop."""
+        pending = sorted(self.arrivals,
+                         key=lambda a: a.at_step)[lane::self.cfg.sources]
         for a in pending:
             while self._sched.step_count < a.at_step:
                 yield from ctx.step()
             rec = self.fabric.register(a.spec.payload, a.spec.priority,
-                                       a.spec.cost)
+                                       a.spec.cost, a.spec.deadline)
             shard = (a.affinity % self.fabric.shards
                      if a.affinity is not None else self.fabric.spray_shard())
             yield from self.fabric.enqueue_task(ctx, tid, rec, shard=shard)
@@ -124,7 +137,8 @@ class TaskRuntime:
         self._sched = sched
         self.fabric.init(mem, sched, initial_outstanding=len(self.arrivals))
         if self.arrivals:
-            sched.spawn(self._source_body)
+            for lane in range(min(cfg.sources, len(self.arrivals))):
+                sched.spawn(self._source_body, lane)
         for _ in range(cfg.workers):
             sched.spawn(self._worker_body)
         completed = sched.run(cfg.max_steps)
@@ -143,6 +157,11 @@ class TaskRuntime:
             "load_imbalance": self.fabric.metrics.load_imbalance(),
             "worker_imbalance": (max(execd) / mean_exec) if mean_exec else 1.0,
         })
+        # Starvation metrics (per-class queue waits) when the fabric
+        # tracks them — both TaskFabric and PriorityFabric do.
+        wait_stats = getattr(self.fabric, "wait_stats", None)
+        if wait_stats is not None:
+            m.update(wait_stats())
         return m
 
     @property

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.distqueue import dist_dequeue_round, dist_enqueue_round
+from ..kernels.heap_batch import KEY_INF as HEAP_KEY_INF, heap_apply
 from ..kernels.ring_slots import ring_dequeue, ring_enqueue
 
 IDX_BOT = 2 ** 31 - 1           # ⊥ (⊥_c = IDX_BOT - 1); payloads must be smaller
@@ -135,6 +136,123 @@ class RoundRunner:
         self.stats = {"rounds": rounds, "processed": processed,
                       "spawned": spawned, "max_occupancy": max_occ,
                       "drained": int(st.occupancy == 0)}
+        return acc, st
+
+
+# ---------------------------------------------------------------------------
+# Priority rounds on the Pallas heap (DESIGN.md § 5.6)
+# ---------------------------------------------------------------------------
+
+
+class HeapState(NamedTuple):
+    """Field planes of the device heap plus the host-side size."""
+    keys: jax.Array
+    vals: jax.Array
+    size: int
+
+    @property
+    def occupancy(self) -> int:
+        return self.size
+
+
+def heap_init(capacity_log2: int) -> HeapState:
+    cap = 1 << capacity_log2
+    return HeapState(
+        keys=jnp.full((cap,), HEAP_KEY_INF, jnp.int32),
+        vals=jnp.full((cap,), -1, jnp.int32),
+        size=0,
+    )
+
+
+# PriorityStepFn: (acc, keys (B,), vals (B,), valid (B,))
+#   -> (acc, child_keys (B,F), child_vals (B,F), child_mask (B,F))
+PriorityStepFn = Callable[
+    [Any, jax.Array, jax.Array, jax.Array],
+    Tuple[Any, jax.Array, jax.Array, jax.Array]]
+
+
+class PriorityRoundRunner:
+    """``RoundRunner``'s priority twin: drives ``step_fn`` to quiescence
+    through the Pallas heap kernel.  One round pops the ``batch`` smallest
+    (key, val) pairs (EDF: earliest deadlines), runs the jitted step, and
+    inserts the children it emits in row-major order — every kernel batch
+    is applied in batch-index order, so the whole run is bit-deterministic
+    exactly like the FIFO rounds."""
+
+    def __init__(self, step_fn: PriorityStepFn, *, capacity_log2: int = 10,
+                 batch: int = 64, arity_log2: int = 2,
+                 interpret: bool = True) -> None:
+        self.step_fn = jax.jit(step_fn)
+        self.capacity_log2 = capacity_log2
+        self.capacity = 1 << capacity_log2
+        self.batch = batch
+        self.arity_log2 = arity_log2
+        self.interpret = interpret
+        self.stats: Dict[str, int] = {}
+
+    def _apply(self, st: HeapState, ops: np.ndarray, keys: np.ndarray,
+               vals: np.ndarray):
+        k, v, size, outk, outv, ok = heap_apply(
+            st.keys, st.vals, jnp.asarray(st.size, jnp.int32),
+            jnp.asarray(ops), jnp.asarray(keys), jnp.asarray(vals),
+            cap_log2=self.capacity_log2, arity_log2=self.arity_log2,
+            interpret=self.interpret)
+        return HeapState(k, v, int(size)), outk, outv, ok
+
+    def _ins_chunk(self, st: HeapState, ckeys: np.ndarray,
+                   cvals: np.ndarray) -> HeapState:
+        b, n = self.batch, len(ckeys)
+        assert n <= b
+        if st.size + n > self.capacity:
+            raise RuntimeError(
+                f"heap overflow: size {st.size} + {n} children exceeds "
+                f"capacity {self.capacity} (raise capacity_log2 or lower "
+                f"the fanout)")
+        ops = np.full(b, -1, np.int32)
+        ops[:n] = 0
+        keys = np.full(b, HEAP_KEY_INF, np.int32)
+        keys[:n] = ckeys
+        vals = np.full(b, -1, np.int32)
+        vals[:n] = cvals
+        st, _, _, ok = self._apply(st, ops, keys, vals)
+        assert bool(ok[:n].all()), "capacity was checked: inserts cannot miss"
+        return st
+
+    def run(self, initial_keys: np.ndarray, initial_vals: np.ndarray,
+            acc: Any = None, max_rounds: int = 10_000
+            ) -> Tuple[Any, HeapState]:
+        st = heap_init(self.capacity_log2)
+        ik = np.asarray(initial_keys, np.int32)
+        iv = np.asarray(initial_vals, np.int32)
+        assert ik.shape == iv.shape
+        for i in range(0, len(ik), self.batch):
+            st = self._ins_chunk(st, ik[i:i + self.batch],
+                                 iv[i:i + self.batch])
+        rounds = processed = spawned = 0
+        max_occ = st.size
+        while st.size > 0 and rounds < max_rounds:
+            k = min(self.batch, st.size)
+            ops = np.full(self.batch, -1, np.int32)
+            ops[:k] = 1
+            pad = np.full(self.batch, HEAP_KEY_INF, np.int32)
+            st, outk, outv, ok = self._apply(st, ops, pad, pad)
+            assert bool(ok[:k].all()), "size was checked: pops cannot miss"
+            acc, ckeys, cvals, cmask = self.step_fn(acc, outk, outv, ok)
+            ck = np.asarray(ckeys).reshape(-1)
+            cv = np.asarray(cvals).reshape(-1)
+            cm = np.broadcast_to(np.asarray(cmask).astype(bool),
+                                 np.asarray(ckeys).shape).reshape(-1)
+            children_k, children_v = ck[cm], cv[cm]   # row-major order
+            for i in range(0, len(children_k), self.batch):
+                st = self._ins_chunk(st, children_k[i:i + self.batch],
+                                     children_v[i:i + self.batch])
+            rounds += 1
+            processed += k
+            spawned += len(children_k)
+            max_occ = max(max_occ, st.size)
+        self.stats = {"rounds": rounds, "processed": processed,
+                      "spawned": spawned, "max_occupancy": max_occ,
+                      "drained": int(st.size == 0)}
         return acc, st
 
 

@@ -42,6 +42,8 @@ from ..core import QUEUE_CLASSES
 from ..core.base import VAL_MASK
 from ..core.sim import Ctx, DEQ, ENQ, HistoryEvent, Scheduler
 from ..data.pipeline import HostRing
+from ..sched.gpq import GPQ
+from ..sched.policy import make_policy
 
 OUTSTANDING = "rt_outstanding"   # quiescence counter (tasks queued or running)
 HINTS = "rt_hints"               # per-ring occupancy hints (poll gating)
@@ -52,8 +54,9 @@ NEG1 = (1 << 64) - 1             # two's-complement -1 for FAA decrements
 class TaskSpec:
     """What a handler returns to spawn a child task."""
     payload: Any
-    priority: int = 1            # 0 = urgent lane, 1 = normal lane
+    priority: int = 1            # 0 = urgent class, 1 = normal class
     cost: int = 0                # simulated compute steps to execute
+    deadline: Optional[int] = None   # absolute step deadline (EDF policies)
 
 
 @dataclass
@@ -62,6 +65,10 @@ class TaskRecord:
     payload: Any
     priority: int
     cost: int
+    deadline: Optional[int] = None
+    key: int = 0                 # policy-computed scheduling key (G-PQ min-key)
+    enq_step: int = -1           # step of the successful queue install
+    exec_step: int = -1          # step a worker acquired it for execution
 
 
 @dataclass
@@ -83,7 +90,86 @@ class FabricMetrics:
         return max(counts) / mean if mean else 1.0
 
 
-class TaskFabric:
+class _FabricBase:
+    """State and lifecycle shared by ``TaskFabric`` and ``PriorityFabric``:
+    placement helpers (wave-affinity homes + round-robin spray), the host
+    task table, dynamic-spawn / OUTSTANDING quiescence accounting, and the
+    per-class queue-wait (starvation) metrics.  Subclasses supply
+    ``register``, ``enqueue_task``, ``acquire``, and ``validate_priority``."""
+
+    def __init__(self, *, shards: int, wave_size: int) -> None:
+        self.shards = shards
+        self.wave_size = wave_size
+        self.tasks: List[TaskRecord] = []
+        self.metrics = FabricMetrics()
+        self.waits: Dict[int, List[int]] = {}   # priority class -> queue waits
+        self.sched: Optional[Scheduler] = None
+        self._rr = itertools.count()          # round-robin arrival spray
+
+    def validate_priority(self, priority: int) -> int:
+        raise NotImplementedError
+
+    def validate_deadline(self, deadline: Optional[int]) -> Optional[int]:
+        """Fabrics with bounded key encodings override this; the lane
+        fabric ignores deadlines."""
+        return deadline
+
+    # -- placement -----------------------------------------------------------
+
+    def home_shard(self, tid: int) -> int:
+        """Wave-affinity: all lanes of a wave share one home shard."""
+        return (tid // self.wave_size) % self.shards
+
+    def spray_shard(self) -> int:
+        """Round-robin placement for external arrivals."""
+        return next(self._rr) % self.shards
+
+    # -- wait (starvation) accounting ----------------------------------------
+
+    def _record_install(self, rec: TaskRecord) -> None:
+        self.metrics.enqueues += 1
+        if rec.enq_step < 0:
+            rec.enq_step = self.sched.step_count
+
+    def _record_acquire(self, rec: TaskRecord) -> None:
+        rec.exec_step = self.sched.step_count
+        if rec.enq_step >= 0:
+            self.waits.setdefault(rec.priority, []).append(
+                rec.exec_step - rec.enq_step)
+
+    # -- spawn / quiescence (generator ops) ----------------------------------
+
+    def spawn(self, ctx: Ctx, tid: int, spec: TaskSpec,
+              shard: Optional[int] = None):
+        """Register + account + enqueue a dynamically spawned task.  The
+        OUTSTANDING increment happens *before* the install so the counter
+        can never read zero while this task is invisible to consumers."""
+        rec = self.register(spec.payload, spec.priority, spec.cost,
+                            spec.deadline)
+        yield from ctx.faa(OUTSTANDING, 0, 1)
+        yield from self.enqueue_task(ctx, tid, rec, shard)
+        return rec
+
+    def complete(self, ctx: Ctx, tid: int):
+        """Retire a task (decrement OUTSTANDING).  Call only after all of the
+        task's children were spawned — spawn-before-complete is what makes
+        the zero-read a sound quiescence certificate."""
+        yield from ctx.faa(OUTSTANDING, 0, NEG1)
+
+    def outstanding(self, ctx: Ctx, tid: int):
+        v = yield from ctx.load(OUTSTANDING, 0)
+        return v
+
+    # -- reporting -----------------------------------------------------------
+
+    def steal_rate(self) -> float:
+        return self.metrics.steals / max(self.metrics.dequeues, 1)
+
+    def wait_stats(self) -> Dict[str, float]:
+        return _wait_stats(self.waits)
+
+
+class TaskFabric(_FabricBase):
     """K shards × L priority lanes of bounded rings + the host task table."""
 
     def __init__(self, *, algo: str = "glfq", shards: int = 4, lanes: int = 2,
@@ -92,11 +178,10 @@ class TaskFabric:
                  queue_kw: Optional[dict] = None) -> None:
         if algo not in QUEUE_CLASSES:
             raise ValueError(f"unknown algo {algo!r}; pick from {list(QUEUE_CLASSES)}")
+        super().__init__(shards=shards, wave_size=wave_size)
         self.algo = algo
-        self.shards = shards
         self.lanes = lanes
         self.capacity_per_shard = capacity_per_shard
-        self.wave_size = wave_size
         self.steal = steal
         qcls = QUEUE_CLASSES[algo]
         kw = dict(queue_kw or {})
@@ -105,15 +190,18 @@ class TaskFabric:
                             tag=f"rt_{algo}_l{lane}s{s}", **kw)
             for lane in range(lanes) for s in range(shards)
         }
-        self.tasks: List[TaskRecord] = []
-        self.metrics = FabricMetrics()
         self.shard_history: Dict[Tuple[int, int], List[HistoryEvent]] = {
             key: [] for key in self.rings
         }
-        self.sched: Optional[Scheduler] = None
-        self._rr = itertools.count()          # round-robin arrival spray
 
     # -- lifecycle -----------------------------------------------------------
+
+    def validate_priority(self, priority: int) -> int:
+        if not 0 <= priority < self.lanes:
+            raise ValueError(
+                f"priority {priority} out of range [0, {self.lanes}) — "
+                f"lanes are not clamped; pick a valid lane")
+        return priority
 
     def init(self, mem, sched: Scheduler, initial_outstanding: int = 0) -> None:
         self.sched = sched
@@ -130,24 +218,14 @@ class TaskFabric:
         # skipped poll never hides a task for longer than one scan.
         mem.alloc(HINTS, self.lanes * self.shards, fill=0)
 
-    def register(self, payload: Any, priority: int = 1,
-                 cost: int = 0) -> TaskRecord:
+    def register(self, payload: Any, priority: int = 1, cost: int = 0,
+                 deadline: Optional[int] = None) -> TaskRecord:
+        self.validate_priority(priority)
         tid = len(self.tasks)
         assert tid <= VAL_MASK, "task table exceeded the 31-bit id space"
-        rec = TaskRecord(tid, payload, min(max(priority, 0), self.lanes - 1),
-                         cost)
+        rec = TaskRecord(tid, payload, priority, cost, deadline)
         self.tasks.append(rec)
         return rec
-
-    # -- placement -----------------------------------------------------------
-
-    def home_shard(self, tid: int) -> int:
-        """Wave-affinity: all lanes of a wave share one home shard."""
-        return (tid // self.wave_size) % self.shards
-
-    def spray_shard(self) -> int:
-        """Round-robin placement for external arrivals."""
-        return next(self._rr) % self.shards
 
     # -- history plumbing ----------------------------------------------------
 
@@ -176,20 +254,10 @@ class TaskFabric:
                 self._file(lane, s)
                 if ok:
                     yield from ctx.faa(HINTS, lane * self.shards + s, 1)
-                    self.metrics.enqueues += 1
+                    self._record_install(rec)
                     return s
             self.metrics.enq_retries += 1
             yield from ctx.step()      # every shard full: back off and retry
-
-    def spawn(self, ctx: Ctx, tid: int, spec: TaskSpec,
-              shard: Optional[int] = None):
-        """Register + account + enqueue a dynamically spawned task.  The
-        OUTSTANDING increment happens *before* the install so the counter
-        can never read zero while this task is invisible to consumers."""
-        rec = self.register(spec.payload, spec.priority, spec.cost)
-        yield from ctx.faa(OUTSTANDING, 0, 1)
-        yield from self.enqueue_task(ctx, tid, rec, shard)
-        return rec
 
     def acquire(self, ctx: Ctx, tid: int):
         """Dequeue one task: urgent lane first, home shard first, stealing
@@ -217,24 +285,174 @@ class TaskFabric:
                         self.metrics.per_shard_deq.get(key, 0) + 1)
                     if k > 0:
                         self.metrics.steals += 1
-                    return self.tasks[v]
+                    rec = self.tasks[v]
+                    self._record_acquire(rec)
+                    return rec
         self.metrics.empty_scans += 1
         return None
 
-    def complete(self, ctx: Ctx, tid: int):
-        """Retire a task (decrement OUTSTANDING).  Call only after all of the
-        task's children were spawned — spawn-before-complete is what makes
-        the zero-read a sound quiescence certificate."""
-        yield from ctx.faa(OUTSTANDING, 0, NEG1)
 
-    def outstanding(self, ctx: Ctx, tid: int):
-        v = yield from ctx.load(OUTSTANDING, 0)
-        return v
+def _wait_stats(waits: Dict[int, List[int]]) -> Dict[str, float]:
+    """Queue-wait starvation metrics by class (0 = urgent, ≥1 = normal)."""
+    def pct(xs: List[int], q: float) -> float:
+        if not xs:
+            return 0.0
+        ys = sorted(xs)
+        return float(ys[min(len(ys) - 1, int(q * len(ys)))])
 
-    # -- reporting -----------------------------------------------------------
+    urgent = waits.get(0, [])
+    normal = [w for cls, xs in waits.items() if cls != 0 for w in xs]
+    return {
+        "urgent_max_wait": float(max(urgent, default=0)),
+        "urgent_p99_wait": pct(urgent, 0.99),
+        "normal_max_wait": float(max(normal, default=0)),
+        "normal_p99_wait": pct(normal, 0.99),
+        "normal_mean_wait": (sum(normal) / len(normal)) if normal else 0.0,
+    }
 
-    def steal_rate(self) -> float:
-        return self.metrics.steals / max(self.metrics.dequeues, 1)
+
+# ---------------------------------------------------------------------------
+# Priority fabric (DESIGN.md § 5.4): policy-keyed G-PQ shards
+# ---------------------------------------------------------------------------
+
+
+class PriorityFabric(_FabricBase):
+    """K shards of G-PQ min-heaps + the host task table — the priority
+    replacement for ``TaskFabric``'s strict lanes.  Drop-in for
+    ``TaskRuntime``: same generator protocol (``enqueue_task`` /
+    ``acquire`` / ``spawn`` / ``complete`` / ``outstanding``).
+
+    A ``PriorityPolicy`` (strict | weighted | edf, ``repro.sched.policy``)
+    maps each task's (class, deadline) to the integer min-key the shards
+    order by, so lane semantics become a pure key encoding:
+
+    * placement mirrors ``TaskFabric``: wave-affinity homes for spawned
+      children, round-robin spray for external arrivals, overflow to
+      sibling shards, retry under full backpressure;
+    * **stealing is highest-priority-first**: an acquire reads every
+      shard's min-key hint and scans shards in ascending-hint order
+      (home shard breaks ties), so a steal always goes after the most
+      urgent visible work rather than ring order;
+    * every shard op is bracketed into the § IV history and filed
+      per shard; each shard history is independently checkable with
+      ``sched.check_p_linearizable`` at k = 0 (strict shards) or the
+      shard's exact lazy bound.
+
+    Starvation accounting: queue waits (install → acquire, in scheduler
+    steps) are recorded per class; ``wait_stats()`` feeds the § V-C
+    starvation metrics (max / p99 wait per class).
+    """
+
+    def __init__(self, *, policy="edf", shards: int = 4,
+                 capacity_per_shard: int = 256, num_threads: int = 32,
+                 wave_size: int = 8, steal: bool = True, arity: int = 4,
+                 lazy: int = 0) -> None:
+        super().__init__(shards=shards, wave_size=wave_size)
+        self.policy = make_policy(policy)
+        self.capacity_per_shard = capacity_per_shard
+        self.steal = steal
+        self.lazy = lazy
+        self.pqs = {
+            s: GPQ(capacity_per_shard, num_threads,
+                   tag=f"pf_{self.policy.name}_s{s}", arity=arity, lazy=lazy)
+            for s in range(shards)
+        }
+        self.shard_history: Dict[int, List[HistoryEvent]] = {
+            s: [] for s in range(shards)
+        }
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def init(self, mem, sched: Scheduler, initial_outstanding: int = 0) -> None:
+        self.sched = sched
+        for pq in self.pqs.values():
+            pq.init(mem)
+        mem.alloc(OUTSTANDING, 1, fill=initial_outstanding)
+
+    def validate_priority(self, priority: int) -> int:
+        return self.policy.validate(priority)
+
+    def validate_deadline(self, deadline: Optional[int]) -> Optional[int]:
+        fmt = next(iter(self.pqs.values())).fmt
+        if deadline is not None and not 0 <= deadline < fmt.key_inf:
+            raise ValueError(
+                f"deadline {deadline} outside the node key range "
+                f"[0, {fmt.key_inf})")
+        return deadline
+
+    def register(self, payload: Any, priority: int = 1, cost: int = 0,
+                 deadline: Optional[int] = None) -> TaskRecord:
+        self.validate_deadline(deadline)
+        now = self.sched.step_count if self.sched is not None else 0
+        key = self.policy.key(priority, deadline, now)  # validates the class
+        tid = len(self.tasks)
+        fmt = next(iter(self.pqs.values())).fmt
+        if tid > fmt.idx_mask:
+            raise ValueError("task table exceeded the node idx space")
+        if not 0 <= key < fmt.key_inf:
+            raise ValueError(f"policy key {key} exceeds the node key range "
+                             f"[0, {fmt.key_inf})")
+        rec = TaskRecord(tid, payload, priority, cost, deadline, key=key)
+        self.tasks.append(rec)
+        return rec
+
+    def _file(self, shard: int) -> None:
+        if self.sched is not None and self.sched.history:
+            self.shard_history[shard].append(self.sched.history[-1])
+
+    # -- generator ops -------------------------------------------------------
+
+    def enqueue_task(self, ctx: Ctx, tid: int, rec: TaskRecord,
+                     shard: Optional[int] = None):
+        home = self.home_shard(tid) if shard is None else shard
+        backoff = 1
+        while True:
+            for k in range(self.shards):
+                s = (home + k) % self.shards
+                ok = yield from self.pqs[s].insert(ctx, tid, rec.key,
+                                                   rec.task_id)
+                self._file(s)
+                if ok:
+                    self._record_install(rec)
+                    return s
+            self.metrics.enq_retries += 1
+            # every shard full: exponential backoff so admission
+            # backpressure does not burn steps hammering full heaps
+            for _ in range(backoff):
+                yield from ctx.step()
+            backoff = min(backoff * 2, 64)
+
+    def acquire(self, ctx: Ctx, tid: int):
+        """Pop one task, most-urgent-visible shard first: scan order is
+        ascending min-key hint (steal-highest-priority-first), home shard
+        breaking ties."""
+        home = self.home_shard(tid)
+        if self.steal and self.shards > 1:
+            order = []
+            for s, pq in self.pqs.items():
+                h = yield from pq.peek_hint(ctx, tid)
+                order.append((h, (s - home) % self.shards, s))
+            order.sort()
+            scan = [s for _, _, s in order]
+        else:
+            scan = [home]
+        for rank, s in enumerate(scan):
+            ok, got = yield from self.pqs[s].delete_min(ctx, tid)
+            self._file(s)
+            if rank > 0:
+                self.metrics.steal_scans += 1
+            if ok:
+                _, idx = got
+                self.metrics.dequeues += 1
+                self.metrics.per_shard_deq[(0, s)] = (
+                    self.metrics.per_shard_deq.get((0, s), 0) + 1)
+                if s != home:
+                    self.metrics.steals += 1
+                rec = self.tasks[idx]
+                self._record_acquire(rec)
+                return rec
+        self.metrics.empty_scans += 1
+        return None
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,26 @@
+"""repro.sched — G-PQ: wave-batched linearizable priority scheduling
+(DESIGN.md § 5).
+
+The priority companion to the FIFO queue core: a bounded concurrent
+min-priority queue built from the paper's primitives (WAVEFAA ticket
+batching into an announce ring, packed 64-bit node words, latch-combined
+d-ary applied heap), a k-relaxed multi-ring variant with a quantitative
+relaxation bound, the priority-semantics history checker, scheduling
+policies (strict / weighted / EDF) for the runtime's ``PriorityFabric``,
+and the host-thread twin used by the serving engine's EDF admission.
+"""
+
+from .gpq import DELMIN, GPQ, INS, NODE, NodeFormat
+from .hostpq import HostPriorityPool
+from .plinearizability import (check_p_linearizable,
+                               check_p_linearizable_search)
+from .policy import (EDFPolicy, POLICIES, PriorityPolicy, StrictPolicy,
+                     WeightedPolicy, make_policy)
+from .relaxed import RelaxedGPQ
+
+__all__ = [
+    "DELMIN", "EDFPolicy", "GPQ", "HostPriorityPool", "INS", "NODE",
+    "NodeFormat", "POLICIES", "PriorityPolicy", "RelaxedGPQ", "StrictPolicy",
+    "WeightedPolicy", "check_p_linearizable", "check_p_linearizable_search",
+    "make_policy",
+]

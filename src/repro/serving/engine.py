@@ -2,11 +2,15 @@
 
 Two queue roles (DESIGN.md § 3):
 
-* **request queue** — incoming generation requests land in the runtime's
-  priority-laned ``HostTaskPool`` (sharded G-LFQ-style host rings, strict
-  urgent-lane-first admission with cross-shard stealing, DESIGN.md § 4.4);
-  the scheduler drains it into free decode slots each step (admission =
-  dequeue; backpressure = every shard of the request's lane full).
+* **request queue** — incoming generation requests land in a deadline-keyed
+  ``HostPriorityPool`` (EDF admission, DESIGN.md § 5.5): a request's key is
+  its admission sequence number plus a per-class slack (urgent = 0), so
+  urgent requests pre-empt and waiting or page-stalled requests *age toward
+  urgency* — a stalled normal request keeps its original deadline while new
+  arrivals take later ones, so it drifts to the front instead of re-queuing
+  at fixed rank.  ``admission="lanes"`` keeps the legacy strict two-lane
+  ``HostTaskPool`` (urgent lane drained first, stalled requests parked
+  engine-side), which starves normal traffic under sustained urgent load.
 * **KV page allocator** — the KV cache is paged; free page indices live in a
   bounded ring and are claimed by *ticket reservation* exactly like the
   paper's index indirection (enqueue of a released page, dequeue of a free
@@ -26,6 +30,7 @@ position vectors.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional
 
 import jax
@@ -36,6 +41,7 @@ from ..configs.base import ArchConfig
 from ..data.pipeline import HostRing
 from ..models import decode_step, init_decode_cache
 from ..runtime import HostTaskPool
+from ..sched import HostPriorityPool
 
 
 @dataclasses.dataclass
@@ -43,7 +49,8 @@ class Request:
     rid: int
     prompt: np.ndarray           # (P,) int32
     max_new_tokens: int
-    priority: int = 1            # 0 = urgent admission lane
+    priority: int = 1            # 0 = urgent admission class
+    deadline: Optional[int] = None   # EDF key; assigned at submit if unset
     out: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     pages: List[int] = dataclasses.field(default_factory=list)
@@ -57,7 +64,9 @@ class EngineConfig:
     num_pages: int = 64          # total page budget
     max_seq: int = 256
     request_ring_capacity: int = 16
-    request_shards: int = 2      # HostTaskPool shards per lane
+    request_shards: int = 2      # HostTaskPool shards per lane (lanes mode)
+    admission: str = "edf"       # "edf" (deadline keys) | "lanes" (legacy)
+    normal_slack: int = 64       # EDF slack for non-urgent admission classes
 
 
 class ServingEngine:
@@ -66,8 +75,15 @@ class ServingEngine:
 
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig) -> None:
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
-        self.requests = HostTaskPool(ecfg.request_ring_capacity,
-                                     shards=ecfg.request_shards, lanes=2)
+        if ecfg.admission == "edf":
+            self.requests = HostPriorityPool(ecfg.request_ring_capacity)
+        elif ecfg.admission == "lanes":
+            self.requests = HostTaskPool(ecfg.request_ring_capacity,
+                                         shards=ecfg.request_shards, lanes=2)
+        else:
+            raise ValueError(f"unknown admission mode {ecfg.admission!r}")
+        self._seq = 0                      # admission sequence (EDF now-clock)
+        self._seq_lock = threading.Lock()  # submit() is client-thread-callable
         self.stalled: List[Request] = []   # page-stalled, awaiting re-admission
         self.admission_log: List[int] = []
         # free-page ring (index indirection: pages move as indices)
@@ -86,20 +102,45 @@ class ServingEngine:
     # -- client API ------------------------------------------------------------
 
     def submit(self, req: Request, timeout: float = 1.0) -> bool:
-        return self.requests.enqueue(req, timeout=timeout,
-                                     priority=req.priority)
+        if self.ecfg.admission == "lanes":
+            return self.requests.enqueue(req, timeout=timeout,
+                                         priority=req.priority)
+        with self._seq_lock:
+            self._seq += 1
+            seq = self._seq
+        if req.deadline is None:
+            slack = 0 if req.priority == 0 else self.ecfg.normal_slack
+            req.deadline = seq + slack
+        return self.requests.enqueue(req, key=req.deadline, timeout=timeout)
 
     # -- scheduler -------------------------------------------------------------
 
     def _pages_needed(self, tokens: int) -> int:
         return -(-tokens // self.ecfg.page_size)
 
+    def _next_candidate(self) -> Optional[Request]:
+        if self.ecfg.admission != "edf":
+            # lanes mode: engine-side stalled requests retry first (fixed
+            # rank — the § 5.5 inversion baseline)
+            return (self.stalled.pop(0) if self.stalled
+                    else self.requests.dequeue(timeout=0.0))
+        # EDF: self.stalled only holds pool-full overflow; merge it back
+        # by deadline so it cannot jump requests with earlier deadlines
+        if self.stalled:
+            self.stalled.sort(key=lambda r: r.deadline)
+            pk = self.requests.peek_key()
+            if pk is None or self.stalled[0].deadline <= pk:
+                return self.stalled.pop(0)
+        req = self.requests.dequeue(timeout=0.0)
+        if req is None and self.stalled:
+            return self.stalled.pop(0)
+        return req
+
     def _try_admit(self) -> None:
         for s in range(self.ecfg.max_slots):
             if self.slots[s] is not None:
                 continue
-            req = (self.stalled.pop(0) if self.stalled
-                   else self.requests.dequeue(timeout=0.0))
+            req = self._next_candidate()
             if req is None:
                 return
             need = self._pages_needed(len(req.prompt) + req.max_new_tokens)
@@ -114,9 +155,21 @@ class ServingEngine:
                 for p in pages:
                     self.free_pages.enqueue(p, timeout=0.1)
                 self.metrics["page_stalls"] += 1
-                # park the request engine-side: it retries ahead of the pool
-                # next tick and cannot be dropped if its lane has refilled
-                self.stalled.append(req)
+                if self.ecfg.admission == "edf":
+                    # re-enter the pool at the *original* deadline: newer
+                    # arrivals take later keys, so the stalled request ages
+                    # toward urgency instead of re-queuing at fixed rank.
+                    # Non-blocking: this thread is the pool's only
+                    # consumer, so waiting on a full pool would deadlock
+                    # the decode loop for the whole timeout
+                    if not self.requests.enqueue(req, key=req.deadline,
+                                                 timeout=0.0):
+                        self.stalled.append(req)   # pool full: never drop
+                else:
+                    # lanes mode: park engine-side, retried ahead of the
+                    # pool next tick (fixed priority — the starvation the
+                    # EDF path removes)
+                    self.stalled.append(req)
                 return
             req.slot, req.pages = s, pages
             self.slots[s] = req

@@ -1,0 +1,473 @@
+"""G-PQ priority scheduling subsystem invariants (DESIGN.md § 5):
+
+* strict G-PQ histories are priority-linearizable at k = 0 under all three
+  sim schedules; the k-relaxed multi-ring variant stays within its
+  declared quantitative bound (exact ``lazy`` at R = 1, the windowed-
+  interference envelope otherwise) — and demonstrably *is* relaxed (a
+  deterministic multi-ring run violates k = 0);
+* the priority-semantics checker accepts positive fixtures and rejects
+  each bad pattern (Q1–Q4), agreeing with the exact Wing–Gong search
+  oracle on machine-generated histories from every schedule;
+* the Pallas heap kernel matches a host heap oracle op-for-op, and
+  ``PriorityRoundRunner`` is bit-deterministic and exactly-once;
+* ``PriorityFabric`` executes every task exactly once under every policy
+  and schedule, with per-shard histories passing the checker, and steals
+  highest-priority-first;
+* starvation-freedom: under sustained urgent arrivals the weighted and
+  EDF policies complete normal-class tasks within a bounded step horizon
+  while the strict policy starves them past it (asserted as such), and
+  the bench acceptance holds — EDF/weighted throughput ≥ strict with
+  strictly lower normal-class max wait;
+* ``TaskFabric.register`` / the policies raise ``ValueError`` on
+  out-of-range priorities instead of clamping;
+* the serving engine's EDF admission ages waiting normal requests toward
+  urgency instead of starving them behind an urgent flood.
+"""
+
+import os
+import random
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+from repro.core import AtomicMemory
+from repro.core.sim import Scheduler, HistoryEvent
+from repro.sched import (GPQ, RelaxedGPQ, check_p_linearizable,
+                         check_p_linearizable_search)
+from repro.sched.gpq import DELMIN, INS
+
+SCHEDULES = ["random", "gang", "rr"]
+
+
+def _run_pq(pq, policy, seed, *, n_threads=12, ops=8, wave=4, p_ins=0.55,
+            key_range=50):
+    mem = AtomicMemory()
+    sched = Scheduler(mem, wave_size=wave, policy=policy, seed=seed)
+    pq.init(mem)
+
+    def body(ctx, tid):
+        rng = random.Random(seed * 1009 + tid)
+        for k in range(ops):
+            if rng.random() < p_ins:
+                yield from pq.insert(ctx, tid, rng.randrange(key_range),
+                                     tid * 1000 + k)
+            else:
+                yield from pq.delete_min(ctx, tid)
+
+    for _ in range(n_threads):
+        sched.spawn(body)
+    assert sched.run(2_000_000), "simulation did not finish"
+    return sched.history
+
+
+def _min_passing_k(history, cap=200):
+    k = 0
+    while k <= cap:
+        if check_p_linearizable(history, k=k).ok:
+            return k
+        k += 1
+    return cap + 1
+
+
+# -- strict G-PQ: 0-relaxed under every schedule ------------------------------
+
+
+@pytest.mark.parametrize("policy", SCHEDULES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_gpq_strictly_p_linearizable(policy, seed):
+    h = _run_pq(GPQ(64, 13, tag=f"g_{policy}_{seed}"), policy, seed)
+    res = check_p_linearizable(h, k=0)
+    assert res.ok, res.reason
+
+
+@pytest.mark.parametrize("policy", SCHEDULES)
+def test_gpq_agrees_with_search_oracle(policy):
+    for seed in range(4):
+        h = _run_pq(GPQ(8, 5, tag=f"gs_{policy}_{seed}"), policy, seed,
+                    n_threads=4, ops=3)
+        assert check_p_linearizable_search(h, k=0).ok
+        assert check_p_linearizable(h, k=0).ok
+
+
+# -- relaxed variant: quantitative bound --------------------------------------
+
+
+@pytest.mark.parametrize("policy", SCHEDULES)
+@pytest.mark.parametrize("lazy", [0, 3])
+def test_relaxed_single_ring_exact_lazy_bound(policy, lazy):
+    for seed in range(3):
+        pq = RelaxedGPQ(64, 13, tag=f"r1_{lazy}_{policy}_{seed}", rings=1,
+                        lazy=lazy)
+        h = _run_pq(pq, policy, seed)
+        assert pq.relaxation_bound() == lazy
+        k = _min_passing_k(h)
+        assert k <= lazy, f"observed rank error {k} exceeds exact bound {lazy}"
+
+
+@pytest.mark.parametrize("policy", SCHEDULES)
+@pytest.mark.parametrize("rings,lazy", [(3, 2), (4, 0)])
+def test_relaxed_multi_ring_within_envelope(policy, rings, lazy):
+    for seed in range(3):
+        pq = RelaxedGPQ(64, 13, tag=f"rm_{rings}_{lazy}_{policy}_{seed}",
+                        rings=rings, lazy=lazy)
+        h = _run_pq(pq, policy, seed)
+        res = check_p_linearizable(h, k=pq.relaxation_bound())
+        assert res.ok, res.reason
+
+
+def test_relaxed_multi_ring_actually_relaxes():
+    """A deterministic multi-ring run whose history is NOT 0-relaxed —
+    the relaxation is real, not a vacuous bound."""
+    violated = False
+    for seed in range(6):
+        pq = RelaxedGPQ(64, 13, tag=f"rv_{seed}", rings=4, lazy=2)
+        h = _run_pq(pq, "random", seed)
+        if not check_p_linearizable(h, k=0).ok:
+            violated = True
+            break
+    assert violated, "no k=0 violation in 6 seeded multi-ring runs"
+
+
+# -- checker fixtures ---------------------------------------------------------
+
+
+def _ev(proc, op, arg, ret, call, end):
+    return HistoryEvent(proc=proc, op=op, arg=arg, ret=ret, call=call, end=end)
+
+
+def test_checker_positive_fixtures():
+    # sequential: ins(5), ins(3), delmin->3, delmin->5, delmin->EMPTY
+    h = [
+        _ev(0, INS, (5, 100), True, 1, 2),
+        _ev(0, INS, (3, 101), True, 3, 4),
+        _ev(0, DELMIN, None, (3, 101), 5, 6),
+        _ev(0, DELMIN, None, (5, 100), 7, 8),
+        _ev(0, DELMIN, None, None, 9, 10),
+    ]
+    assert check_p_linearizable(h, k=0).ok
+    assert check_p_linearizable_search(h, k=0).ok
+    # concurrent: delmin overlapping both inserts may take either element
+    h = [
+        _ev(0, INS, (5, 100), True, 1, 10),
+        _ev(1, INS, (3, 101), True, 2, 9),
+        _ev(2, DELMIN, None, (5, 100), 3, 8),
+    ]
+    assert check_p_linearizable(h, k=0).ok
+    assert check_p_linearizable_search(h, k=0).ok
+    # EMPTY before any insert completes
+    h = [
+        _ev(0, DELMIN, None, None, 1, 4),
+        _ev(1, INS, (7, 100), True, 2, 6),
+    ]
+    assert check_p_linearizable(h, k=0).ok
+    assert check_p_linearizable_search(h, k=0).ok
+
+
+def test_checker_negative_fixtures():
+    # Q3: delmin returns 9 while 3 is pending throughout — fails k=0,
+    # passes k=1 (exactly one smaller pending key).
+    h = [
+        _ev(0, INS, (3, 100), True, 1, 2),
+        _ev(0, INS, (9, 101), True, 3, 4),
+        _ev(1, DELMIN, None, (9, 101), 5, 6),
+    ]
+    assert not check_p_linearizable(h, k=0).ok
+    assert not check_p_linearizable_search(h, k=0).ok
+    assert check_p_linearizable(h, k=1).ok
+    assert check_p_linearizable_search(h, k=1).ok
+    # Q4: EMPTY while an element is provably pending
+    h = [
+        _ev(0, INS, (3, 100), True, 1, 2),
+        _ev(1, DELMIN, None, None, 3, 4),
+    ]
+    assert not check_p_linearizable(h, k=0).ok
+    assert not check_p_linearizable_search(h, k=0).ok
+    # Q1: dequeued twice
+    h = [
+        _ev(0, INS, (3, 100), True, 1, 2),
+        _ev(0, DELMIN, None, (3, 100), 3, 4),
+        _ev(1, DELMIN, None, (3, 100), 5, 6),
+    ]
+    assert not check_p_linearizable(h, k=0).ok
+    # Q1: never inserted
+    h = [_ev(0, DELMIN, None, (3, 100), 1, 2)]
+    assert not check_p_linearizable(h, k=0).ok
+    # Q2: delete returns before its insert begins
+    h = [
+        _ev(0, DELMIN, None, (3, 100), 1, 2),
+        _ev(1, INS, (3, 100), True, 5, 6),
+    ]
+    assert not check_p_linearizable(h, k=0).ok
+
+
+@pytest.mark.parametrize("policy", SCHEDULES)
+def test_checker_cross_validation_per_schedule(policy):
+    """Pattern checker and exact search agree on small machine-generated
+    histories from each schedule, at k = 0 and k = 2."""
+    for seed in range(5):
+        pq = RelaxedGPQ(16, 5, tag=f"cv_{policy}_{seed}", rings=2, lazy=1)
+        h = _run_pq(pq, policy, seed, n_threads=4, ops=3, key_range=10)
+        for k in (0, 2, 8):
+            pat = check_p_linearizable(h, k=k)
+            exact = check_p_linearizable_search(h, k=k, max_nodes=400_000)
+            if exact.ok:
+                # pattern check is a necessary condition: must accept
+                assert pat.ok, (seed, k, pat.reason)
+            if not pat.ok:
+                # pattern violations are sound: exact search must reject
+                assert not exact.ok, (seed, k, pat.reason)
+
+
+# -- Pallas heap kernel + priority rounds -------------------------------------
+
+
+def test_heap_apply_matches_host_oracle():
+    jnp = pytest.importorskip("jax.numpy")
+    import heapq
+    from repro.kernels.heap_batch import KEY_INF, heap_apply
+    rng = random.Random(7)
+    for arity_log2 in (1, 2):
+        keys = jnp.full((64,), KEY_INF, jnp.int32)
+        vals = jnp.full((64,), -1, jnp.int32)
+        size = jnp.asarray(0, jnp.int32)
+        oracle = []
+        for _ in range(6):
+            ops, ks, vs = [], [], []
+            for _ in range(8):
+                r = rng.random()
+                if r < 0.55:
+                    ops.append(0); ks.append(rng.randrange(100))
+                    vs.append(rng.randrange(1000))
+                elif r < 0.9:
+                    ops.append(1); ks.append(KEY_INF); vs.append(-1)
+                else:
+                    ops.append(-1); ks.append(KEY_INF); vs.append(-1)
+            keys, vals, size, outk, outv, ok = heap_apply(
+                keys, vals, size, jnp.asarray(ops, jnp.int32),
+                jnp.asarray(ks, jnp.int32), jnp.asarray(vs, jnp.int32),
+                cap_log2=6, arity_log2=arity_log2)
+            size = jnp.asarray(int(size), jnp.int32)
+            for i, op in enumerate(ops):
+                if op == 0:
+                    assert bool(ok[i])
+                    heapq.heappush(oracle, ks[i])
+                elif op == 1 and oracle:
+                    assert bool(ok[i])
+                    assert int(outk[i]) == heapq.heappop(oracle)
+                else:
+                    assert not bool(ok[i])
+            assert int(size) == len(oracle)
+
+
+def test_priority_rounds_exactly_once_and_deterministic():
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.runtime import PriorityRoundRunner
+
+    def step(acc, keys, vals, valid):
+        acc = acc.at[jnp.where(valid, vals, 0)].add(valid.astype(jnp.int32))
+        ck = jnp.stack([keys + 1, keys + 1], -1).astype(jnp.int32)
+        cv = jnp.stack([vals * 2, vals * 2 + 1], -1).astype(jnp.int32)
+        cm = (valid & (vals < 8))[:, None]
+        return acc, ck, cv, cm
+
+    r1 = PriorityRoundRunner(step, capacity_log2=8, batch=16)
+    acc1, st1 = r1.run([5], [1], acc=jnp.zeros(64, jnp.int32))
+    counts = np.asarray(acc1)
+    assert counts[1:16].tolist() == [1] * 15      # exactly once
+    assert counts[0] == 0 and counts[16:].sum() == 0
+    assert r1.stats["drained"] == 1 and r1.stats["processed"] == 15
+    r2 = PriorityRoundRunner(step, capacity_log2=8, batch=16)
+    acc2, st2 = r2.run([5], [1], acc=jnp.zeros(64, jnp.int32))
+    np.testing.assert_array_equal(counts, np.asarray(acc2))
+    np.testing.assert_array_equal(np.asarray(st1.keys), np.asarray(st2.keys))
+    assert st1.size == st2.size and r1.stats == r2.stats
+
+
+def test_priority_rounds_pop_in_key_order():
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.runtime import PriorityRoundRunner
+
+    def step(acc, keys, vals, valid):
+        buf, n = acc
+        pos = jnp.where(valid,
+                        n + jnp.cumsum(valid.astype(jnp.int32)) - 1,
+                        buf.shape[0] - 1)          # invalid lanes -> trash slot
+        buf = buf.at[pos].set(jnp.where(valid, keys, buf[pos]))
+        n = n + valid.sum(dtype=jnp.int32)
+        z = jnp.zeros_like(keys)[:, None]
+        return (buf, n), z, z, jnp.zeros_like(z, bool)
+
+    runner = PriorityRoundRunner(step, capacity_log2=6, batch=8)
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 100, 24).astype(np.int32)
+    (buf, n), _ = runner.run(keys, np.arange(24),
+                             acc=(jnp.zeros(25, jnp.int32), jnp.int32(0)))
+    assert int(n) == 24
+    popped = np.asarray(buf)[:24]
+    np.testing.assert_array_equal(popped, np.sort(keys))  # EDF order
+
+
+# -- PriorityFabric -----------------------------------------------------------
+
+
+def _tree_priority_runtime(policy, sched_policy, *, workers=8, shards=2,
+                           depth=4, roots=2, seed=0):
+    from repro.runtime import ExecutorConfig, PriorityFabric, TaskRuntime, TaskSpec
+
+    def handler(rec):
+        d = rec.payload
+        if d <= 0:
+            return []
+        return [TaskSpec(d - 1, cost=1, priority=1),
+                TaskSpec(d - 1, cost=1, priority=1)]
+
+    fabric = PriorityFabric(policy=policy, shards=shards,
+                            capacity_per_shard=128, num_threads=workers + 1)
+    rt = TaskRuntime(fabric, handler,
+                     ExecutorConfig(workers=workers, policy=sched_policy,
+                                    seed=seed))
+    for _ in range(roots):
+        rt.add_task(depth, cost=1)
+    metrics = rt.run()
+    total = roots * (2 ** (depth + 1) - 1)
+    return rt, fabric, metrics, total
+
+
+@pytest.mark.parametrize("policy", ["strict", "weighted", "edf"])
+@pytest.mark.parametrize("sched_policy", SCHEDULES)
+def test_priority_fabric_exactly_once_and_p_linearizable(policy, sched_policy):
+    rt, fabric, metrics, total = _tree_priority_runtime(policy, sched_policy,
+                                                        seed=7)
+    assert metrics["completed"] == 1.0, "runtime did not reach quiescence"
+    ids = [t for t, _ in rt.executed]
+    assert len(ids) == total and len(set(ids)) == len(ids)
+    for shard, hist in fabric.shard_history.items():
+        res = check_p_linearizable(hist, k=0)   # strict shards: k = 0
+        assert res.ok, f"shard {shard}: {res.reason}"
+
+
+def test_priority_fabric_steals_highest_priority_first():
+    """Urgent work pinned to a non-home shard: a worker's acquire must
+    take it (by hint order) before the normal work on its own home
+    shard."""
+    from repro.runtime import ExecutorConfig, PriorityFabric, TaskRuntime
+
+    fabric = PriorityFabric(policy="strict", shards=2, capacity_per_shard=64,
+                            num_threads=2)
+    rt = TaskRuntime(fabric, lambda rec: [],
+                     ExecutorConfig(workers=1, policy="rr", seed=0))
+    # worker 1's home shard is 0 (wave 0): normal tasks there, urgent on 1
+    rt.add_task(("warm",), priority=0, cost=800, affinity=0)
+    for i in range(6):
+        rt.add_task(("n", i), priority=1, cost=1, at_step=10, affinity=0)
+    for i in range(6):
+        rt.add_task(("u", i), priority=0, cost=1, at_step=10, affinity=1)
+    m = rt.run()
+    assert m["completed"] == 1.0
+    order = [fabric.tasks[t].payload[0] for t, _ in rt.executed
+             if fabric.tasks[t].payload[0] != "warm"]
+    assert order[:6] == ["u"] * 6, order
+    assert m["steals"] > 0
+
+
+def test_register_rejects_out_of_range_priority():
+    from repro.runtime import PriorityFabric, TaskFabric
+
+    fabric = TaskFabric(algo="glfq", shards=1, lanes=2, num_threads=2)
+    with pytest.raises(ValueError):
+        fabric.register("x", priority=2)
+    with pytest.raises(ValueError):
+        fabric.register("x", priority=-1)
+    fabric.register("x", priority=1)   # in range: fine
+    pfabric = PriorityFabric(policy="edf", shards=1, num_threads=2)
+    with pytest.raises(ValueError):
+        pfabric.register("x", priority=5)
+
+
+# -- starvation-freedom + bench acceptance ------------------------------------
+
+
+def test_starvation_freedom_and_bench_acceptance():
+    """Sustained urgent arrivals (the bench's powerlaw+bursty scenario):
+    weighted and EDF complete every normal task within a bounded wait
+    horizon; strict is *documented as starving* and asserted as such
+    (normal waits past the horizon).  Simultaneously the bench acceptance:
+    EDF/weighted throughput ≥ strict with strictly lower normal max
+    wait."""
+    from benchmarks.bench_runtime import run_priority_scenario
+
+    horizon = 25_000
+    res = {p: run_priority_scenario(p, bursts=12)
+           for p in ("strict", "weighted", "edf")}
+    for p, m in res.items():
+        assert m["completed"] == 1.0, f"{p} did not quiesce"
+        assert m["tasks"] == 64 + 12 * 8
+    for p in ("weighted", "edf"):
+        assert res[p]["normal_max_wait"] < horizon, \
+            f"{p} normal wait {res[p]['normal_max_wait']} exceeds horizon"
+    # strict starves: normal waits blow past the bounded horizon
+    assert res["strict"]["normal_max_wait"] > horizon
+    for p in ("weighted", "edf"):
+        assert (res[p]["throughput_ops_per_kstep"]
+                >= res["strict"]["throughput_ops_per_kstep"])
+        assert res[p]["normal_max_wait"] < res["strict"]["normal_max_wait"]
+
+
+# -- serving engine EDF admission --------------------------------------------
+
+
+def _mini_engine(admission, normal_slack=8):
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving.engine import EngineConfig, ServingEngine
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    eng = ServingEngine(cfg, init_params(cfg),
+                        EngineConfig(max_slots=1, page_size=16, num_pages=8,
+                                     max_seq=64, request_ring_capacity=64,
+                                     admission=admission,
+                                     normal_slack=normal_slack))
+    return cfg, eng
+
+
+def test_engine_edf_admission_ages_normal_requests():
+    """A waiting normal request outranks urgent arrivals once its slack is
+    consumed: with slack 8, the normal request admits ahead of the urgent
+    tail — under strict lanes it would be dead last."""
+    from repro.serving.engine import Request
+    cfg, eng = _mini_engine("edf", normal_slack=8)
+    rng = np.random.default_rng(0)
+
+    def req(rid, pri):
+        return Request(rid=rid,
+                       prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                       max_new_tokens=1, priority=pri)
+
+    assert eng.submit(req(500, 1))          # normal first: deadline 1+8
+    for rid in range(16):
+        assert eng.submit(req(rid, 0))      # urgent flood: deadlines 2..17
+    m = eng.run(max_ticks=600)
+    assert m["completed"] == 17
+    pos = eng.admission_log.index(500)
+    assert pos < 12, (pos, eng.admission_log)   # aged ahead of the tail
+    assert pos >= 4, (pos, eng.admission_log)   # but urgent head went first
+
+
+def test_engine_lanes_mode_still_strict():
+    from repro.serving.engine import Request
+    cfg, eng = _mini_engine("lanes")
+    rng = np.random.default_rng(0)
+
+    def req(rid, pri):
+        return Request(rid=rid,
+                       prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                       max_new_tokens=1, priority=pri)
+
+    assert eng.submit(req(500, 1))
+    for rid in range(6):
+        assert eng.submit(req(rid, 0))
+    m = eng.run(max_ticks=400)
+    assert m["completed"] == 7
+    assert eng.admission_log[-1] == 500     # strict lanes: normal starved
