@@ -1,0 +1,201 @@
+"""Round-engine benchmark: legacy host-driven rounds vs the fused
+device-resident megaround loop (DESIGN.md § 4.3, BENCH_3).
+
+Workloads:
+
+* ``fanout`` — synthetic geometric spawn tree: every task of depth d > 0
+  spawns ``FANOUT`` children of depth d-1; per-depth counts accumulate on
+  device.  Pure queue/scheduler cost — the round engine IS the workload.
+* ``bfs``    — ``apps.bfs.bfs_rounds`` on a road-like grid (long diameter,
+  many rounds: the regime where per-round host syncs dominate) and a
+  kron-like power-law graph (wide frontier: big enqueue waves).
+
+Rows report rounds/sec, items/sec, and host syncs per run for each engine
+at batch ∈ {64, 256, 1024}.  Timings exclude compilation (one warmup run
+per config).
+
+``--smoke`` is the CI acceptance gate: it asserts fused/legacy parity
+(bit-identical acc + final ring state) on both workloads and records
+timings — it does NOT require a speedup (interpret-mode timings on shared
+CI runners are too noisy to gate on).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+HEADER = ("bench,workload,batch,mode,rounds,items,elapsed_s,rounds_per_s,"
+          "items_per_s,host_syncs,drained")
+
+
+def _fanout_step(fanout: int, depth: int):
+    def step(acc, vals, valid):
+        acc = acc.at[jnp.clip(vals, 0, depth)].add(valid.astype(jnp.int32))
+        cv = jnp.broadcast_to((vals - 1)[:, None],
+                              (vals.shape[0], fanout)).astype(jnp.int32)
+        cm = (valid & (vals > 0))[:, None]
+        return acc, cv, cm
+    return step
+
+
+def _expected_fanout_acc(fanout: int, depth: int, roots: int) -> np.ndarray:
+    counts = np.zeros(depth + 1, np.int64)
+    for d in range(depth, -1, -1):
+        counts[d] = roots * fanout ** (depth - d)
+    return counts.astype(np.int32)
+
+
+def run_fanout(batch: int, *, fused: bool, fanout: int = 2, depth: int = 10,
+               roots: int = 4, sync_every: int = 0):
+    """One timed fanout run (post-warmup).  Returns (row dict, acc, state)."""
+    from repro.runtime import RoundRunner
+
+    peak = roots * fanout ** depth
+    capacity_log2 = max(int(np.ceil(np.log2(2 * peak))),
+                        int(np.ceil(np.log2(2 * batch))))
+    seeds = np.full(roots, depth, np.int32)
+    acc0 = jnp.zeros(depth + 1, jnp.int32)
+    runner = RoundRunner(_fanout_step(fanout, depth),
+                         capacity_log2=capacity_log2, batch=batch,
+                         fused=fused, sync_every=sync_every)
+    runner.run(seeds, acc=acc0, max_rounds=1_000_000)        # warmup/compile
+    t0 = time.perf_counter()
+    acc, st = runner.run(seeds, acc=acc0, max_rounds=1_000_000)
+    elapsed = time.perf_counter() - t0
+    stats = runner.stats
+    row = _row("fanout", batch, fused, stats, elapsed)
+    return row, np.asarray(acc), st
+
+
+def run_bfs(batch: int, *, fused: bool, graph: str = "road", n: int = 4096,
+            sync_every: int = 0):
+    """One timed BFS run (post-warmup, runner reused so the timed run pays
+    no megaround compilation).  Returns (row dict, dist)."""
+    from repro.apps import bfs
+
+    g = (bfs.road_like(n) if graph == "road"
+         else bfs.kron_like(n, avg_deg=4, seed=1))
+    runner, init_fn = bfs.bfs_rounds_runner(g, batch=batch, fused=fused,
+                                            sync_every=sync_every)
+    runner.run([0], acc=init_fn(0), max_rounds=1_000_000)    # warmup/compile
+    t0 = time.perf_counter()
+    dist, _ = runner.run([0], acc=init_fn(0), max_rounds=1_000_000)
+    elapsed = time.perf_counter() - t0
+    row = _row(f"bfs_{graph}", batch, fused, runner.stats, elapsed)
+    return row, np.asarray(dist)
+
+
+def _row(workload: str, batch: int, fused: bool, stats: dict,
+         elapsed: float) -> dict:
+    rounds = stats["rounds"]
+    items = stats["processed"]
+    return {
+        "workload": workload, "batch": batch,
+        "mode": "fused" if fused else "legacy",
+        "rounds": rounds, "items": items,
+        "elapsed_s": round(elapsed, 4),
+        "rounds_per_s": round(rounds / max(elapsed, 1e-9), 1),
+        "items_per_s": round(items / max(elapsed, 1e-9), 1),
+        "host_syncs": stats["host_syncs"], "drained": stats["drained"],
+    }
+
+
+def _emit(out, row: dict) -> None:
+    print(f"rounds,{row['workload']},{row['batch']},{row['mode']},"
+          f"{row['rounds']},{row['items']},{row['elapsed_s']},"
+          f"{row['rounds_per_s']},{row['items_per_s']},{row['host_syncs']},"
+          f"{row['drained']}", file=out)
+
+
+def main(out=sys.stdout, batches=(64, 256, 1024), fanout_depth: int = 10,
+         bfs_n: int = 4096, graphs=("road", "kron")) -> list:
+    """Full sweep: fanout + BFS, legacy vs fused, across batches."""
+    print("# round engine: legacy host-driven vs fused device-resident",
+          file=out)
+    print(f"bench,{HEADER.split(',', 1)[1]}", file=out)
+    rows = []
+    for batch in batches:
+        by_mode = {}
+        for fused in (False, True):
+            row, acc, _ = run_fanout(batch, fused=fused, depth=fanout_depth)
+            _emit(out, row)
+            rows.append(row)
+            by_mode[row["mode"]] = row
+        speedup = (by_mode["fused"]["rounds_per_s"]
+                   / max(by_mode["legacy"]["rounds_per_s"], 1e-9))
+        print(f"# fanout batch={batch}: fused {speedup:.1f}x rounds/s, "
+              f"host_syncs {by_mode['legacy']['host_syncs']} -> "
+              f"{by_mode['fused']['host_syncs']}", file=out)
+    for graph in graphs:
+        for batch in batches:
+            for fused in (False, True):
+                row, _ = run_bfs(batch, fused=fused, graph=graph, n=bfs_n)
+                _emit(out, row)
+                rows.append(row)
+    return rows
+
+
+def smoke(out=sys.stdout) -> bool:
+    """CI acceptance: fused/legacy bit-parity on both workloads + recorded
+    timings.  Speedup is reported, not asserted (CI timing noise)."""
+    from repro.apps import bfs
+
+    ok = True
+    print("# rounds smoke: fused-vs-legacy parity", file=out)
+    print(f"bench,{HEADER.split(',', 1)[1]}", file=out)
+
+    row_l, acc_l, st_l = run_fanout(32, fused=False, depth=6, roots=2)
+    row_f, acc_f, st_f = run_fanout(32, fused=True, depth=6, roots=2)
+    _emit(out, row_l)
+    _emit(out, row_f)
+    if not (np.array_equal(acc_l, acc_f)
+            and np.array_equal(acc_l, _expected_fanout_acc(2, 6, 2))):
+        print("# FAIL: fanout acc mismatch", file=out)
+        ok = False
+    planes_eq = all(np.array_equal(np.asarray(a), np.asarray(b))
+                    for a, b in zip(st_l[:4], st_f[:4]))
+    if not (planes_eq and (st_l.head, st_l.tail) == (st_f.head, st_f.tail)):
+        print("# FAIL: fanout ring state mismatch", file=out)
+        ok = False
+
+    g = bfs.road_like(256)
+    ref = bfs.bfs_reference(g, 0)
+    bfs_stats = {}
+    for fused in (False, True):
+        runner, init_fn = bfs.bfs_rounds_runner(g, batch=32, fused=fused)
+        runner.run([0], acc=init_fn(0))                      # warmup
+        t0 = time.perf_counter()
+        dist, _ = runner.run([0], acc=init_fn(0))
+        bfs_stats[fused] = runner.stats
+        _emit(out, _row("bfs_road", 32, fused, runner.stats,
+                        time.perf_counter() - t0))
+        if not np.array_equal(np.asarray(dist), ref):
+            print(f"# FAIL: bfs fused={fused} distances wrong", file=out)
+            ok = False
+    if not (bfs_stats[True]["host_syncs"] < bfs_stats[False]["host_syncs"]
+            and row_f["host_syncs"] < row_l["host_syncs"]):
+        # fused engines sync once at quiescence; legacy syncs every round
+        print("# FAIL: fused path did not reduce host syncs", file=out)
+        ok = False
+    print(f"# acceptance: {'PASS' if ok else 'FAIL'}", file=out)
+    return ok
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI parity gate (fast; asserts correctness only)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweep (CI-sized)")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(0 if smoke() else 1)
+    if args.quick:
+        main(batches=(64, 256), fanout_depth=8, bfs_n=1024)
+    else:
+        main()

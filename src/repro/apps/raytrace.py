@@ -216,6 +216,52 @@ def render_runtime(scene: Scene, w: int = 64, h: int = 64, tx: int = 4,
     return img.reshape(h, w, 3), info
 
 
+def render_rounds(scene: Scene, w: int = 64, h: int = 64, batch: int = 256,
+                  *, fused: bool = True, interpret=None, sync_every: int = 0,
+                  max_rounds: int = 10_000) -> Tuple[np.ndarray, Dict]:
+    """Wavefront tracing on the deterministic round engine (DESIGN.md
+    § 4.3): the ring carries pixel/ray ids (index indirection — the ray
+    state lives in the accumulator), one jitted step traces a batch with
+    ``_trace_once`` and re-enqueues the rays that bounced.  Per-pixel
+    contribution order matches ``render_queue`` exactly (each pixel id is
+    in flight at most once), so the images agree bit-for-bit.
+
+    ``fused=True`` (default) keeps the whole bounce loop device-resident;
+    ``fused=False`` is the legacy per-round path.  Both are bit-identical."""
+    from ..runtime import RoundRunner
+
+    ce, ra, al, re = (jnp.asarray(scene.centers), jnp.asarray(scene.radii),
+                      jnp.asarray(scene.albedo), jnp.asarray(scene.reflect))
+    o0, d0 = primary_rays(w, h)
+    npix = h * w
+    max_b = scene.max_bounces
+
+    def step(acc, vals, valid):
+        img, weight, o, d, bounces = acc
+        ids = jnp.where(valid, vals, 0)
+        col, no, nd, alive, refl = _trace_once(o[ids], d[ids], ce, ra, al, re)
+        drop = jnp.where(valid, ids, npix)     # invalid lanes scatter away
+        img = img.at[drop].add(weight[ids][:, None] * col, mode="drop")
+        weight = weight.at[drop].multiply(refl, mode="drop")
+        o = o.at[drop].set(no, mode="drop")
+        d = d.at[drop].set(nd, mode="drop")
+        bounces = bounces.at[drop].add(1, mode="drop")
+        cont = valid & alive & (bounces[ids] <= max_b)
+        return (img, weight, o, d, bounces), vals[:, None], cont[:, None]
+
+    capacity_log2 = max(int(np.ceil(np.log2(max(npix, batch)))), 4)
+    runner = RoundRunner(step, capacity_log2=capacity_log2, batch=batch,
+                         fused=fused, interpret=interpret,
+                         sync_every=sync_every)
+    acc0 = (jnp.zeros((npix, 3), jnp.float32), jnp.ones((npix,), jnp.float32),
+            o0, d0, jnp.zeros((npix,), jnp.int32))
+    (img, _, _, _, _), _ = runner.run(np.arange(npix, dtype=np.int32),
+                                      acc=acc0, max_rounds=max_rounds)
+    info = dict(runner.stats)
+    info.update({"rays": info["processed"], "waves": info["rounds"]})
+    return np.asarray(img).reshape(h, w, 3), info
+
+
 def render_compaction(scene: Scene, w: int = 64, h: int = 64
                       ) -> Tuple[np.ndarray, Dict]:
     """Stream-compaction baseline: lockstep bounces over the full ray set,

@@ -8,8 +8,11 @@ from . import ops, ref
 from .frontier import frontier_expand
 from .heap_batch import heap_apply
 from .moe_route import expert_tickets, moe_route
-from .ring_slots import ring_dequeue, ring_enqueue
+from .pallas_env import ENV_VAR as PALLAS_INTERPRET_ENV, resolve_interpret
+from .ring_slots import deq_planes, enq_planes, ring_dequeue, ring_enqueue
 from .wavefaa import LANES, wavefaa
 
 __all__ = ["ops", "ref", "wavefaa", "LANES", "ring_enqueue", "ring_dequeue",
-           "frontier_expand", "expert_tickets", "heap_apply", "moe_route"]
+           "enq_planes", "deq_planes", "frontier_expand", "expert_tickets",
+           "heap_apply", "moe_route", "resolve_interpret",
+           "PALLAS_INTERPRET_ENV"]

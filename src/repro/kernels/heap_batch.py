@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_env import resolve_interpret
+
 KEY_INF = 2 ** 31 - 1    # empty-slot / inactive-lane key sentinel
 
 OP_INSERT, OP_DELMIN, OP_NOP = 0, 1, -1
@@ -115,15 +117,24 @@ def _heap_kernel(cap_log2, arity_log2, size_ref, ops_ref, okeys_ref,
     size_out_ref[0, 0] = final
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("cap_log2", "arity_log2", "interpret"))
 def heap_apply(keys, vals, size, ops, opkeys, opvals, *, cap_log2: int,
-               arity_log2: int = 2, interpret: bool = True):
+               arity_log2: int = 2, interpret=None):
     """Apply a batch of heap ops in batch order.  ``keys``/``vals`` are
     (cap,) int32 planes (empty slots KEY_INF / -1); ``size`` a scalar
-    int32; ``ops``/``opkeys``/``opvals`` are (B,) int32.  Returns
-    ``(keys, vals, new_size, out_keys, out_vals, ok)`` where ``out_*[i]``
-    carry delete-min results and ``ok[i]`` certifies op i applied."""
+    int32; ``ops``/``opkeys``/``opvals`` are (B,) int32.
+    ``interpret=None`` resolves via REPRO_PALLAS_INTERPRET / backend.
+    Returns ``(keys, vals, new_size, out_keys, out_vals, ok)`` where
+    ``out_*[i]`` carry delete-min results and ``ok[i]`` certifies op i
+    applied."""
+    return _heap_apply_jit(keys, vals, size, ops, opkeys, opvals,
+                           cap_log2=cap_log2, arity_log2=arity_log2,
+                           interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap_log2", "arity_log2", "interpret"))
+def _heap_apply_jit(keys, vals, size, ops, opkeys, opvals, *, cap_log2: int,
+                    arity_log2: int, interpret: bool):
     cap = 1 << cap_log2
     b = ops.shape[0]
     kern = functools.partial(_heap_kernel, cap_log2, arity_log2)

@@ -16,15 +16,15 @@ from . import ref
 from .frontier import frontier_expand as _frontier_kernel
 from .moe_route import expert_tickets as _expert_tickets_kernel
 from .moe_route import moe_route as _moe_route_kernel
+from .pallas_env import resolve_interpret
 from .ring_slots import ring_dequeue as _ring_deq_kernel
 from .ring_slots import ring_enqueue as _ring_enq_kernel
 from .wavefaa import LANES, wavefaa as _wavefaa_kernel
 
-_ON_TPU = jax.default_backend() == "tpu"
-
 
 def _interp() -> bool:
-    return not _ON_TPU
+    # REPRO_PALLAS_INTERPRET wins; otherwise interpret everywhere but TPU
+    return resolve_interpret(None)
 
 
 def wavefaa(active, counter, *, use_kernel: bool = True):

@@ -1,0 +1,50 @@
+"""Interpret/compiled mode resolution for every Pallas entry point.
+
+All kernel wrappers accept ``interpret=None`` meaning "resolve from the
+environment": the ``REPRO_PALLAS_INTERPRET`` variable forces interpret
+(``1/true/on/interpret``) or compiled (``0/false/off/compiled``) mode
+without a code change; unset, the default is interpret everywhere except
+on a real TPU backend.  Explicit ``interpret=True/False`` arguments always
+win — the override only fills the ``None`` default, so tests that pin a
+mode stay pinned.
+
+The variable is read at call time (not import time), so a test can set it
+with ``monkeypatch.setenv`` — but note the kernel wrappers are jitted with
+``interpret`` static, so each mode compiles (and caches) separately.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+ENV_VAR = "REPRO_PALLAS_INTERPRET"
+
+_TRUE = frozenset({"1", "true", "yes", "on", "interpret"})
+_FALSE = frozenset({"0", "false", "no", "off", "compile", "compiled"})
+
+
+def env_interpret() -> bool | None:
+    """The ``REPRO_PALLAS_INTERPRET`` override, or None when unset."""
+    raw = os.environ.get(ENV_VAR)
+    if raw is None:
+        return None
+    val = raw.strip().lower()
+    if val in _TRUE:
+        return True
+    if val in _FALSE:
+        return False
+    raise ValueError(
+        f"{ENV_VAR}={raw!r}: expected one of {sorted(_TRUE | _FALSE)}")
+
+
+def resolve_interpret(flag: bool | None = None) -> bool:
+    """Resolve an ``interpret`` argument: explicit flag > env var > backend
+    default (interpret everywhere but TPU)."""
+    if flag is not None:
+        return bool(flag)
+    env = env_interpret()
+    if env is not None:
+        return env
+    return jax.default_backend() != "tpu"

@@ -4,12 +4,20 @@ These kernels apply a *wave* of fast-path queue operations (paper Alg. 1) to
 the ring state in one invocation.  The ring's packed 64-bit entry word is
 represented as four parallel int32 field planes (cycle / safe / enq / idx) —
 TPU-native layout: 32-bit lanes, single-writer-per-slot semantics guaranteed
-by ticket uniqueness (Lemma III.1), applied in ticket order, which *is* the
-linearization order.
+by ticket uniqueness (Lemma III.1).
+
+Exact tickets within a batch hit pairwise-distinct slots (any wave spans
+< 2n tickets), so the batch needs no serial ordering at all: both kernels
+are a single gather → predicate → masked scatter over the field planes,
+vectorized across the whole wave.  Lanes whose predicate fails (and inactive
+``ticket == -1`` lanes) are routed to an out-of-range index and dropped, so
+only installing/consuming lanes touch the planes.  The same vectorized
+plane updates are exposed as pure-jnp functions (``enq_planes`` /
+``deq_planes``) so the fused round engine can inline them into a jitted
+``while_loop`` without a host round-trip.
 
 VMEM budget: the whole ring (4 × 2n × 4 B) plus the op batch live in VMEM;
 for n ≤ 64Ki that is ≤ 2 MiB — comfortably inside the 16 MiB/core budget.
-The field planes are aliased input→output so the update is in-place.
 """
 
 from __future__ import annotations
@@ -21,78 +29,87 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_env import resolve_interpret
+
+
+def enq_planes(cycles, safes, enqs, idxs, tickets, values, head, *,
+               nslots_log2: int, idx_bot: int):
+    """Vectorized TRYENQ install wave over the (2n,) field planes.
+
+    ``tickets``/``values`` are (B,) int32 (ticket -1 = inactive); active
+    tickets must hit pairwise-distinct slots (Lemma III.1 — true for any
+    ticket wave spanning < 2n).  ``head`` is a scalar.  One gather per
+    plane, one masked scatter per plane — no serial loop.  Returns
+    (cycles, safes, enqs, idxs, ok)."""
+    nslots = 1 << nslots_log2
+    idx_botc = idx_bot - 1
+    active = tickets >= 0
+    j = jnp.where(active, tickets & (nslots - 1), 0)
+    c = jnp.where(active, tickets >> nslots_log2, 0)
+    e_c, e_s, e_i = cycles[j], safes[j], idxs[j]
+    empty = (e_i == idx_bot) | (e_i == idx_botc)
+    can = active & (e_c < c) & empty & ((e_s == 1) | (head <= tickets))
+    w = jnp.where(can, j, nslots)          # failed lanes scatter out of range
+    cycles = cycles.at[w].set(c, mode="drop")
+    safes = safes.at[w].set(1, mode="drop")
+    enqs = enqs.at[w].set(1, mode="drop")
+    idxs = idxs.at[w].set(values, mode="drop")
+    return cycles, safes, enqs, idxs, can.astype(jnp.int32)
+
+
+def deq_planes(cycles, safes, enqs, idxs, tickets, *,
+               nslots_log2: int, idx_bot: int):
+    """Vectorized TRYDEQ consume wave (same distinct-slot precondition).
+    Returns (cycles, safes, enqs, idxs, values, ok)."""
+    nslots = 1 << nslots_log2
+    idx_botc = idx_bot - 1
+    active = tickets >= 0
+    j = jnp.where(active, tickets & (nslots - 1), 0)
+    c = jnp.where(active, tickets >> nslots_log2, 0)
+    e_c, e_s, e_e, e_i = cycles[j], safes[j], enqs[j], idxs[j]
+    empty = (e_i == idx_bot) | (e_i == idx_botc)
+    hit = active & (e_c == c) & (~empty) & (e_e == 1)
+    idxs = idxs.at[jnp.where(hit, j, nslots)].set(idx_botc, mode="drop")
+    adv = active & (~hit) & empty & (e_c < c)          # ⊥-advance
+    cycles = cycles.at[jnp.where(adv, j, nslots)].set(c, mode="drop")
+    uns = active & (~hit) & (~empty) & (e_c < c)       # mark unsafe
+    safes = safes.at[jnp.where(uns, j, nslots)].set(0, mode="drop")
+    vals = jnp.where(hit, e_i, -1)
+    return cycles, safes, enqs, idxs, vals, hit.astype(jnp.int32)
+
 
 def _enq_kernel(nslots_log2, idx_bot, head_ref, tickets_ref, values_ref,
                 cyc_in, saf_in, enq_in, idx_in,
                 cyc_ref, saf_ref, enq_ref, idx_ref, ok_ref):
-    nslots = 1 << nslots_log2
-    idx_botc = idx_bot - 1
-    cyc_ref[...] = cyc_in[...]
-    saf_ref[...] = saf_in[...]
-    enq_ref[...] = enq_in[...]
-    idx_ref[...] = idx_in[...]
-    ok_ref[...] = jnp.zeros_like(ok_ref)
-    head = head_ref[0]
-    b = tickets_ref.shape[1]
-
-    def body(i, _):
-        t = tickets_ref[0, i]
-        v = values_ref[0, i]
-        j = jnp.where(t >= 0, t & (nslots - 1), 0)
-        c = jnp.where(t >= 0, t >> nslots_log2, 0)
-        e_c, e_s, e_i = cyc_ref[0, j], saf_ref[0, j], idx_ref[0, j]
-        empty = (e_i == idx_bot) | (e_i == idx_botc)
-        can = (t >= 0) & (e_c < c) & empty & ((e_s == 1) | (head <= t))
-        cyc_ref[0, j] = jnp.where(can, c, e_c)
-        saf_ref[0, j] = jnp.where(can, 1, e_s)
-        enq_ref[0, j] = jnp.where(can, 1, enq_ref[0, j])
-        idx_ref[0, j] = jnp.where(can, v, e_i)
-        ok_ref[0, i] = can.astype(jnp.int32)
-        return 0
-
-    jax.lax.fori_loop(0, b, body, 0)
+    cyc, saf, enq, idx, ok = enq_planes(
+        cyc_in[...][0], saf_in[...][0], enq_in[...][0], idx_in[...][0],
+        tickets_ref[...][0], values_ref[...][0], head_ref[0],
+        nslots_log2=nslots_log2, idx_bot=idx_bot)
+    cyc_ref[...] = cyc[None]
+    saf_ref[...] = saf[None]
+    enq_ref[...] = enq[None]
+    idx_ref[...] = idx[None]
+    ok_ref[...] = ok[None]
 
 
 def _deq_kernel(nslots_log2, idx_bot, tickets_ref,
                 cyc_in, saf_in, enq_in, idx_in,
                 cyc_ref, saf_ref, enq_ref, idx_ref, val_ref, ok_ref):
-    nslots = 1 << nslots_log2
-    idx_botc = idx_bot - 1
-    cyc_ref[...] = cyc_in[...]
-    saf_ref[...] = saf_in[...]
-    enq_ref[...] = enq_in[...]
-    idx_ref[...] = idx_in[...]
-    val_ref[...] = jnp.full_like(val_ref, -1)
-    ok_ref[...] = jnp.zeros_like(ok_ref)
-    b = tickets_ref.shape[1]
-
-    def body(i, _):
-        t = tickets_ref[0, i]
-        j = jnp.where(t >= 0, t & (nslots - 1), 0)
-        c = jnp.where(t >= 0, t >> nslots_log2, 0)
-        e_c, e_s, e_e, e_i = (cyc_ref[0, j], saf_ref[0, j],
-                              enq_ref[0, j], idx_ref[0, j])
-        empty = (e_i == idx_bot) | (e_i == idx_botc)
-        hit = (t >= 0) & (e_c == c) & (~empty) & (e_e == 1)
-        idx_ref[0, j] = jnp.where(hit, idx_botc, e_i)     # CONSUME
-        adv = (t >= 0) & (~hit) & empty & (e_c < c)
-        cyc_ref[0, j] = jnp.where(adv, c, e_c)            # ⊥-advance
-        uns = (t >= 0) & (~hit) & (~empty) & (e_c < c)
-        saf_ref[0, j] = jnp.where(uns, 0, e_s)            # mark unsafe
-        val_ref[0, i] = jnp.where(hit, e_i, -1)
-        ok_ref[0, i] = hit.astype(jnp.int32)
-        return 0
-
-    jax.lax.fori_loop(0, b, body, 0)
+    cyc, saf, enq, idx, vals, ok = deq_planes(
+        cyc_in[...][0], saf_in[...][0], enq_in[...][0], idx_in[...][0],
+        tickets_ref[...][0], nslots_log2=nslots_log2, idx_bot=idx_bot)
+    cyc_ref[...] = cyc[None]
+    saf_ref[...] = saf[None]
+    enq_ref[...] = enq[None]
+    idx_ref[...] = idx[None]
+    val_ref[...] = vals[None]
+    ok_ref[...] = ok[None]
 
 
 @functools.partial(jax.jit,
                    static_argnames=("nslots_log2", "idx_bot", "interpret"))
-def ring_enqueue(cycles, safes, enqs, idxs, tickets, values, head, *,
-                 nslots_log2: int, idx_bot: int, interpret: bool = True):
-    """Apply a batch of TRYENQ installs in ticket order.  All field arrays
-    are (2n,) int32; tickets/values are (B,) int32 (ticket -1 = inactive).
-    Returns (cycles, safes, enqs, idxs, ok)."""
+def _ring_enqueue_jit(cycles, safes, enqs, idxs, tickets, values, head, *,
+                      nslots_log2: int, idx_bot: int, interpret: bool):
     nslots = 1 << nslots_log2
     b = tickets.shape[0]
     kern = functools.partial(_enq_kernel, nslots_log2, idx_bot)
@@ -117,12 +134,21 @@ def ring_enqueue(cycles, safes, enqs, idxs, tickets, values, head, *,
             idx.reshape(nslots), ok.reshape(b).astype(bool))
 
 
+def ring_enqueue(cycles, safes, enqs, idxs, tickets, values, head, *,
+                 nslots_log2: int, idx_bot: int, interpret=None):
+    """Apply a wave of TRYENQ installs (one masked scatter).  All field
+    arrays are (2n,) int32; tickets/values are (B,) int32 (ticket -1 =
+    inactive).  ``interpret=None`` resolves via REPRO_PALLAS_INTERPRET /
+    backend.  Returns (cycles, safes, enqs, idxs, ok)."""
+    return _ring_enqueue_jit(cycles, safes, enqs, idxs, tickets, values,
+                             head, nslots_log2=nslots_log2, idx_bot=idx_bot,
+                             interpret=resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit,
                    static_argnames=("nslots_log2", "idx_bot", "interpret"))
-def ring_dequeue(cycles, safes, enqs, idxs, tickets, *,
-                 nslots_log2: int, idx_bot: int, interpret: bool = True):
-    """Apply a batch of TRYDEQ consumes in ticket order.  Returns
-    (cycles, safes, enqs, idxs, values, ok)."""
+def _ring_dequeue_jit(cycles, safes, enqs, idxs, tickets, *,
+                      nslots_log2: int, idx_bot: int, interpret: bool):
     nslots = 1 << nslots_log2
     b = tickets.shape[0]
     kern = functools.partial(_deq_kernel, nslots_log2, idx_bot)
@@ -142,3 +168,12 @@ def ring_dequeue(cycles, safes, enqs, idxs, tickets, *,
     cyc, saf, enq, idx, val, ok = outs
     return (cyc.reshape(nslots), saf.reshape(nslots), enq.reshape(nslots),
             idx.reshape(nslots), val.reshape(b), ok.reshape(b).astype(bool))
+
+
+def ring_dequeue(cycles, safes, enqs, idxs, tickets, *,
+                 nslots_log2: int, idx_bot: int, interpret=None):
+    """Apply a wave of TRYDEQ consumes (one masked scatter).  Returns
+    (cycles, safes, enqs, idxs, values, ok)."""
+    return _ring_dequeue_jit(cycles, safes, enqs, idxs, tickets,
+                             nslots_log2=nslots_log2, idx_bot=idx_bot,
+                             interpret=resolve_interpret(interpret))

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_env import resolve_interpret
+
 LANES = 8 * 128  # one (8, 128) VREG tile per grid step
 
 
@@ -45,10 +47,16 @@ def _wavefaa_kernel(counter_ref, active_ref, tickets_ref, newctr_ref, acc_ref):
         newctr_ref[0] = acc_ref[0]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def wavefaa(active: jax.Array, counter: jax.Array, *, interpret: bool = True):
+def wavefaa(active: jax.Array, counter: jax.Array, *, interpret=None):
     """active: (N,) int32/bool with N % 1024 == 0; counter: (1,) int32.
+    ``interpret=None`` resolves via REPRO_PALLAS_INTERPRET / backend.
     Returns (tickets (N,) int32, new_counter (1,) int32)."""
+    return _wavefaa_jit(active, counter,
+                        interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _wavefaa_jit(active: jax.Array, counter: jax.Array, *, interpret: bool):
     n = active.shape[0]
     assert n % LANES == 0, f"N={n} must be a multiple of {LANES}"
     blocks = n // LANES

@@ -6,20 +6,24 @@ Two faces over the same queue core:
 * **sim face** — ``TaskFabric`` (sharded MPMC rings, wave-affinity
   placement, work stealing, priority lanes) driven by ``TaskRuntime``
   persistent workers under the adversarial interleaving scheduler;
-* **JAX face** — ``RoundRunner`` (deterministic jitted rounds over the
-  Pallas ring) and ``mesh_task_round`` (the same round at mesh scope on
-  ``core.distqueue``).
+* **JAX face** — ``RoundRunner`` / ``PriorityRoundRunner`` (deterministic
+  rounds over the Pallas ring/heap, running on the fused device-resident
+  megaround engine ``fusedrounds.FusedRounds`` by default with host sync
+  only at quiescence) and ``mesh_task_round`` (the same round at mesh
+  scope on ``core.distqueue``).
 """
 
 from .executor import Arrival, ExecutorConfig, Handler, TaskRuntime
+from .fusedrounds import FusedPriorityRounds, FusedRounds
 from .rounds import (HeapState, PriorityRoundRunner, RingState, RoundRunner,
                      heap_init, mesh_task_round, ring_init)
 from .taskpool import (FabricMetrics, HostTaskPool, PriorityFabric,
                        TaskFabric, TaskRecord, TaskSpec)
 
 __all__ = [
-    "Arrival", "ExecutorConfig", "FabricMetrics", "Handler", "HostTaskPool",
-    "HeapState", "PriorityFabric", "PriorityRoundRunner", "RingState",
-    "RoundRunner", "TaskFabric", "TaskRecord", "TaskSpec", "TaskRuntime",
-    "heap_init", "mesh_task_round", "ring_init",
+    "Arrival", "ExecutorConfig", "FabricMetrics", "FusedPriorityRounds",
+    "FusedRounds", "Handler", "HostTaskPool", "HeapState", "PriorityFabric",
+    "PriorityRoundRunner", "RingState", "RoundRunner", "TaskFabric",
+    "TaskRecord", "TaskSpec", "TaskRuntime", "heap_init", "mesh_task_round",
+    "ring_init",
 ]

@@ -1,0 +1,366 @@
+"""Fused device-resident round engine (DESIGN.md § 4.3).
+
+The legacy round loop (``rounds.py``) pays a host↔device round-trip per
+round: head/tail live as host ints, tickets are ``np.arange`` math, every
+enqueue chunk is its own ``pallas_call`` dispatch, and each round blocks on
+an ``ok`` readback.  This module fuses the whole dequeue → step → ticket →
+enqueue cycle into ONE jitted ``lax.while_loop``:
+
+* head/tail (ring) and size (heap) are device scalars in the loop carry;
+* the dequeue wave is the vectorized ``ring_dequeue`` scatter kernel;
+* child tickets come from the ``wavefaa`` kernel over the spawn mask — the
+  in-loop leader-FAA of paper Alg. 1 — instead of host ticket math;
+* the enqueue wave installs ALL children in one vectorized scatter (the
+  legacy path chunks them into ``batch``-sized dispatches);
+* the host syncs only at quiescence, or every ``sync_every`` rounds when
+  the caller wants a stats heartbeat.
+
+Overflow and ``max_rounds`` truncation cannot raise from traced code, so
+the loop carries an overflow flag, exits early, and the host driver raises
+``RuntimeError`` at the next sync — callers see the same errors as the
+legacy path, one sync later.
+
+Bit-determinism: within a round the fused engine issues exactly the
+tickets the legacy loop issues (wavefaa ranks = row-major compaction
+order, Lemma III.1), applies them through the same vectorized plane
+updates, and calls the same jitted ``step_fn`` on the same operands — so
+acc, field planes, head/tail, and stats counters are bit-identical to the
+legacy loop (tests assert this on BFS, raytrace, and tree workloads).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.heap_batch import (KEY_INF as HEAP_KEY_INF, OP_DELMIN,
+                                  OP_INSERT, OP_NOP, heap_apply)
+from ..kernels.pallas_env import resolve_interpret
+from ..kernels.ring_slots import ring_dequeue, ring_enqueue
+from ..kernels.wavefaa import LANES, wavefaa
+
+IDX_BOT = 2 ** 31 - 1           # ⊥ (⊥_c = IDX_BOT - 1); payloads must be smaller
+
+
+class RingState(NamedTuple):
+    """Field planes of the 2n-slot ring plus host-side head/tail tickets."""
+    cycles: jax.Array
+    safes: jax.Array
+    enqs: jax.Array
+    idxs: jax.Array
+    head: int
+    tail: int
+
+    @property
+    def occupancy(self) -> int:
+        return self.tail - self.head
+
+
+def ring_init(capacity_log2: int) -> RingState:
+    """Ring with logical capacity 2^capacity_log2 (2n physical slots).
+    Head = Tail = 2n, so first tickets carry cycle 1 over cycle-0 slots."""
+    nslots = 2 << capacity_log2
+    return RingState(
+        cycles=jnp.zeros((nslots,), jnp.int32),
+        safes=jnp.ones((nslots,), jnp.int32),
+        enqs=jnp.zeros((nslots,), jnp.int32),
+        idxs=jnp.full((nslots,), IDX_BOT, jnp.int32),
+        head=nslots, tail=nslots,
+    )
+
+
+class HeapState(NamedTuple):
+    """Field planes of the device heap plus the host-side size."""
+    keys: jax.Array
+    vals: jax.Array
+    size: int
+
+    @property
+    def occupancy(self) -> int:
+        return self.size
+
+
+def heap_init(capacity_log2: int) -> HeapState:
+    cap = 1 << capacity_log2
+    return HeapState(
+        keys=jnp.full((cap,), HEAP_KEY_INF, jnp.int32),
+        vals=jnp.full((cap,), -1, jnp.int32),
+        size=0,
+    )
+
+
+# StepFn: (acc, vals (B,), valid (B,)) -> (acc, child_vals (B,F), child_mask (B,F))
+StepFn = Callable[[Any, jax.Array, jax.Array], Tuple[Any, jax.Array, jax.Array]]
+
+# PriorityStepFn: (acc, keys (B,), vals (B,), valid (B,))
+#   -> (acc, child_keys (B,F), child_vals (B,F), child_mask (B,F))
+PriorityStepFn = Callable[
+    [Any, jax.Array, jax.Array, jax.Array],
+    Tuple[Any, jax.Array, jax.Array, jax.Array]]
+
+
+def _pad_lanes(mask: jax.Array) -> jax.Array:
+    """Pad a flat (N,) int32 spawn mask up to a LANES multiple for wavefaa."""
+    n = mask.shape[0]
+    npad = -(-n // LANES) * LANES
+    if npad == n:
+        return mask
+    return jnp.zeros((npad,), jnp.int32).at[:n].set(mask)
+
+
+class _FusedEngine:
+    """Shared host-side driver: chunk the megaround by ``sync_every``,
+    read back occupancy at each sync, keep stats/sync_log, and raise on
+    overflow or truncation.  Subclasses provide the jitted megaround via
+    ``chunk_fn`` and the structure-specific error wording."""
+
+    sync_every: int
+    capacity: int
+
+    def _reset(self) -> None:
+        self.stats: Dict[str, int] = {}
+        self.sync_log: List[Dict[str, int]] = []
+
+    def _drive(self, chunk_fn, max_rounds: int, what: str) -> None:
+        """``chunk_fn(limit)`` advances internal state by up to ``limit``
+        rounds and returns (occupancy, rounds_delta, overflow, processed,
+        spawned, max_occ) — one host sync per call."""
+        chunk = self.sync_every if self.sync_every > 0 else max_rounds
+        rounds = host_syncs = 0
+        while True:
+            limit = min(chunk, max_rounds - rounds)
+            occ, r, oflow, processed, spawned, max_occ = chunk_fn(limit)
+            rounds += r
+            host_syncs += 1
+            self.sync_log.append({"rounds": rounds, "occupancy": occ})
+            self.stats = {
+                "rounds": rounds, "processed": processed, "spawned": spawned,
+                "max_occupancy": max_occ, "drained": int(occ == 0),
+                "host_syncs": host_syncs,
+            }
+            if oflow:
+                raise RuntimeError(
+                    f"{what} overflow: occupancy {occ} + spawned children "
+                    f"exceed capacity {self.capacity} at round {rounds} "
+                    f"(raise capacity_log2 or lower the fanout)")
+            if occ == 0:
+                return
+            if rounds >= max_rounds:
+                raise RuntimeError(
+                    f"{what} round loop truncated at max_rounds="
+                    f"{max_rounds} with occupancy {occ}: not quiescent "
+                    f"(stats['drained']=0)")
+
+
+class FusedRounds(_FusedEngine):
+    """The FIFO megaround loop.  Same contract as the legacy
+    ``RoundRunner.run`` (exact tickets, row-major child order, quiescence),
+    with device-resident head/tail and host sync only at quiescence or
+    every ``sync_every`` rounds (0 = quiescence only)."""
+
+    def __init__(self, step_fn: StepFn, *, capacity_log2: int = 10,
+                 batch: int = 64, interpret=None, sync_every: int = 0) -> None:
+        self.step_fn = jax.jit(step_fn)
+        self.capacity_log2 = capacity_log2
+        self.nslots_log2 = capacity_log2 + 1
+        self.capacity = 1 << capacity_log2
+        self.batch = batch
+        if batch > self.capacity:
+            raise ValueError(f"batch {batch} exceeds ring capacity "
+                             f"{self.capacity}")
+        self.interpret = resolve_interpret(interpret)
+        self.sync_every = sync_every
+        self._reset()
+        self._megaround = jax.jit(self._megaround_impl)
+
+    # -- the jitted megaround: up to `limit` rounds entirely on device ------
+    def _megaround_impl(self, planes, head, tail, acc, processed, spawned,
+                        max_occ, limit):
+        batch, capacity = self.batch, self.capacity
+        nslots_log2, interp = self.nslots_log2, self.interpret
+        lane = jnp.arange(batch, dtype=jnp.int32)
+
+        def body(carry):
+            (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
+             max_occ, oflow, rounds) = carry
+            k = jnp.minimum(jnp.int32(batch), tail - head)
+            dtickets = jnp.where(lane < k, head + lane, -1)
+            cyc, saf, enq, idx, vals, ok = ring_dequeue(
+                cyc, saf, enq, idx, dtickets, nslots_log2=nslots_log2,
+                idx_bot=IDX_BOT, interpret=interp)
+            head = head + k
+            acc, cvals, cmask = self.step_fn(acc, vals, ok)
+            cm = jnp.broadcast_to(cmask.astype(bool), cvals.shape).reshape(-1)
+            cv = cvals.reshape(-1).astype(jnp.int32)
+            # in-loop leader FAA: child tickets from the spawn-mask ballot
+            etickets, newctr = wavefaa(_pad_lanes(cm.astype(jnp.int32)),
+                                       jnp.reshape(tail, (1,)),
+                                       interpret=interp)
+            etickets = etickets[:cv.shape[0]]
+            n_child = newctr[0] - tail
+            over = (tail + n_child - head) > capacity
+            etickets = jnp.where(over, -1, etickets)   # suppress the install
+            cyc, saf, enq, idx, _ = ring_enqueue(
+                cyc, saf, enq, idx, etickets, cv, head,
+                nslots_log2=nslots_log2, idx_bot=IDX_BOT, interpret=interp)
+            tail = jnp.where(over, tail, newctr[0])
+            return (cyc, saf, enq, idx, head, tail, acc,
+                    processed + k, spawned + jnp.where(over, 0, n_child),
+                    jnp.maximum(max_occ, tail - head), oflow | over,
+                    rounds + 1)
+
+        def cond(carry):
+            _, _, _, _, head, tail, _, _, _, _, oflow, rounds = carry
+            return (tail - head > 0) & (~oflow) & (rounds < limit)
+
+        carry = planes + (head, tail, acc, processed, spawned, max_occ,
+                          jnp.bool_(False), jnp.int32(0))
+        out = jax.lax.while_loop(cond, body, carry)
+        return (out[:4], out[4], out[5], out[6], out[7], out[8], out[9],
+                out[10], out[11])
+
+    def _seed(self, st: RingState, initial: np.ndarray) -> RingState:
+        n = len(initial)
+        if n > self.capacity:
+            raise RuntimeError(
+                f"ring overflow: {n} seed values exceed capacity "
+                f"{self.capacity} (raise capacity_log2)")
+        if n == 0:
+            return st
+        tickets = jnp.asarray(st.tail + np.arange(n, dtype=np.int64),
+                              jnp.int32)
+        cyc, saf, enq, idx, ok = ring_enqueue(
+            st.cycles, st.safes, st.enqs, st.idxs, tickets,
+            jnp.asarray(initial), jnp.asarray(st.head, jnp.int32),
+            nslots_log2=self.nslots_log2, idx_bot=IDX_BOT,
+            interpret=self.interpret)
+        assert bool(ok.all()), "exact tickets cannot miss"
+        return RingState(cyc, saf, enq, idx, st.head, st.tail + n)
+
+    def run(self, initial: np.ndarray, acc: Any = None,
+            max_rounds: int = 10_000) -> Tuple[Any, RingState]:
+        self._reset()
+        st = self._seed(ring_init(self.capacity_log2),
+                        np.asarray(initial, np.int32).reshape(-1))
+        acc = jax.tree_util.tree_map(jnp.asarray, acc)
+        state = [(st.cycles, st.safes, st.enqs, st.idxs),   # planes
+                 jnp.int32(st.head), jnp.int32(st.tail), acc,
+                 jnp.int32(0), jnp.int32(0),                # processed/spawned
+                 jnp.int32(st.tail - st.head)]              # max_occ
+
+        def chunk_fn(limit):
+            (state[0], state[1], state[2], state[3], state[4], state[5],
+             state[6], oflow, r) = self._megaround(*state, jnp.int32(limit))
+            occ = int(state[2] - state[1])              # THE host sync
+            return (occ, int(r), bool(oflow), int(state[4]), int(state[5]),
+                    int(state[6]))
+
+        self._drive(chunk_fn, max_rounds, "ring")
+        planes, head, tail, acc = state[0], state[1], state[2], state[3]
+        return acc, RingState(*planes, int(head), int(tail))
+
+
+class FusedPriorityRounds(_FusedEngine):
+    """``FusedRounds``' priority twin: chains ``heap_apply`` pop and insert
+    batches under one jitted ``lax.while_loop`` with the heap size as a
+    device scalar.  The pad/op vectors are loop-invariant constants (hoisted
+    by XLA), and children insert as one masked batch in row-major order —
+    identical heap evolution to the legacy chunked inserts."""
+
+    def __init__(self, step_fn: PriorityStepFn, *, capacity_log2: int = 10,
+                 batch: int = 64, arity_log2: int = 2, interpret=None,
+                 sync_every: int = 0) -> None:
+        self.step_fn = jax.jit(step_fn)
+        self.capacity_log2 = capacity_log2
+        self.capacity = 1 << capacity_log2
+        self.batch = batch
+        if batch > self.capacity:
+            raise ValueError(f"batch {batch} exceeds heap capacity "
+                             f"{self.capacity}")
+        self.arity_log2 = arity_log2
+        self.interpret = resolve_interpret(interpret)
+        self.sync_every = sync_every
+        self._reset()
+        self._megaround = jax.jit(self._megaround_impl)
+
+    def _megaround_impl(self, keys, vals, size, acc, processed, spawned,
+                        max_occ, limit):
+        batch, capacity = self.batch, self.capacity
+        cap_log2, arity_log2 = self.capacity_log2, self.arity_log2
+        interp = self.interpret
+        lane = jnp.arange(batch, dtype=jnp.int32)
+        pad = jnp.full((batch,), HEAP_KEY_INF, jnp.int32)   # loop-invariant
+
+        def body(carry):
+            (keys, vals, size, acc, processed, spawned, max_occ, oflow,
+             rounds) = carry
+            k = jnp.minimum(jnp.int32(batch), size)
+            pop_ops = jnp.where(lane < k, OP_DELMIN, OP_NOP)
+            keys, vals, size, outk, outv, ok = heap_apply(
+                keys, vals, size, pop_ops, pad, pad, cap_log2=cap_log2,
+                arity_log2=arity_log2, interpret=interp)
+            acc, ckeys, cvals, cmask = self.step_fn(acc, outk, outv, ok)
+            cm = jnp.broadcast_to(cmask.astype(bool),
+                                  ckeys.shape).reshape(-1)
+            ckf = ckeys.reshape(-1).astype(jnp.int32)
+            cvf = cvals.reshape(-1).astype(jnp.int32)
+            n_child = cm.sum(dtype=jnp.int32)
+            over = size + n_child > capacity
+            ins_ops = jnp.where(cm & ~over, OP_INSERT, OP_NOP)
+            keys, vals, size, _, _, _ = heap_apply(
+                keys, vals, size, ins_ops, ckf, cvf, cap_log2=cap_log2,
+                arity_log2=arity_log2, interpret=interp)
+            return (keys, vals, size, acc, processed + k,
+                    spawned + jnp.where(over, 0, n_child),
+                    jnp.maximum(max_occ, size), oflow | over, rounds + 1)
+
+        def cond(carry):
+            _, _, size, _, _, _, _, oflow, rounds = carry
+            return (size > 0) & (~oflow) & (rounds < limit)
+
+        carry = (keys, vals, size, acc, processed, spawned, max_occ,
+                 jnp.bool_(False), jnp.int32(0))
+        return jax.lax.while_loop(cond, body, carry)
+
+    def _seed(self, st: HeapState, ik: np.ndarray,
+              iv: np.ndarray) -> HeapState:
+        n = len(ik)
+        if st.size + n > self.capacity:
+            raise RuntimeError(
+                f"heap overflow: {n} seed values exceed capacity "
+                f"{self.capacity} (raise capacity_log2)")
+        if n == 0:
+            return st
+        ops = jnp.full((n,), OP_INSERT, jnp.int32)
+        keys, vals, size, _, _, ok = heap_apply(
+            st.keys, st.vals, jnp.asarray(st.size, jnp.int32), ops,
+            jnp.asarray(ik), jnp.asarray(iv), cap_log2=self.capacity_log2,
+            arity_log2=self.arity_log2, interpret=self.interpret)
+        assert bool(ok.all()), "capacity was checked: inserts cannot miss"
+        return HeapState(keys, vals, int(size))
+
+    def run(self, initial_keys: np.ndarray, initial_vals: np.ndarray,
+            acc: Any = None, max_rounds: int = 10_000
+            ) -> Tuple[Any, HeapState]:
+        self._reset()
+        ik = np.asarray(initial_keys, np.int32).reshape(-1)
+        iv = np.asarray(initial_vals, np.int32).reshape(-1)
+        assert ik.shape == iv.shape
+        st = self._seed(heap_init(self.capacity_log2), ik, iv)
+        acc = jax.tree_util.tree_map(jnp.asarray, acc)
+        state = [st.keys, st.vals, jnp.asarray(st.size, jnp.int32), acc,
+                 jnp.int32(0), jnp.int32(0),                # processed/spawned
+                 jnp.int32(st.size)]                        # max_occ
+
+        def chunk_fn(limit):
+            (state[0], state[1], state[2], state[3], state[4], state[5],
+             state[6], oflow, r) = self._megaround(*state, jnp.int32(limit))
+            occ = int(state[2])                         # THE host sync
+            return (occ, int(r), bool(oflow), int(state[4]), int(state[5]),
+                    int(state[6]))
+
+        self._drive(chunk_fn, max_rounds, "heap")
+        return state[3], HeapState(state[0], state[1], int(state[2]))

@@ -9,12 +9,21 @@ analogue of Lemma III.1, with no nondeterminism left.  One round is
     run the user's jitted step function on the batch,
     enqueue the children it emits (``ring_enqueue``) in row-major order.
 
-Head/Tail live on the host between rounds (the round loop is data-dependent:
-it stops at quiescence), so tickets are computed exactly and every kernel
-invocation uses fixed ``batch``-sized operands — two compilations total.
-Because ticket issue is exact, TRYENQ/TRYDEQ never miss: the kernels'
-conditional paths are exercised but the ``ok`` flags certify every op, and
-the whole run is bit-deterministic (pure integer jnp + host ints, no RNG).
+Two execution engines share this contract:
+
+* **fused** (default) — ``fusedrounds.FusedRounds``: the whole round cycle
+  runs on device inside one jitted ``lax.while_loop`` with head/tail as
+  device scalars and ``wavefaa`` as the in-loop child-ticket source; the
+  host syncs only at quiescence (or every ``sync_every`` rounds).
+* **legacy** (``fused=False``) — one host-driven round per iteration:
+  head/tail as host ints, exact ``np.arange`` tickets, one kernel dispatch
+  per op wave.  Slower (every round is a host sync) but each round is a
+  separate, inspectable step — keep it for adversarial/step-debug use.
+
+Both engines are bit-identical (same acc, same planes, same head/tail —
+asserted by tests) and raise ``RuntimeError`` on ring/heap overflow and on
+``max_rounds`` truncation, so a non-drained return is impossible to
+mistake for quiescence.
 
 At mesh scope the same round structure runs on ``core.distqueue``:
 ``mesh_task_round`` composes one enqueue round and one dequeue round inside
@@ -24,7 +33,7 @@ collective orders the whole mesh's tickets (DESIGN.md § 2.3).
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,80 +41,87 @@ import numpy as np
 
 from ..core.distqueue import dist_dequeue_round, dist_enqueue_round
 from ..kernels.heap_batch import KEY_INF as HEAP_KEY_INF, heap_apply
+from ..kernels.pallas_env import resolve_interpret
 from ..kernels.ring_slots import ring_dequeue, ring_enqueue
+from .fusedrounds import (IDX_BOT, FusedPriorityRounds, FusedRounds,
+                          HeapState, PriorityStepFn, RingState, StepFn,
+                          heap_init, ring_init)
 
-IDX_BOT = 2 ** 31 - 1           # ⊥ (⊥_c = IDX_BOT - 1); payloads must be smaller
-
-
-class RingState(NamedTuple):
-    """Field planes of the 2n-slot ring plus host-side head/tail tickets."""
-    cycles: jax.Array
-    safes: jax.Array
-    enqs: jax.Array
-    idxs: jax.Array
-    head: int
-    tail: int
-
-    @property
-    def occupancy(self) -> int:
-        return self.tail - self.head
-
-
-def ring_init(capacity_log2: int) -> RingState:
-    """Ring with logical capacity 2^capacity_log2 (2n physical slots).
-    Head = Tail = 2n, so first tickets carry cycle 1 over cycle-0 slots."""
-    nslots = 2 << capacity_log2
-    return RingState(
-        cycles=jnp.zeros((nslots,), jnp.int32),
-        safes=jnp.ones((nslots,), jnp.int32),
-        enqs=jnp.zeros((nslots,), jnp.int32),
-        idxs=jnp.full((nslots,), IDX_BOT, jnp.int32),
-        head=nslots, tail=nslots,
-    )
-
-
-# StepFn: (acc, vals (B,), valid (B,)) -> (acc, child_vals (B,F), child_mask (B,F))
-StepFn = Callable[[Any, jax.Array, jax.Array], Tuple[Any, jax.Array, jax.Array]]
+__all__ = [
+    "IDX_BOT", "HeapState", "PriorityRoundRunner", "PriorityStepFn",
+    "RingState", "RoundRunner", "StepFn", "heap_init", "mesh_task_round",
+    "ring_init",
+]
 
 
 class RoundRunner:
-    """Drives ``step_fn`` to quiescence through the Pallas ring."""
+    """Drives ``step_fn`` to quiescence through the Pallas ring.
+
+    ``fused=True`` (default) delegates to the device-resident megaround
+    loop; ``fused=False`` keeps the legacy host-driven round loop.  Both
+    populate ``stats`` with rounds / processed / spawned / max_occupancy /
+    drained / host_syncs and raise on overflow or truncation."""
 
     def __init__(self, step_fn: StepFn, *, capacity_log2: int = 10,
-                 batch: int = 64, interpret: bool = True) -> None:
+                 batch: int = 64, interpret=None, fused: bool = True,
+                 sync_every: int = 0) -> None:
         self.step_fn = jax.jit(step_fn)
         self.capacity_log2 = capacity_log2
         self.nslots_log2 = capacity_log2 + 1
         self.capacity = 1 << capacity_log2
         self.batch = batch
-        self.interpret = interpret
+        self.interpret = resolve_interpret(interpret)
+        self.fused = fused
         self.stats: Dict[str, int] = {}
+        self.sync_log: List[Dict[str, int]] = []
+        if fused:
+            self._engine = FusedRounds(
+                step_fn, capacity_log2=capacity_log2, batch=batch,
+                interpret=self.interpret, sync_every=sync_every)
+        else:
+            self._engine = None
+            # legacy-path op buffers, reused across rounds (safe because
+            # jnp.asarray copies and every kernel call syncs on its ok)
+            self._enq_t = np.empty(batch, np.int32)
+            self._enq_v = np.empty(batch, np.int32)
+            self._deq_t = np.empty(batch, np.int32)
 
     def _enq_chunk(self, st: RingState, vals: np.ndarray) -> RingState:
-        b, k = self.batch, len(vals)
-        assert k <= b
+        k = len(vals)
+        assert k <= self.batch
         if st.occupancy + k > self.capacity:
             raise RuntimeError(
                 f"ring overflow: occupancy {st.occupancy} + {k} children "
                 f"exceeds capacity {self.capacity} (raise capacity_log2 or "
                 f"lower the fanout)")
-        tickets = np.full(b, -1, np.int32)
-        tickets[:k] = st.tail + np.arange(k, dtype=np.int32)
-        values = np.full(b, -1, np.int32)
-        values[:k] = vals
+        self._enq_t.fill(-1)
+        self._enq_t[:k] = st.tail + np.arange(k, dtype=np.int32)
+        self._enq_v.fill(-1)
+        self._enq_v[:k] = vals
         cyc, saf, enq, idx, ok = ring_enqueue(
             st.cycles, st.safes, st.enqs, st.idxs,
-            jnp.asarray(tickets), jnp.asarray(values),
-            jnp.asarray([st.head], jnp.int32).reshape(()),
+            jnp.asarray(self._enq_t), jnp.asarray(self._enq_v),
+            jnp.asarray(st.head, jnp.int32),
             nslots_log2=self.nslots_log2, idx_bot=IDX_BOT,
             interpret=self.interpret)
+        self._host_syncs += 1
         assert bool(ok[:k].all()), "exact tickets cannot miss"
         return RingState(cyc, saf, enq, idx, st.head, st.tail + k)
 
     def run(self, initial: np.ndarray, acc: Any = None,
             max_rounds: int = 10_000) -> Tuple[Any, RingState]:
         """Seed the ring with ``initial`` task values, run rounds until the
-        ring drains (or max_rounds).  Returns (acc, final ring state)."""
+        ring drains.  Returns (acc, final ring state); raises RuntimeError
+        if ``max_rounds`` is hit before quiescence."""
+        if self._engine is not None:
+            try:
+                return self._engine.run(initial, acc, max_rounds)
+            finally:
+                self.stats = dict(self._engine.stats, fused=1)
+                self.sync_log = self._engine.sync_log
+        self.stats = {}
+        self.sync_log = []
+        self._host_syncs = 0
         st = ring_init(self.capacity_log2)
         initial = np.asarray(initial, np.int32)
         for i in range(0, len(initial), self.batch):
@@ -114,18 +130,21 @@ class RoundRunner:
         max_occ = st.occupancy
         while st.occupancy > 0 and rounds < max_rounds:
             k = min(self.batch, st.occupancy)
-            tickets = np.full(self.batch, -1, np.int32)
-            tickets[:k] = st.head + np.arange(k, dtype=np.int32)
+            self._deq_t.fill(-1)
+            self._deq_t[:k] = st.head + np.arange(k, dtype=np.int32)
             cyc, saf, enq, idx, vals, ok = ring_dequeue(
-                st.cycles, st.safes, st.enqs, st.idxs, jnp.asarray(tickets),
+                st.cycles, st.safes, st.enqs, st.idxs,
+                jnp.asarray(self._deq_t),
                 nslots_log2=self.nslots_log2, idx_bot=IDX_BOT,
                 interpret=self.interpret)
+            self._host_syncs += 1
             assert bool(ok[:k].all()), "exact tickets cannot miss"
             st = RingState(cyc, saf, enq, idx, st.head + k, st.tail)
             acc, cvals, cmask = self.step_fn(acc, vals, ok)
             cv = np.asarray(cvals).reshape(-1)
             cm = np.broadcast_to(np.asarray(cmask).astype(bool),
                                  np.asarray(cvals).shape).reshape(-1)
+            self._host_syncs += 1
             children = cv[cm]                      # row-major ⇒ deterministic
             for i in range(0, len(children), self.batch):
                 st = self._enq_chunk(st, children[i:i + self.batch])
@@ -135,7 +154,13 @@ class RoundRunner:
             max_occ = max(max_occ, st.occupancy)
         self.stats = {"rounds": rounds, "processed": processed,
                       "spawned": spawned, "max_occupancy": max_occ,
-                      "drained": int(st.occupancy == 0)}
+                      "drained": int(st.occupancy == 0),
+                      "host_syncs": self._host_syncs, "fused": 0}
+        if st.occupancy > 0:
+            raise RuntimeError(
+                f"round loop truncated at max_rounds={max_rounds} with "
+                f"occupancy {st.occupancy}: not quiescent "
+                f"(stats['drained']=0)")
         return acc, st
 
 
@@ -144,83 +169,85 @@ class RoundRunner:
 # ---------------------------------------------------------------------------
 
 
-class HeapState(NamedTuple):
-    """Field planes of the device heap plus the host-side size."""
-    keys: jax.Array
-    vals: jax.Array
-    size: int
-
-    @property
-    def occupancy(self) -> int:
-        return self.size
-
-
-def heap_init(capacity_log2: int) -> HeapState:
-    cap = 1 << capacity_log2
-    return HeapState(
-        keys=jnp.full((cap,), HEAP_KEY_INF, jnp.int32),
-        vals=jnp.full((cap,), -1, jnp.int32),
-        size=0,
-    )
-
-
-# PriorityStepFn: (acc, keys (B,), vals (B,), valid (B,))
-#   -> (acc, child_keys (B,F), child_vals (B,F), child_mask (B,F))
-PriorityStepFn = Callable[
-    [Any, jax.Array, jax.Array, jax.Array],
-    Tuple[Any, jax.Array, jax.Array, jax.Array]]
-
-
 class PriorityRoundRunner:
     """``RoundRunner``'s priority twin: drives ``step_fn`` to quiescence
     through the Pallas heap kernel.  One round pops the ``batch`` smallest
     (key, val) pairs (EDF: earliest deadlines), runs the jitted step, and
     inserts the children it emits in row-major order — every kernel batch
     is applied in batch-index order, so the whole run is bit-deterministic
-    exactly like the FIFO rounds."""
+    exactly like the FIFO rounds.  ``fused=True`` (default) chains the
+    pop/insert batches under one device-resident ``lax.while_loop``."""
 
     def __init__(self, step_fn: PriorityStepFn, *, capacity_log2: int = 10,
-                 batch: int = 64, arity_log2: int = 2,
-                 interpret: bool = True) -> None:
+                 batch: int = 64, arity_log2: int = 2, interpret=None,
+                 fused: bool = True, sync_every: int = 0) -> None:
         self.step_fn = jax.jit(step_fn)
         self.capacity_log2 = capacity_log2
         self.capacity = 1 << capacity_log2
         self.batch = batch
         self.arity_log2 = arity_log2
-        self.interpret = interpret
+        self.interpret = resolve_interpret(interpret)
+        self.fused = fused
         self.stats: Dict[str, int] = {}
+        self.sync_log: List[Dict[str, int]] = []
+        if fused:
+            self._engine = FusedPriorityRounds(
+                step_fn, capacity_log2=capacity_log2, batch=batch,
+                arity_log2=arity_log2, interpret=self.interpret,
+                sync_every=sync_every)
+        else:
+            self._engine = None
+            # legacy-path op buffers, reused across rounds (safe because
+            # jnp.asarray copies and every kernel call syncs on its ok)
+            self._ins_ops = np.empty(batch, np.int32)
+            self._ins_k = np.empty(batch, np.int32)
+            self._ins_v = np.empty(batch, np.int32)
+            self._pop_ops = np.empty(batch, np.int32)
+            self._pad = jnp.full((batch,), HEAP_KEY_INF, jnp.int32)
 
-    def _apply(self, st: HeapState, ops: np.ndarray, keys: np.ndarray,
-               vals: np.ndarray):
+    def _apply(self, st: HeapState, ops, keys, vals):
         k, v, size, outk, outv, ok = heap_apply(
             st.keys, st.vals, jnp.asarray(st.size, jnp.int32),
-            jnp.asarray(ops), jnp.asarray(keys), jnp.asarray(vals),
+            ops, keys, vals,
             cap_log2=self.capacity_log2, arity_log2=self.arity_log2,
             interpret=self.interpret)
+        self._host_syncs += 1
         return HeapState(k, v, int(size)), outk, outv, ok
 
     def _ins_chunk(self, st: HeapState, ckeys: np.ndarray,
                    cvals: np.ndarray) -> HeapState:
-        b, n = self.batch, len(ckeys)
-        assert n <= b
+        n = len(ckeys)
+        assert n <= self.batch
         if st.size + n > self.capacity:
             raise RuntimeError(
                 f"heap overflow: size {st.size} + {n} children exceeds "
                 f"capacity {self.capacity} (raise capacity_log2 or lower "
                 f"the fanout)")
-        ops = np.full(b, -1, np.int32)
-        ops[:n] = 0
-        keys = np.full(b, HEAP_KEY_INF, np.int32)
-        keys[:n] = ckeys
-        vals = np.full(b, -1, np.int32)
-        vals[:n] = cvals
-        st, _, _, ok = self._apply(st, ops, keys, vals)
+        self._ins_ops.fill(-1)
+        self._ins_ops[:n] = 0
+        self._ins_k.fill(HEAP_KEY_INF)
+        self._ins_k[:n] = ckeys
+        self._ins_v.fill(-1)
+        self._ins_v[:n] = cvals
+        st, _, _, ok = self._apply(st, jnp.asarray(self._ins_ops),
+                                   jnp.asarray(self._ins_k),
+                                   jnp.asarray(self._ins_v))
         assert bool(ok[:n].all()), "capacity was checked: inserts cannot miss"
         return st
 
     def run(self, initial_keys: np.ndarray, initial_vals: np.ndarray,
             acc: Any = None, max_rounds: int = 10_000
             ) -> Tuple[Any, HeapState]:
+        if self._engine is not None:
+            try:
+                return self._engine.run(initial_keys, initial_vals, acc,
+                                        max_rounds)
+            finally:
+                self.stats = dict(self._engine.stats, fused=1)
+                self.sync_log = self._engine.sync_log
+        self.stats = {}
+        self.sync_log = []
+        self._host_syncs = 0
         st = heap_init(self.capacity_log2)
         ik = np.asarray(initial_keys, np.int32)
         iv = np.asarray(initial_vals, np.int32)
@@ -232,16 +259,17 @@ class PriorityRoundRunner:
         max_occ = st.size
         while st.size > 0 and rounds < max_rounds:
             k = min(self.batch, st.size)
-            ops = np.full(self.batch, -1, np.int32)
-            ops[:k] = 1
-            pad = np.full(self.batch, HEAP_KEY_INF, np.int32)
-            st, outk, outv, ok = self._apply(st, ops, pad, pad)
+            self._pop_ops.fill(-1)
+            self._pop_ops[:k] = 1
+            st, outk, outv, ok = self._apply(st, jnp.asarray(self._pop_ops),
+                                             self._pad, self._pad)
             assert bool(ok[:k].all()), "size was checked: pops cannot miss"
             acc, ckeys, cvals, cmask = self.step_fn(acc, outk, outv, ok)
             ck = np.asarray(ckeys).reshape(-1)
             cv = np.asarray(cvals).reshape(-1)
             cm = np.broadcast_to(np.asarray(cmask).astype(bool),
                                  np.asarray(ckeys).shape).reshape(-1)
+            self._host_syncs += 1
             children_k, children_v = ck[cm], cv[cm]   # row-major order
             for i in range(0, len(children_k), self.batch):
                 st = self._ins_chunk(st, children_k[i:i + self.batch],
@@ -252,7 +280,12 @@ class PriorityRoundRunner:
             max_occ = max(max_occ, st.size)
         self.stats = {"rounds": rounds, "processed": processed,
                       "spawned": spawned, "max_occupancy": max_occ,
-                      "drained": int(st.size == 0)}
+                      "drained": int(st.size == 0),
+                      "host_syncs": self._host_syncs, "fused": 0}
+        if st.size > 0:
+            raise RuntimeError(
+                f"priority round loop truncated at max_rounds={max_rounds} "
+                f"with size {st.size}: not quiescent (stats['drained']=0)")
         return acc, st
 
 
