@@ -73,7 +73,7 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # Trajectory rows keep only scheduling-relevant metrics; everything else in
 # a row (configs, counts) rides along untouched.
-_TRAJECTORY_SECTIONS = ("runtime", "priority", "rounds")
+_TRAJECTORY_SECTIONS = ("runtime", "priority", "rounds", "mesh")
 
 
 def _git_rev() -> str:
@@ -123,7 +123,8 @@ def main() -> None:
                     help="also emit {section: [rows]} JSON to PATH ('-' = stdout)")
     ap.add_argument("--section", default=None,
                     help="comma-separated subset of: throughput, profiling, "
-                         "bfs, raytrace, kernels, runtime, priority, rounds")
+                         "bfs, raytrace, kernels, runtime, priority, rounds, "
+                         "mesh")
     ap.add_argument("--emit-trajectory", nargs="?", const="auto",
                     default=None, metavar="N",
                     help="write BENCH_<n>.json at the repo root (n "
@@ -135,7 +136,7 @@ def main() -> None:
         except ValueError:
             ap.error(f"--emit-trajectory expects an integer, got "
                      f"{args.emit_trajectory!r}")
-    from . import (bench_bfs, bench_kernels, bench_profiling,
+    from . import (bench_bfs, bench_kernels, bench_mesh, bench_profiling,
                    bench_raytrace, bench_rounds, bench_runtime,
                    bench_throughput)
 
@@ -146,6 +147,7 @@ def main() -> None:
     kw_pri = dict(bursts=12) if args.quick else {}
     kw_rnd = (dict(batches=(64, 256), fanout_depth=8, bfs_n=1024)
               if args.quick else {})
+    kw_mesh = dict(batches=(64,), bfs_n=512) if args.quick else {}
     sections = {
         "throughput": lambda out: bench_throughput.main(out, **kw_thr),
         "profiling": lambda out: bench_profiling.main(out, **kw_prof),
@@ -155,6 +157,7 @@ def main() -> None:
         "runtime": lambda out: bench_runtime.main(out, **kw_rt),
         "priority": lambda out: bench_runtime.priority_main(out, **kw_pri),
         "rounds": lambda out: bench_rounds.main(out, **kw_rnd),
+        "mesh": lambda out: bench_mesh.main(out, **kw_mesh),
     }
     if args.section:
         todo = [s.strip() for s in args.section.split(",") if s.strip()]

@@ -274,6 +274,114 @@ def bfs_rounds(g: CSRGraph, source: int = 0, *, batch: int = 64,
     return np.asarray(dist), dict(runner.stats)
 
 
+def bfs_mesh_rounds_runner(g: CSRGraph, *, mesh=None, shards: int = None,
+                           axis: str = "data", batch: int = 64,
+                           fused: bool = True, sync_every: int = 0,
+                           capacity_log2: int = None):
+    """Build the *mesh*-scope BFS runner (DESIGN.md § 2.3): frontier
+    vertices flow through the replicated distqueue, each shard steps its
+    claimed slice of the round, and children publish back with one psum
+    per round.  Returns ``(runner, seeds, init_fn)``.
+
+    The queue payload packs ``(distance, vertex)`` as ``d·n + v`` so a
+    claim is self-contained — a shard can relax a vertex it has never seen
+    (its local label array is stale for vertices other shards claimed).
+    The step is asynchronous label-correcting: a claim expands only if its
+    distance improves the shard's local label, and per-shard labels are
+    min-combined at quiescence, which converges to exact BFS distances
+    (every shortest-path prefix is claimed *somewhere* with its true
+    distance and re-published on improvement).  Returns
+    ``(runner, init_fn)`` where ``init_fn(source)`` builds the label
+    accumulator."""
+    from ..jaxcompat import make_mesh
+    from ..runtime import MeshRoundRunner
+
+    n = g.n
+    if mesh is None:
+        shards = shards or len(jax.devices())
+        mesh = make_mesh((shards,), (axis,))
+    nshards = int(mesh.shape[axis])
+    if n * (n + 2) >= 2 ** 31:
+        raise ValueError(f"graph too large for packed (d, v) payloads: "
+                         f"n={n} needs n*(n+2) < 2^31")
+    deg = np.diff(g.row_ptr).astype(np.int64)
+    fan = max(int(deg.max()) if n else 0, 1)
+    # the in-batch winner key is nd·(batch·fan) + order, nd ≤ n
+    if (n + 1) * batch * fan >= 2 ** 31:
+        raise ValueError(f"batch {batch} x max degree {fan} too wide for "
+                         f"int32 winner keys on n={n}: needs "
+                         f"(n+1)*batch*fan < 2^31")
+    nbr = np.full((n, fan), -1, np.int32)
+    rows = np.repeat(np.arange(n), deg)
+    pos = np.arange(g.m) - np.repeat(g.row_ptr[:-1].astype(np.int64), deg)
+    nbr[rows, pos] = g.col_idx
+    nbr_j = jnp.asarray(nbr)
+    big = np.iinfo(np.int32).max
+
+    def step(dist, vals, valid):
+        b = vals.shape[0]
+        v = jnp.where(valid, vals % n, 0)
+        d = jnp.where(valid, vals // n, 0)
+        # expand unless the local label already beats the claim (labels are
+        # real path lengths ≥ the true distance, so a true-distance claim
+        # is never stale; ``==`` claims re-expand but spawn only improving
+        # children, which keeps the recursion finite)
+        fresh = valid & (d <= dist[v])
+        dist = dist.at[jnp.where(fresh, v, n)].min(d, mode="drop")
+        w = jnp.where(fresh[:, None], nbr_j[v], -1)    # (B, F)
+        wc = jnp.clip(w, 0, n - 1)
+        nd = jnp.broadcast_to((d + 1)[:, None], w.shape)
+        elig = (w >= 0) & (nd < dist[wc])
+        # in-batch winner per target: smallest nd, then row-major order
+        bf = b * w.shape[1]
+        order = jnp.arange(bf, dtype=jnp.int32)
+        key = nd.reshape(-1) * bf + order
+        ef, wf, ndf = elig.reshape(-1), w.reshape(-1), nd.reshape(-1)
+        tgt = jnp.where(ef, wf, n)
+        claim = jnp.full((n + 1,), big, jnp.int32).at[tgt].min(
+            jnp.where(ef, key, big))
+        win = ef & (claim[tgt] == key)
+        dist = dist.at[jnp.where(win, wf, n)].min(ndf, mode="drop")
+        cv = jnp.where(win, ndf * n + jnp.clip(wf, 0, n - 1), 0)
+        return dist, cv.reshape(w.shape), win.reshape(w.shape)
+
+    def combine(stacked):                              # (shards, n) labels
+        m = stacked.min(0)
+        return jnp.where(m == big, -1, m)
+
+    if capacity_log2 is None:
+        capacity_log2 = max(
+            int(np.ceil(np.log2(max(2 * n * nshards, 4 * batch * nshards)))),
+            4)
+    runner = MeshRoundRunner(step, mesh=mesh, axis=axis,
+                             capacity_log2=capacity_log2, batch=batch,
+                             fused=fused, sync_every=sync_every,
+                             combine=combine)
+
+    def init_fn(source: int):
+        # all labels unvisited (BIG) — the source's 0 arrives via its seed
+        # claim (pre-setting it would make that claim non-improving and
+        # suppress the very first expansion)
+        del source
+        return jnp.full((n,), big, jnp.int32)
+
+    return runner, init_fn
+
+
+def bfs_mesh_rounds(g: CSRGraph, source: int = 0, *, mesh=None,
+                    shards: int = None, batch: int = 64, fused: bool = True,
+                    sync_every: int = 0, max_rounds: int = 100_000
+                    ) -> Tuple[np.ndarray, Dict]:
+    """BFS on the mesh-fused round engine across ≥1 shards: exact distances
+    at quiescence, host sync only at quiescence when ``fused=True``."""
+    runner, init_fn = bfs_mesh_rounds_runner(g, mesh=mesh, shards=shards,
+                                             batch=batch, fused=fused,
+                                             sync_every=sync_every)
+    dist, _ = runner.run([source], acc=init_fn(source),
+                         max_rounds=max_rounds)
+    return np.asarray(dist), dict(runner.stats)
+
+
 def bfs_reference(g: CSRGraph, source: int = 0) -> np.ndarray:
     """Plain numpy BFS oracle."""
     from collections import deque

@@ -2,28 +2,48 @@
 carried above the chip (DESIGN.md § 2.3).
 
 Aggregation hierarchy: lane → block (Pallas wavefaa, one counter update) →
-chip → mesh (this module: one exclusive-prefix-sum collective hands every
-chip a contiguous ticket block).  The ring state (packed field planes) is
-replicated per shard and advanced by the deterministic per-round ticket
-order, so every chip holds an identical view after each round — FIFO and
-linearizability hold by construction: rounds are totally ordered by the
-collective schedule, and within a round tickets order operations exactly as
+chip → mesh (this module: one collective hands every chip the round's
+compact op blocks *and* a contiguous ticket block).  The ring state (the
+same four int32 field planes as ``kernels/ring_slots``) is replicated per
+shard and advanced by the deterministic per-round ticket order, so every
+chip holds an identical view after each round — FIFO and linearizability
+hold by construction: rounds are totally ordered by the collective
+schedule, and within a round tickets order operations exactly as
 per-thread FAA would (Lemma III.1 applied at mesh scope).
 
 API (pure-functional, jit/shard_map-compatible):
 
-    state = dist_queue_init(capacity)
+    state = dist_queue_init(capacity)                      # capacity → pow2
     state, granted = dist_enqueue_round(state, values, mask, axis="data")
     state, vals, ok = dist_dequeue_round(state, want, axis="data")
+    state, vals, ok = dist_claim_round(state, k, batch, axis="data")
 
-Each round costs exactly one psum (ticket aggregation); payload exchange
-uses all_gather of the round's compact blocks — the batched analogue of the
-paper's single leader atomic per wave.
+Two interchangeable application engines (bit-identical planes):
 
-Note: the ring planes come back *deterministically identical* on every
-shard, but shard_map's replication checker cannot infer that through the
-gathered-scan; wrap calls with ``shard_map(..., check_rep=False)`` and
-out_spec the state as ``P()`` (see tests/test_distqueue.py).
+* ``engine="planes"`` (default) — the round's gathered ops are applied as
+  one-shot masked scatters through the *shared* ``ring_slots.enq_planes``
+  / ``deq_planes`` updates.  A round's tickets are contiguous, so chunking
+  them into sub-waves of 2n consecutive tickets guarantees pairwise-
+  distinct slots per sub-wave (Lemma III.1's precondition); rounds with
+  ≤ 2n ops (the common case) are a single scatter.
+* ``engine="scan"`` — the legacy serial reference: one op per scan step in
+  ticket order (sorted by ticket *age* ``ticket - tail`` with an
+  order-safe ``INT32_MAX`` sentinel for inactive lanes — sorting raw
+  tickets breaks once they pass the sentinel value, and sorting with a
+  mid-range sentinel interleaves masked-out lanes before live ones).
+
+Wrap safety (wCQ-style): tail/head/tickets are *unsigned mod-2^32*
+counters carried in int32.  All comparisons are wraparound differences,
+slot index is a power-of-two mask, and the cycle is a logical shift — so
+the queue survives ticket counters crossing 2^31 (liveness of an op is an
+explicit mask, never a sign test).
+
+Replication typing: payload exchange uses ``mesh_round_gather`` — a
+single psum that is bit-exact integer gather *and* replicated-typed, so
+the updated planes satisfy shard_map's replication checker and callers
+keep ``P()`` out_specs without ``check_rep=False``.  ``dist_claim_round``
+needs no collective at all: the claim schedule is a pure function of the
+replicated head/tail.
 """
 
 from __future__ import annotations
@@ -33,125 +53,265 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..distributed.collectives import mesh_ticket_base
+from ..distributed.collectives import mesh_round_gather, mesh_ticket_base  # noqa: F401  (ticket base re-exported for callers)
 from ..jaxcompat import axis_size as _axis_size, pvary as _pvary
+from ..kernels.ring_slots import deq_planes, enq_planes
 
 IDX_BOT = jnp.int32(2 ** 31 - 1)
 IDX_BOTC = jnp.int32(2 ** 31 - 2)
+_SENTINEL = jnp.int32(2 ** 31 - 1)      # order-safe: sorts after any live rank
 
 
 class DistQueueState(NamedTuple):
-    """Replicated ring state (per-shard identical by construction)."""
+    """Replicated ring state (per-shard identical by construction).  Same
+    field-plane layout as the chip-level ``RingState`` so both levels share
+    the ``ring_slots`` plane updates."""
     cycles: jax.Array   # (2n,) int32
     safes: jax.Array    # (2n,) int32
+    enqs: jax.Array     # (2n,) int32
     idxs: jax.Array     # (2n,) int32 — payload or ⊥ / ⊥_c
-    tail: jax.Array     # () int32
-    head: jax.Array     # () int32
+    tail: jax.Array     # () int32 — unsigned mod-2^32 ticket counter
+    head: jax.Array     # () int32 — unsigned mod-2^32 ticket counter
+
+    @property
+    def occupancy(self):
+        return self.tail - self.head    # wraparound difference
 
 
-def dist_queue_init(capacity: int) -> DistQueueState:
-    n2 = 2 * capacity
+def dist_queue_init(capacity: int, *, start: int = None) -> DistQueueState:
+    """Ring with logical capacity rounded up to a power of two (2n physical
+    slots; power-of-two slot counts make wrapped-ticket slot indexing a
+    mask).  ``start`` overrides the initial head/tail ticket (tests use it
+    to start the ring near the int32 boundary); it must be a multiple of
+    2n so tickets stay slot-aligned with cycle arithmetic."""
+    cap = 1 << max(int(capacity) - 1, 1).bit_length()
+    n2 = 2 * cap
+    if start is None:
+        start = n2                       # first tickets: cycle 1 over cycle-0
+    if start % n2:
+        raise ValueError(f"start {start} must be a multiple of 2n={n2}")
+    start_u = int(start) % (2 ** 32)     # unsigned view, then signed repr
+    start = jnp.int32(start_u - 2 ** 32 if start_u >= 2 ** 31 else start_u)
+    # empty slots must carry the cycle *before* the start ticket's cycle
+    # (wrapped): cycle_lt(init_cycle, start_cycle) has to hold or the first
+    # installs are rejected as stale.
+    lg = n2.bit_length() - 1
+    cyc0_u = ((start_u >> lg) - 1) % (2 ** (32 - lg))
+    cyc0 = jnp.int32(cyc0_u - 2 ** 32 if cyc0_u >= 2 ** 31 else cyc0_u)
     return DistQueueState(
-        cycles=jnp.zeros((n2,), jnp.int32),
+        cycles=jnp.full((n2,), cyc0, jnp.int32),
         safes=jnp.ones((n2,), jnp.int32),
+        enqs=jnp.zeros((n2,), jnp.int32),
         idxs=jnp.full((n2,), IDX_BOT),
-        tail=jnp.int32(n2),
-        head=jnp.int32(n2),
+        tail=start,
+        head=start,
     )
 
 
-def _apply_enqueue(state: DistQueueState, tickets, values, head_now):
+def _nslots_log2(state: DistQueueState) -> int:
     n2 = state.cycles.shape[0]
+    lg = n2.bit_length() - 1
+    assert (1 << lg) == n2, "slot count must be a power of two"
+    return lg
 
-    def body(st, tv):
-        cyc, saf, idx = st
-        t, v = tv
-        j = jnp.where(t >= 0, t % n2, 0)
-        c = jnp.where(t >= 0, t // n2, 0)
-        empty = (idx[j] == IDX_BOT) | (idx[j] == IDX_BOTC)
-        can = (t >= 0) & (cyc[j] < c) & empty & ((saf[j] == 1) | (head_now <= t))
-        cyc = cyc.at[j].set(jnp.where(can, c, cyc[j]))
-        saf = saf.at[j].set(jnp.where(can, 1, saf[j]))
-        idx = idx.at[j].set(jnp.where(can, v, idx[j]))
-        return (cyc, saf, idx), can
 
-    (cyc, saf, idx), ok = jax.lax.scan(
-        body, (state.cycles, state.safes, state.idxs), (tickets, values))
-    return cyc, saf, idx, ok
+def _planes(state: DistQueueState):
+    return (state.cycles, state.safes, state.enqs, state.idxs)
+
+
+def _subwaves(total_ops: int, n2: int) -> int:
+    """How many ≤2n-ticket sub-waves a round of ``total_ops`` needs so each
+    applied wave hits pairwise-distinct slots (Lemma III.1)."""
+    return -(-total_ops // n2)
+
+
+def _apply_enqueue(planes, head, tickets, values, active, ranks, *,
+                   nslots_log2: int, engine: str, max_rank: int = None):
+    """Apply one round of gathered enqueue ops to the planes.  ``tickets``
+    = tail + rank (wrapping); ``ranks`` ∈ [0, total) for active ops.
+    ``max_rank`` is a static upper bound on active ranks (callers that cap
+    the round's total, e.g. by capacity, pass it so provably-inert
+    sub-waves are never emitted).  Returns (planes, ok) with ok in
+    gathered op order."""
+    n2 = 1 << nslots_log2
+    nops = tickets.shape[0]
+    if engine == "planes":
+        ok = jnp.zeros((nops,), jnp.int32)
+        for w in range(_subwaves(min(nops, max_rank or nops), n2)):
+            wave = active & (ranks >= w * n2) & (ranks < (w + 1) * n2)
+            cyc, saf, enq, idx, okw = enq_planes(
+                *planes, tickets, values, head,
+                nslots_log2=nslots_log2, idx_bot=int(IDX_BOT), active=wave)
+            planes = (cyc, saf, enq, idx)
+            ok = ok | okw
+        return planes, ok
+    if engine != "scan":
+        raise ValueError(f"unknown engine {engine!r} (planes|scan)")
+    order = jnp.argsort(jnp.where(active, ranks, _SENTINEL))
+
+    def body(pl, tva):
+        t, v, a = tva
+        cyc, saf, enq, idx, okk = enq_planes(
+            *pl, t[None], v[None], head,
+            nslots_log2=nslots_log2, idx_bot=int(IDX_BOT), active=a[None])
+        return (cyc, saf, enq, idx), okk[0]
+
+    planes, ok_sorted = jax.lax.scan(
+        body, planes, (tickets[order], values[order], active[order]))
+    return planes, ok_sorted[jnp.argsort(order)]
+
+
+def _apply_dequeue(planes, tickets, active, ranks, *,
+                   nslots_log2: int, engine: str):
+    """Apply one round of gathered dequeue ops.  Returns
+    (planes, vals, ok) in gathered op order."""
+    n2 = 1 << nslots_log2
+    nops = tickets.shape[0]
+    if engine == "planes":
+        ok = jnp.zeros((nops,), jnp.int32)
+        vals = jnp.full((nops,), -1, jnp.int32)
+        for w in range(_subwaves(nops, n2)):
+            wave = active & (ranks >= w * n2) & (ranks < (w + 1) * n2)
+            cyc, saf, enq, idx, v, okw = deq_planes(
+                *planes, tickets,
+                nslots_log2=nslots_log2, idx_bot=int(IDX_BOT), active=wave)
+            planes = (cyc, saf, enq, idx)
+            ok = ok | okw
+            vals = jnp.where(wave, v, vals)
+        return planes, vals, ok
+    if engine != "scan":
+        raise ValueError(f"unknown engine {engine!r} (planes|scan)")
+    order = jnp.argsort(jnp.where(active, ranks, _SENTINEL))
+
+    def body(pl, ta):
+        t, a = ta
+        cyc, saf, enq, idx, v, okk = deq_planes(
+            *pl, t[None],
+            nslots_log2=nslots_log2, idx_bot=int(IDX_BOT), active=a[None])
+        return (cyc, saf, enq, idx), (v[0], okk[0])
+
+    planes, (vals_sorted, ok_sorted) = jax.lax.scan(
+        body, planes, (tickets[order], active[order]))
+    inv = jnp.argsort(order)
+    return planes, vals_sorted[inv], ok_sorted[inv]
+
+
+def _gathered_round(values, mask, axis):
+    """One-psum exchange of the round's compact blocks.  Returns flattened
+    (n·B,) gathered (values, active, ranks, total): ranks are the global
+    exclusive prefix ranks over the gathered mask (shard-major, in-shard
+    row-major — exactly the ticket order per-shard FAA bases would give)."""
+    mask_i = (mask > 0).astype(jnp.int32)
+    gv, gm = mesh_round_gather((values.astype(jnp.int32), mask_i), axis)
+    gv, gm = gv.reshape(-1), gm.reshape(-1)
+    active = gm > 0
+    ranks = jnp.cumsum(gm) - gm
+    return gv, active, ranks, jnp.sum(gm)
 
 
 def dist_enqueue_round(state: DistQueueState, values: jax.Array,
-                       mask: jax.Array, axis: str):
-    """One enqueue round inside shard_map.  values/mask: (B,) local requests.
-    Returns (new_state, granted mask (B,))."""
+                       mask: jax.Array, axis: str, *,
+                       engine: str = "planes"):
+    """One enqueue round inside shard_map.  values/mask: (B,) local
+    requests.  Returns (new_state, granted mask (B,))."""
     b = values.shape[0]
-    count = jnp.sum(mask.astype(jnp.int32))
-    base, total = mesh_ticket_base(count, axis)
-    # local tickets: base + exclusive prefix rank (the wavefaa rule)
-    rank = jnp.cumsum(mask.astype(jnp.int32)) - mask.astype(jnp.int32)
-    tickets = jnp.where(mask > 0, state.tail + base + rank, -1)
-    # gather the round's compact blocks so every shard applies every op
-    all_tickets = jax.lax.all_gather(tickets, axis).reshape(-1)
-    all_values = jax.lax.all_gather(values, axis).reshape(-1)
-    order = jnp.argsort(jnp.where(all_tickets >= 0, all_tickets, 2 ** 30))
-    # promote the replicated ring planes to device-varying so the scan
-    # carry types match the (axis-varying) gathered tickets
-    state = state._replace(
-        cycles=_pvary(state.cycles, axis),
-        safes=_pvary(state.safes, axis),
-        idxs=_pvary(state.idxs, axis))
-    cyc, saf, idx, ok_sorted = _apply_enqueue(
-        state, all_tickets[order], all_values[order],
-        _pvary(state.head, axis))
-    inv = jnp.argsort(order)
-    ok_all = ok_sorted[inv]
+    lg = _nslots_log2(state)
+    gv, active, ranks, total = _gathered_round(values, mask, axis)
+    tickets = state.tail + ranks            # wraps mod 2^32 in int32
+    planes, ok = _apply_enqueue(_planes(state), state.head, tickets, gv,
+                                active, ranks, nslots_log2=lg, engine=engine)
+    new_state = DistQueueState(*planes, tail=state.tail + total,
+                               head=state.head)
     n = _axis_size(axis)
     me = jax.lax.axis_index(axis)
-    ok_local = ok_all.reshape(n, b)[me]
-    new_state = state._replace(cycles=cyc, safes=saf, idxs=idx,
-                               tail=state.tail + total)
-    return new_state, ok_local & (mask > 0)
+    ok_local = _pvary(ok, axis).reshape(n, b)[me]
+    return new_state, (ok_local > 0) & (mask > 0)
 
 
-def dist_dequeue_round(state: DistQueueState, want: jax.Array, axis: str):
-    """One dequeue round.  want: (B,) local request mask.
-    Returns (new_state, values (B,), ok (B,))."""
+def dist_dequeue_round(state: DistQueueState, want: jax.Array, axis: str, *,
+                       engine: str = "planes"):
+    """One dequeue round.  want: (B,) local request mask.  Dequeue tickets
+    are issued for every request — like FAA-based TRYDEQ, requests beyond
+    the occupancy burn their ticket against an empty slot (⊥-advance) and
+    return ok=False.  Returns (new_state, values (B,), ok (B,))."""
     b = want.shape[0]
-    n2 = state.cycles.shape[0]
-    count = jnp.sum(want.astype(jnp.int32))
-    base, total = mesh_ticket_base(count, axis)
-    rank = jnp.cumsum(want.astype(jnp.int32)) - want.astype(jnp.int32)
-    tickets = jnp.where(want > 0, state.head + base + rank, -1)
-    all_tickets = jax.lax.all_gather(tickets, axis).reshape(-1)
-    order = jnp.argsort(jnp.where(all_tickets >= 0, all_tickets, 2 ** 30))
-    ts = all_tickets[order]
-    state = state._replace(
-        cycles=_pvary(state.cycles, axis),
-        safes=_pvary(state.safes, axis),
-        idxs=_pvary(state.idxs, axis))
-
-    def body(st, t):
-        cyc, saf, idx = st
-        j = jnp.where(t >= 0, t % n2, 0)
-        c = jnp.where(t >= 0, t // n2, 0)
-        empty = (idx[j] == IDX_BOT) | (idx[j] == IDX_BOTC)
-        hit = (t >= 0) & (cyc[j] == c) & (~empty)
-        val = jnp.where(hit, idx[j], -1)
-        idx = idx.at[j].set(jnp.where(hit, IDX_BOTC, idx[j]))
-        adv = (t >= 0) & (~hit) & empty & (cyc[j] < c)
-        cyc = cyc.at[j].set(jnp.where(adv, c, cyc[j]))
-        uns = (t >= 0) & (~hit) & (~empty) & (cyc[j] < c)
-        saf = saf.at[j].set(jnp.where(uns, 0, saf[j]))
-        return (cyc, saf, idx), (val, hit)
-
-    (cyc, saf, idx), (vals_sorted, ok_sorted) = jax.lax.scan(
-        body, (state.cycles, state.safes, state.idxs), ts)
-    inv = jnp.argsort(order)
-    vals_all = vals_sorted[inv]
-    ok_all = ok_sorted[inv]
+    lg = _nslots_log2(state)
+    _, active, ranks, total = _gathered_round(want, want, axis)
+    tickets = state.head + ranks
+    planes, vals, ok = _apply_dequeue(_planes(state), tickets, active, ranks,
+                                      nslots_log2=lg, engine=engine)
+    new_state = DistQueueState(*planes, tail=state.tail,
+                               head=state.head + total)
     n = _axis_size(axis)
     me = jax.lax.axis_index(axis)
-    new_state = state._replace(cycles=cyc, safes=saf, idxs=idx,
-                               head=state.head + total)
-    return (new_state, vals_all.reshape(n, b)[me],
-            ok_all.reshape(n, b)[me] & (want > 0))
+    vals_local = _pvary(vals, axis).reshape(n, b)[me]
+    ok_local = _pvary(ok, axis).reshape(n, b)[me]
+    return new_state, vals_local, (ok_local > 0) & (want > 0)
+
+
+def dist_publish_round(state: DistQueueState, values: jax.Array,
+                       mask: jax.Array, axis: str, *, capacity: int,
+                       engine: str = "planes"):
+    """Enqueue round with traced overflow suppression (the fused mesh
+    engine's install wave): when the round's total spawn would push
+    occupancy past ``capacity``, NOTHING installs, tail stays put, and
+    ``over`` returns True so the driver can raise host-side at the next
+    sync.  Returns (new_state, granted (B,), total, over)."""
+    b = values.shape[0]
+    lg = _nslots_log2(state)
+    gv, active, ranks, total = _gathered_round(values, mask, axis)
+    over = (state.occupancy + total) > capacity
+    active = active & ~over
+    tickets = state.tail + ranks
+    # suppression bounds active ranks by capacity: at most one live wave
+    planes, ok = _apply_enqueue(_planes(state), state.head, tickets, gv,
+                                active, ranks, nslots_log2=lg, engine=engine,
+                                max_rank=capacity)
+    total = jnp.where(over, 0, total)
+    new_state = DistQueueState(*planes, tail=state.tail + total,
+                               head=state.head)
+    n = _axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    ok_local = _pvary(ok, axis).reshape(n, b)[me]
+    return new_state, (ok_local > 0) & (mask > 0), total, over
+
+
+def claim_schedule(k, n: int, batch: int):
+    """The round's cross-shard rebalancing policy: split a claim budget of
+    ``k`` items evenly over ``n`` shards (remainder to the lowest shard
+    indices), each shard claiming at most ``batch``.  Because the ring
+    state is replicated, the schedule is a pure function of (k, n, batch):
+    a shard whose own step spawned nothing still pulls its full share of
+    the round's gathered compact block — work stealing degenerates to
+    perfect rebalancing at mesh scope.  Returns (active (n·batch,) bool,
+    ranks (n·batch,) int32) over the gathered op grid."""
+    k = jnp.minimum(jnp.asarray(k, jnp.int32), n * batch)
+    share, rem = k // n, k % n
+    i = jnp.arange(n, dtype=jnp.int32)[:, None]
+    lane = jnp.arange(batch, dtype=jnp.int32)[None, :]
+    k_i = share + (i < rem)
+    start_i = i * share + jnp.minimum(i, rem)
+    active = lane < k_i
+    ranks = start_i + lane
+    return active.reshape(-1), jnp.where(active, ranks, 0).reshape(-1)
+
+
+def dist_claim_round(state: DistQueueState, k, batch: int, axis: str, *,
+                     engine: str = "planes"):
+    """Claim ``k`` items (a replicated scalar, ≤ occupancy) spread evenly
+    over the shards — ``claim_schedule`` — with NO collective: every shard
+    derives the full mesh's dequeue tickets from the replicated head.
+    Returns (new_state, values (batch,), ok (batch,)) — values/ok are this
+    shard's slice of the schedule."""
+    lg = _nslots_log2(state)
+    n = _axis_size(axis)
+    active, ranks = claim_schedule(k, n, batch)
+    tickets = state.head + ranks
+    planes, vals, ok = _apply_dequeue(_planes(state), tickets, active, ranks,
+                                      nslots_log2=lg, engine=engine)
+    k = jnp.minimum(jnp.asarray(k, jnp.int32), n * batch)
+    new_state = DistQueueState(*planes, tail=state.tail, head=state.head + k)
+    me = jax.lax.axis_index(axis)
+    vals_local = _pvary(vals, axis).reshape(n, batch)[me]
+    ok_local = _pvary(ok, axis).reshape(n, batch)[me]
+    return new_state, vals_local, ok_local > 0

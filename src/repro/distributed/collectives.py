@@ -41,6 +41,34 @@ def mesh_ticket_base(count: jax.Array, axis: str) -> Tuple[jax.Array, jax.Array]
     return base, jnp.sum(sums)
 
 
+def mesh_round_gather(blocks, axis: str):
+    """Replicated gather of per-shard compact blocks in ONE psum.
+
+    ``blocks`` is a tuple of (B_i,) int32 arrays (one round's local op
+    payloads — values, masks, …).  Every shard scatters its concatenated
+    blocks into its row of an (n, ΣB_i) zero buffer and the buffer is
+    psum-reduced: each row has exactly one contributor, so the reduction is
+    a bit-exact integer gather, and — unlike ``all_gather``, whose output
+    the shard_map replication checker types as device-varying — the psum
+    output is *replicated-typed*.  This is what lets the distqueue round
+    state keep its ``P()`` out_spec with the checker on (no
+    ``check_rep=False``).  Returns (n, B_i)-shaped arrays, one per block.
+    Per-shard counts/ticket bases fall out of the gathered masks (a cumsum),
+    so one call subsumes ``mesh_ticket_base`` + payload exchange — the whole
+    round costs this single collective."""
+    n = _axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    widths = [int(b.shape[-1]) for b in blocks]
+    row = jnp.concatenate([b.astype(jnp.int32) for b in blocks])
+    buf = jnp.zeros((n, sum(widths)), jnp.int32).at[me].set(row)
+    out = jax.lax.psum(buf, axis)
+    split, off = [], 0
+    for w in widths:
+        split.append(out[:, off:off + w])
+        off += w
+    return tuple(split)
+
+
 # ---------------------------------------------------------------------------
 # compressed / bucketed gradient all-reduce (cross-pod DP)
 # ---------------------------------------------------------------------------

@@ -44,10 +44,12 @@ def ring_enqueue_ref(cycles, safes, enqs, idxs, tickets, values, head,
         cyc, saf, enq, idx = state
         t, v = tv
         j = jnp.where(t >= 0, t & (nslots - 1), 0)
-        c = jnp.where(t >= 0, t >> nslots_log2, 0)
+        c = jnp.where(t >= 0, jax.lax.shift_right_logical(t, nslots_log2), 0)
         e_c, e_s, e_i = cyc[j], saf[j], idx[j]
         empty = (e_i == idx_bot) | (e_i == idx_botc)
-        can = (t >= 0) & (e_c < c) & empty & ((e_s == 1) | (head[0] <= t))
+        # wrap-safe comparisons (cycle-modulus difference), like ring_slots
+        can = (t >= 0) & (((c - e_c) << nslots_log2) > 0) & empty & (
+            (e_s == 1) | ((t - head[0]) >= 0))
         cyc = cyc.at[j].set(jnp.where(can, c, cyc[j]))
         saf = saf.at[j].set(jnp.where(can, 1, saf[j]))
         enq = enq.at[j].set(jnp.where(can, 1, enq[j]))
@@ -71,17 +73,17 @@ def ring_dequeue_ref(cycles, safes, enqs, idxs, tickets,
     def body(state, t):
         cyc, saf, enq, idx = state
         j = jnp.where(t >= 0, t & (nslots - 1), 0)
-        c = jnp.where(t >= 0, t >> nslots_log2, 0)
+        c = jnp.where(t >= 0, jax.lax.shift_right_logical(t, nslots_log2), 0)
         e_c, e_i, e_e = cyc[j], idx[j], enq[j]
         empty = (e_i == idx_bot) | (e_i == idx_botc)
         hit = (t >= 0) & (e_c == c) & (~empty) & (e_e == 1)
         # consume
         idx = idx.at[j].set(jnp.where(hit, idx_botc, e_i))
-        # ⊥-advance stale empty slots (neutralize)
-        adv = (t >= 0) & (~hit) & empty & (e_c < c)
+        # ⊥-advance stale empty slots (neutralize); wrap-safe compare
+        adv = (t >= 0) & (~hit) & empty & (((c - e_c) << nslots_log2) > 0)
         cyc = cyc.at[j].set(jnp.where(adv, c, cyc[j]))
         # mark stale live slots unsafe
-        uns = (t >= 0) & (~hit) & (~empty) & (e_c < c)
+        uns = (t >= 0) & (~hit) & (~empty) & (((c - e_c) << nslots_log2) > 0)
         saf = saf.at[j].set(jnp.where(uns, 0, saf[j]))
         val = jnp.where(hit, e_i, -1)
         return (cyc, saf, enq, idx), (val, hit)

@@ -32,23 +32,47 @@ from jax.experimental.pallas import tpu as pltpu
 from .pallas_env import resolve_interpret
 
 
+def ticket_cycle(tickets, nslots_log2: int):
+    """A ticket's ring cycle, wrap-safe: tickets are unsigned mod-2^32
+    counters carried in int32, so the cycle is the *logical* right shift
+    (an arithmetic shift would smear the sign bit over wrapped tickets)."""
+    return jax.lax.shift_right_logical(tickets, nslots_log2)
+
+
+def cycle_lt(a, b, nslots_log2: int):
+    """Wrap-safe cycle comparison a < b (wCQ-style bounded-cycle
+    arithmetic).  Cycles live mod 2^(32-log2(2n)), so the wraparound
+    difference is computed in *cycle-modulus* space: shift it back into
+    ticket space and read the int32 sign.  Valid while live cycles stay
+    within half the cycle modulus of each other — guaranteed because a
+    ring holds at most two live cycles at once (Lemma III.2)."""
+    return ((b - a) << nslots_log2) > 0
+
+
 def enq_planes(cycles, safes, enqs, idxs, tickets, values, head, *,
-               nslots_log2: int, idx_bot: int):
+               nslots_log2: int, idx_bot: int, active=None):
     """Vectorized TRYENQ install wave over the (2n,) field planes.
 
-    ``tickets``/``values`` are (B,) int32 (ticket -1 = inactive); active
-    tickets must hit pairwise-distinct slots (Lemma III.1 — true for any
-    ticket wave spanning < 2n).  ``head`` is a scalar.  One gather per
-    plane, one masked scatter per plane — no serial loop.  Returns
+    ``tickets``/``values`` are (B,) int32; active tickets must hit
+    pairwise-distinct slots (Lemma III.1 — true for any ticket wave
+    spanning < 2n).  ``active`` masks live lanes; when ``None`` it defaults
+    to ``tickets >= 0`` (the -1-sentinel convention of the chip-level
+    engine).  Callers whose tickets may wrap past 2^31 (the mesh queue)
+    must pass ``active`` explicitly — all ticket comparisons here are
+    wraparound-difference based, so wrapped (negative) tickets behave
+    correctly.  ``head`` is a scalar.  One gather per plane, one masked
+    scatter per plane — no serial loop.  Returns
     (cycles, safes, enqs, idxs, ok)."""
     nslots = 1 << nslots_log2
     idx_botc = idx_bot - 1
-    active = tickets >= 0
+    if active is None:
+        active = tickets >= 0
     j = jnp.where(active, tickets & (nslots - 1), 0)
-    c = jnp.where(active, tickets >> nslots_log2, 0)
+    c = jnp.where(active, ticket_cycle(tickets, nslots_log2), 0)
     e_c, e_s, e_i = cycles[j], safes[j], idxs[j]
     empty = (e_i == idx_bot) | (e_i == idx_botc)
-    can = active & (e_c < c) & empty & ((e_s == 1) | (head <= tickets))
+    can = active & cycle_lt(e_c, c, nslots_log2) & empty & (
+        (e_s == 1) | ((tickets - head) >= 0))
     w = jnp.where(can, j, nslots)          # failed lanes scatter out of range
     cycles = cycles.at[w].set(c, mode="drop")
     safes = safes.at[w].set(1, mode="drop")
@@ -58,21 +82,23 @@ def enq_planes(cycles, safes, enqs, idxs, tickets, values, head, *,
 
 
 def deq_planes(cycles, safes, enqs, idxs, tickets, *,
-               nslots_log2: int, idx_bot: int):
-    """Vectorized TRYDEQ consume wave (same distinct-slot precondition).
+               nslots_log2: int, idx_bot: int, active=None):
+    """Vectorized TRYDEQ consume wave (same distinct-slot precondition and
+    wrap-safe comparisons as ``enq_planes``).
     Returns (cycles, safes, enqs, idxs, values, ok)."""
     nslots = 1 << nslots_log2
     idx_botc = idx_bot - 1
-    active = tickets >= 0
+    if active is None:
+        active = tickets >= 0
     j = jnp.where(active, tickets & (nslots - 1), 0)
-    c = jnp.where(active, tickets >> nslots_log2, 0)
+    c = jnp.where(active, ticket_cycle(tickets, nslots_log2), 0)
     e_c, e_s, e_e, e_i = cycles[j], safes[j], enqs[j], idxs[j]
     empty = (e_i == idx_bot) | (e_i == idx_botc)
     hit = active & (e_c == c) & (~empty) & (e_e == 1)
     idxs = idxs.at[jnp.where(hit, j, nslots)].set(idx_botc, mode="drop")
-    adv = active & (~hit) & empty & (e_c < c)          # ⊥-advance
+    adv = active & (~hit) & empty & cycle_lt(e_c, c, nslots_log2)
     cycles = cycles.at[jnp.where(adv, j, nslots)].set(c, mode="drop")
-    uns = active & (~hit) & (~empty) & (e_c < c)       # mark unsafe
+    uns = active & (~hit) & (~empty) & cycle_lt(e_c, c, nslots_log2)
     safes = safes.at[jnp.where(uns, j, nslots)].set(0, mode="drop")
     vals = jnp.where(hit, e_i, -1)
     return cycles, safes, enqs, idxs, vals, hit.astype(jnp.int32)

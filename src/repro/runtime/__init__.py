@@ -15,15 +15,16 @@ Two faces over the same queue core:
 
 from .executor import Arrival, ExecutorConfig, Handler, TaskRuntime
 from .fusedrounds import FusedPriorityRounds, FusedRounds
+from .meshrounds import FusedMeshRounds, MeshRoundRunner
 from .rounds import (HeapState, PriorityRoundRunner, RingState, RoundRunner,
                      heap_init, mesh_task_round, ring_init)
 from .taskpool import (FabricMetrics, HostTaskPool, PriorityFabric,
                        TaskFabric, TaskRecord, TaskSpec)
 
 __all__ = [
-    "Arrival", "ExecutorConfig", "FabricMetrics", "FusedPriorityRounds",
-    "FusedRounds", "Handler", "HostTaskPool", "HeapState", "PriorityFabric",
-    "PriorityRoundRunner", "RingState", "RoundRunner", "TaskFabric",
-    "TaskRecord", "TaskSpec", "TaskRuntime", "heap_init", "mesh_task_round",
-    "ring_init",
+    "Arrival", "ExecutorConfig", "FabricMetrics", "FusedMeshRounds",
+    "FusedPriorityRounds", "FusedRounds", "Handler", "HostTaskPool",
+    "HeapState", "MeshRoundRunner", "PriorityFabric", "PriorityRoundRunner",
+    "RingState", "RoundRunner", "TaskFabric", "TaskRecord", "TaskSpec",
+    "TaskRuntime", "heap_init", "mesh_task_round", "ring_init",
 ]

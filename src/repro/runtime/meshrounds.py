@@ -1,0 +1,299 @@
+"""Mesh-fused round engine (DESIGN.md § 2.3): ``FusedRounds``' twin one
+level up the hierarchy, running the whole dequeue → step → ticket →
+enqueue cycle *device-resident under shard_map*.
+
+PR 3 removed the per-round host sync at chip scope; this module removes it
+at mesh scope.  The legacy mesh path (`fused=False`, the ``mesh_task_round``
+discipline) dispatches one jitted shard_map call per round and reads
+occupancy back on the host every time; ``FusedMeshRounds`` runs up to
+``limit`` rounds inside ONE ``lax.while_loop`` *inside* shard_map:
+
+* the distqueue's replicated field planes, head and tail ride in the loop
+  carry as device values;
+* the claim wave needs NO collective — the cross-shard rebalancing
+  schedule (``distqueue.claim_schedule``: the round's budget split evenly,
+  so a shard whose step spawned nothing still pulls its share of the
+  gathered compact block) is a pure function of the replicated head/tail;
+* the publish wave costs exactly ONE psum (``mesh_round_gather``: ticket
+  aggregation and compact-block exchange fused into a single collective —
+  the ``mesh_ticket_base`` leader-FAA with the payload riding along);
+* the loop condition is the replicated occupancy, so every shard exits on
+  the same round and the collectives stay in lockstep;
+* the host syncs once at global quiescence (or every ``sync_every``
+  rounds for a stats heartbeat), exactly like the chip-level engine.
+
+Overflow and truncation follow the ``_FusedEngine`` contract: a flag in
+the carry exits the loop and the host driver raises ``RuntimeError`` at
+the next sync.
+
+Accumulators are *per-shard*: the step function sees only its shard's
+claimed batch, so acc leaves diverge across shards.  ``run`` returns them
+stacked with a leading shard axis, reduced by the ``combine`` callable
+when one is given (BFS: elementwise min over shards).
+
+Note on the replication checker: the per-round distqueue API passes
+``check_rep=True`` (psum-gathered payloads keep the planes
+replicated-typed), but ``lax.while_loop`` has no replication rule in this
+jax line, so the megaround's shard_map is built with ``check_rep=False``.
+Per-shard state bit-identity is asserted by tests instead.
+
+Both engines are bit-identical — same acc leaves, same planes, same
+head/tail and stats counters — asserted on tree and BFS workloads.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..core.distqueue import (DistQueueState, dist_claim_round,
+                              dist_publish_round, dist_queue_init)
+from ..kernels.ring_slots import enq_planes
+from .fusedrounds import IDX_BOT, StepFn, _FusedEngine
+
+__all__ = ["FusedMeshRounds", "MeshRoundRunner"]
+
+
+class _MeshEngineBase(_FusedEngine):
+    """Shared mesh-round machinery: seeding, specs, the one-round body."""
+
+    def __init__(self, step_fn: StepFn, *, mesh, axis: str = "data",
+                 capacity_log2: int = 10, batch: int = 64,
+                 sync_every: int = 0) -> None:
+        self.step_fn = step_fn
+        self.mesh = mesh
+        self.axis = axis
+        self.shards = int(mesh.shape[axis])
+        self.capacity_log2 = capacity_log2
+        self.capacity = 1 << capacity_log2
+        self.nslots_log2 = capacity_log2 + 1
+        self.batch = batch
+        if batch * self.shards > self.capacity:
+            raise ValueError(
+                f"mesh batch {batch} x {self.shards} shards exceeds ring "
+                f"capacity {self.capacity}")
+        self.sync_every = sync_every
+        self._reset()
+
+    # -- seeding (host-side, before shard_map: planes are plain jnp) --------
+    def _seed(self, state: DistQueueState,
+              initial: np.ndarray) -> DistQueueState:
+        k = len(initial)
+        if k > self.capacity:
+            raise RuntimeError(
+                f"mesh ring overflow: {k} seed values exceed capacity "
+                f"{self.capacity} (raise capacity_log2)")
+        if k == 0:
+            return state
+        base = int(np.int64(np.asarray(state.tail)))
+        t = (base + np.arange(k, dtype=np.int64)) % (2 ** 32)
+        tickets = jnp.asarray(np.where(t >= 2 ** 31, t - 2 ** 32, t)
+                              .astype(np.int32))
+        cyc, saf, enq, idx, ok = enq_planes(
+            state.cycles, state.safes, state.enqs, state.idxs, tickets,
+            jnp.asarray(initial), state.head,
+            nslots_log2=self.nslots_log2, idx_bot=IDX_BOT)
+        assert bool(np.asarray(ok).all()), "exact tickets cannot miss"
+        return DistQueueState(cyc, saf, enq, idx,
+                              tail=state.tail + jnp.int32(k),
+                              head=state.head)
+
+    # -- one mesh round, shared verbatim by both engines --------------------
+    def _round(self, state: DistQueueState, acc):
+        """claim (no collective) → step → publish (one psum).  Returns
+        (state, acc, k, total, over)."""
+        occ = state.tail - state.head
+        k = jnp.minimum(occ, jnp.int32(self.shards * self.batch))
+        state, vals, ok = dist_claim_round(state, k, self.batch, self.axis)
+        acc, cvals, cmask = self.step_fn(acc, vals, ok)
+        cm = jnp.broadcast_to(cmask.astype(bool), cvals.shape).reshape(-1)
+        cv = cvals.reshape(-1).astype(jnp.int32)
+        state, _, total, over = dist_publish_round(
+            state, cv, cm.astype(jnp.int32), self.axis,
+            capacity=self.capacity)
+        return state, acc, k, total, over
+
+    def _initial_carry(self, state: DistQueueState, acc):
+        acc = jax.tree_util.tree_map(jnp.asarray, acc)
+        occ0 = jnp.int32(np.asarray(state.tail - state.head))
+        return state, acc, occ0
+
+
+class FusedMeshRounds(_MeshEngineBase):
+    """The mesh megaround loop: one jitted shard_map call runs up to
+    ``limit`` rounds on device; host sync only at quiescence (or every
+    ``sync_every`` rounds).  ``run`` mirrors ``FusedRounds.run`` and
+    returns (acc, final DistQueueState) where acc carries a leading shard
+    axis unless ``combine`` reduces it."""
+
+    def __init__(self, step_fn: StepFn, *, mesh, axis: str = "data",
+                 capacity_log2: int = 10, batch: int = 64,
+                 sync_every: int = 0,
+                 combine: Callable[[Any], Any] = None) -> None:
+        super().__init__(step_fn, mesh=mesh, axis=axis,
+                         capacity_log2=capacity_log2, batch=batch,
+                         sync_every=sync_every)
+        self.combine = combine
+        # in shard_map, P() = replicated operand, P(axis) = sharded; a bare
+        # P serves as a pytree-prefix spec for the whole acc subtree.  acc
+        # rides stacked (shards, ...) through P(axis) specs so successive
+        # chunk calls (sync_every heartbeats) compose.
+        self._megaround = jax.jit(shard_map(
+            self._megaround_impl, mesh=self.mesh,
+            in_specs=(P(), P(), P(), P(), P(), P(), P(self.axis), P(), P(),
+                      P(), P()),
+            out_specs=(P(), P(), P(), P(), P(), P(), P(self.axis),
+                       P(), P(), P(), P(), P()),
+            check_rep=False))   # while_loop has no replication rule
+
+    # -- the jitted megaround: up to `limit` rounds entirely on device ------
+    def _megaround_impl(self, cyc, saf, enq, idx, head, tail, acc,
+                        processed, spawned, max_occ, limit):
+        acc = jax.tree_util.tree_map(lambda x: x[0], acc)
+
+        def body(carry):
+            (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
+             max_occ, oflow, rounds) = carry
+            state = DistQueueState(cyc, saf, enq, idx, tail=tail, head=head)
+            state, acc, k, total, over = self._round(state, acc)
+            return (state.cycles, state.safes, state.enqs, state.idxs,
+                    state.head, state.tail, acc, processed + k,
+                    spawned + total,
+                    jnp.maximum(max_occ, state.tail - state.head),
+                    oflow | over, rounds + 1)
+
+        def cond(carry):
+            _, _, _, _, head, tail, _, _, _, _, oflow, rounds = carry
+            return (tail - head > 0) & (~oflow) & (rounds < limit)
+
+        carry = (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
+                 max_occ, jnp.bool_(False), jnp.int32(0))
+        out = jax.lax.while_loop(cond, body, carry)
+        acc_stacked = jax.tree_util.tree_map(lambda x: x[None], out[6])
+        return (out[0], out[1], out[2], out[3], out[4], out[5], acc_stacked,
+                out[7], out[8], out[9], out[10], out[11])
+
+    def run(self, initial: np.ndarray, acc: Any = None,
+            max_rounds: int = 10_000) -> Tuple[Any, DistQueueState]:
+        self._reset()
+        st = self._seed(dist_queue_init(self.capacity),
+                        np.asarray(initial, np.int32).reshape(-1))
+        st, acc, occ0 = self._initial_carry(st, acc)
+        acc = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (self.shards,) + x.shape),
+            acc)
+        state = [st.cycles, st.safes, st.enqs, st.idxs, st.head, st.tail,
+                 acc, jnp.int32(0), jnp.int32(0), occ0]
+
+        def chunk_fn(limit):
+            (state[0], state[1], state[2], state[3], state[4], state[5],
+             state[6], state[7], state[8], state[9], oflow, r
+             ) = self._megaround(*state, jnp.int32(limit))
+            occ = int(np.int32(np.asarray(state[5] - state[4])))  # THE sync
+            return (occ, int(r), bool(oflow), int(state[7]), int(state[8]),
+                    int(state[9]))
+
+        self._drive(chunk_fn, max_rounds, "mesh ring")
+        final = DistQueueState(state[0], state[1], state[2], state[3],
+                               tail=state[5], head=state[4])
+        acc = state[6]
+        if self.combine is not None:
+            acc = self.combine(acc)
+        return acc, final
+
+
+class MeshRoundRunner(_MeshEngineBase):
+    """Mesh twin of ``RoundRunner``: ``fused=True`` (default) delegates to
+    ``FusedMeshRounds``; ``fused=False`` keeps the legacy host-driven loop
+    — one jitted shard_map dispatch and one occupancy readback per round
+    (the ``mesh_task_round`` pathology PR 3's engine removed at chip
+    level), kept for step-debug and as the parity baseline.  Both engines
+    are bit-identical."""
+
+    def __init__(self, step_fn: StepFn, *, mesh, axis: str = "data",
+                 capacity_log2: int = 10, batch: int = 64,
+                 fused: bool = True, sync_every: int = 0,
+                 combine: Callable[[Any], Any] = None) -> None:
+        super().__init__(step_fn, mesh=mesh, axis=axis,
+                         capacity_log2=capacity_log2, batch=batch,
+                         sync_every=sync_every)
+        self.fused = fused
+        self.combine = combine
+        if fused:
+            self._engine = FusedMeshRounds(
+                step_fn, mesh=mesh, axis=axis, capacity_log2=capacity_log2,
+                batch=batch, sync_every=sync_every, combine=combine)
+        else:
+            self._engine = None
+            # legacy: acc rides stacked (shards, ...) through P(axis) specs
+            self._round_jit = jax.jit(shard_map(
+                self._round_impl, mesh=self.mesh,
+                in_specs=(P(), P(), P(), P(), P(), P(), P(self.axis)),
+                out_specs=(P(), P(), P(), P(), P(), P(), P(self.axis),
+                           P(), P(), P()),
+                check_rep=False))   # acc diverges per shard (P(axis) io)
+
+    def _round_impl(self, cyc, saf, enq, idx, head, tail, acc):
+        acc = jax.tree_util.tree_map(lambda x: x[0], acc)
+        state = DistQueueState(cyc, saf, enq, idx, tail=tail, head=head)
+        state, acc, k, total, over = self._round(state, acc)
+        acc = jax.tree_util.tree_map(lambda x: x[None], acc)
+        return (state.cycles, state.safes, state.enqs, state.idxs,
+                state.head, state.tail, acc, k, total, over)
+
+    def run(self, initial: np.ndarray, acc: Any = None,
+            max_rounds: int = 10_000) -> Tuple[Any, DistQueueState]:
+        if self._engine is not None:
+            try:
+                return self._engine.run(initial, acc, max_rounds)
+            finally:
+                self.stats = dict(self._engine.stats, fused=1)
+                self.sync_log = self._engine.sync_log
+        self._reset()
+        st = self._seed(dist_queue_init(self.capacity),
+                        np.asarray(initial, np.int32).reshape(-1))
+        st, acc, occ0 = self._initial_carry(st, acc)
+        acc = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (self.shards,) + x.shape),
+            acc)
+        state = [st.cycles, st.safes, st.enqs, st.idxs, st.head, st.tail]
+        rounds = processed = spawned = 0
+        max_occ = occ = int(np.int32(np.asarray(occ0)))
+        host_syncs = 0
+        overflow = False
+        while occ > 0 and rounds < max_rounds:
+            (state[0], state[1], state[2], state[3], state[4], state[5],
+             acc, k, total, over) = self._round_jit(*state, acc)
+            occ = int(np.int32(np.asarray(state[5] - state[4])))
+            host_syncs += 1                             # per-round readback
+            rounds += 1
+            processed += int(k)
+            spawned += int(total)
+            max_occ = max(max_occ, occ)
+            self.sync_log.append({"rounds": rounds, "occupancy": occ})
+            if bool(over):
+                overflow = True
+                break
+        self.stats = {"rounds": rounds, "processed": processed,
+                      "spawned": spawned, "max_occupancy": max_occ,
+                      "drained": int(occ == 0),
+                      "host_syncs": host_syncs, "fused": 0}
+        if overflow:
+            raise RuntimeError(
+                f"mesh ring overflow: occupancy {occ} + spawned children "
+                f"exceed capacity {self.capacity} at round {rounds} (raise "
+                f"capacity_log2 or lower the fanout)")
+        if occ > 0:
+            raise RuntimeError(
+                f"mesh ring round loop truncated at max_rounds={max_rounds} "
+                f"with occupancy {occ}: not quiescent (stats['drained']=0)")
+        final = DistQueueState(state[0], state[1], state[2], state[3],
+                               tail=state[5], head=state[4])
+        if self.combine is not None:
+            acc = self.combine(acc)
+        return acc, final

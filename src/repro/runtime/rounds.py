@@ -27,8 +27,11 @@ mistake for quiescence.
 
 At mesh scope the same round structure runs on ``core.distqueue``:
 ``mesh_task_round`` composes one enqueue round and one dequeue round inside
-shard_map — each chip contributes its spawn/claim masks, one prefix-sum
-collective orders the whole mesh's tickets (DESIGN.md § 2.3).
+shard_map — each chip contributes its spawn/claim masks, one collective
+hands out the whole mesh's tickets and compact blocks (DESIGN.md § 2.3).
+``runtime/meshrounds.py: MeshRoundRunner`` fuses that loop device-resident
+(host sync only at global quiescence), exactly as this module's fused
+engine does at chip scope.
 """
 
 from __future__ import annotations

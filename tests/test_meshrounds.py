@@ -1,0 +1,159 @@
+"""Mesh-fused round engine invariants (DESIGN.md § 2.3):
+
+* ``FusedMeshRounds`` is bit-identical to the legacy host-driven per-round
+  shard_map path — same combined acc, same ring planes, same head/tail and
+  stats counters — on tree and BFS workloads;
+* the fused path syncs the host once at quiescence (``sync_every`` gives a
+  periodic heartbeat) where the legacy path syncs every round;
+* overflow and ``max_rounds`` truncation raise ``RuntimeError`` from both
+  engines;
+* ``bfs_mesh_rounds`` computes exact BFS distances via min-combined
+  label-correcting;
+* the ≥2-shard run (bench_mesh --smoke in a forced-device subprocess)
+  holds the same parity plus exact BFS across shards.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.jaxcompat import make_mesh  # noqa: E402
+from repro.runtime import MeshRoundRunner  # noqa: E402
+
+STAT_KEYS = ("rounds", "processed", "spawned", "max_occupancy", "drained")
+
+
+def _mesh1():
+    return make_mesh((1,), ("data",))
+
+
+def _tree_step():
+    def step(acc, vals, valid):
+        acc = acc.at[jnp.where(valid, vals, 0)].add(valid.astype(jnp.int32))
+        cv = jnp.stack([vals * 2, vals * 2 + 1], -1).astype(jnp.int32)
+        cm = (valid & (vals < 32))[:, None]
+        return acc, cv, cm
+    return step
+
+
+def _run_pair(**kw):
+    mesh = _mesh1()
+    accs, states, stats = [], [], []
+    for fused in (True, False):
+        r = MeshRoundRunner(_tree_step(), mesh=mesh, capacity_log2=8,
+                            batch=16, fused=fused,
+                            combine=lambda a: a.sum(0), **kw)
+        acc, st = r.run([1], acc=jnp.zeros(80, jnp.int32))
+        accs.append(np.asarray(acc))
+        states.append(st)
+        stats.append(r.stats)
+    return accs, states, stats
+
+
+def test_mesh_fused_matches_legacy_tree():
+    accs, states, stats = _run_pair()
+    np.testing.assert_array_equal(accs[0], accs[1])
+    for a, b in zip(states[0][:4], states[1][:4]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (int(np.asarray(states[0].head)), int(np.asarray(states[0].tail))) \
+        == (int(np.asarray(states[1].head)), int(np.asarray(states[1].tail)))
+    for k in STAT_KEYS:
+        assert stats[0][k] == stats[1][k], k
+    # the headline: host sync only at quiescence vs every round
+    assert stats[0]["host_syncs"] == 1
+    assert stats[1]["host_syncs"] == stats[1]["rounds"]
+    # tasks 1..31 processed exactly once each
+    assert accs[0][1:32].tolist() == [1] * 31
+
+
+def test_mesh_sync_every_heartbeat():
+    mesh = _mesh1()
+    r = MeshRoundRunner(_tree_step(), mesh=mesh, capacity_log2=8, batch=16,
+                        sync_every=2, combine=lambda a: a.sum(0))
+    acc, _ = r.run([1], acc=jnp.zeros(80, jnp.int32))
+    full = MeshRoundRunner(_tree_step(), mesh=mesh, capacity_log2=8,
+                           batch=16, combine=lambda a: a.sum(0))
+    acc2, _ = full.run([1], acc=jnp.zeros(80, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(acc2))
+    assert r.stats["host_syncs"] > 1
+    assert r.sync_log[-1]["occupancy"] == 0
+
+
+def test_mesh_bfs_single_shard_exact_and_bit_identical():
+    from repro.apps import bfs
+    mesh = _mesh1()
+    for g in (bfs.road_like(144), bfs.kron_like(200, avg_deg=6, seed=2)):
+        ref = bfs.bfs_reference(g, 0)
+        res = {}
+        for fused in (True, False):
+            dist, stats = bfs.bfs_mesh_rounds(g, 0, mesh=mesh, batch=32,
+                                              fused=fused)
+            np.testing.assert_array_equal(dist, ref)
+            res[fused] = stats
+        for k in STAT_KEYS:
+            assert res[True][k] == res[False][k], (g.name, k)
+        assert res[True]["host_syncs"] == 1
+
+
+def _explode_step():
+    def step(acc, vals, valid):
+        cv = jnp.broadcast_to(vals[:, None], (vals.shape[0], 4)) + 1
+        cm = jnp.broadcast_to(valid[:, None], cv.shape)
+        return acc, cv.astype(jnp.int32), cm
+    return step
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_mesh_overflow_raises(fused):
+    r = MeshRoundRunner(_explode_step(), mesh=_mesh1(), capacity_log2=4,
+                        batch=8, fused=fused)
+    with pytest.raises(RuntimeError, match="mesh ring overflow"):
+        r.run(np.arange(8), acc=jnp.int32(0), max_rounds=100)
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_mesh_seed_overflow_raises(fused):
+    r = MeshRoundRunner(_tree_step(), mesh=_mesh1(), capacity_log2=4,
+                        batch=8, fused=fused)
+    with pytest.raises(RuntimeError, match="mesh ring overflow"):
+        r.run(np.arange(64), acc=jnp.zeros(80, jnp.int32))
+
+
+def _immortal_step():
+    def step(acc, vals, valid):
+        return acc, vals[:, None], valid[:, None]     # every task respawns
+    return step
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_mesh_max_rounds_truncation_raises(fused):
+    r = MeshRoundRunner(_immortal_step(), mesh=_mesh1(), capacity_log2=6,
+                        batch=8, fused=fused)
+    with pytest.raises(RuntimeError, match="not quiescent"):
+        r.run([1, 2, 3], acc=jnp.int32(0), max_rounds=5)
+    assert r.stats["drained"] == 0
+    assert r.stats["rounds"] == 5
+
+
+def test_mesh_batch_exceeds_capacity_raises():
+    with pytest.raises(ValueError, match="exceeds ring capacity"):
+        MeshRoundRunner(_tree_step(), mesh=_mesh1(), capacity_log2=4,
+                        batch=64)
+
+
+# -- ≥2-shard acceptance (forced-device subprocess) ---------------------------
+
+
+def test_bench_mesh_smoke_two_shards():
+    """The CI gate: fused/legacy bit-parity + exact BFS on 2 shards."""
+    import io
+    from benchmarks.bench_mesh import smoke
+    buf = io.StringIO()
+    assert smoke(buf, shards=2), buf.getvalue()

@@ -171,10 +171,11 @@ def test_mesh_task_round_single_device():
     def inner(state, values, emask, want):
         return mesh_task_round(state, values, emask, want, "data")
 
+    # replication checker ON: the psum-gathered rounds keep the replicated
+    # planes replicated-typed (no check_rep=False escape hatch)
     f = jax.jit(shard_map(inner, mesh=mesh,
                           in_specs=(P(), P("data"), P("data"), P("data")),
-                          out_specs=(P(), P("data"), P("data"), P("data")),
-                          check_rep=False))
+                          out_specs=(P(), P("data"), P("data"), P("data"))))
     state = dist_queue_init(16)
     vals = jnp.asarray([11, 12, 13, 14], jnp.int32)
     ones = jnp.ones(4, jnp.int32)
