@@ -4,8 +4,9 @@
 
 Sections: Fig. 4 throughput, Fig. 5 per-op profiling (+ Fig. 1 ablation),
 Table IV/Fig. 6 BFS, Fig. 7 ray tracing, kernel micro-benchmarks, the
-task-runtime fabric comparison (bench_runtime), and the G-PQ priority
-policy comparison (bench_runtime.priority_main).
+task-runtime fabric comparison (bench_runtime), the G-PQ priority policy
+comparison (bench_runtime.priority_main), the round/mesh megaround
+engines (bench_rounds, bench_mesh), and priority-mesh SSSP (bench_sssp).
 
 CSV lines go to stdout: ``name,...`` per row.  With ``--json`` the same
 rows are parsed into ``{section: [row dicts]}`` and written to the given
@@ -73,7 +74,7 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # Trajectory rows keep only scheduling-relevant metrics; everything else in
 # a row (configs, counts) rides along untouched.
-_TRAJECTORY_SECTIONS = ("runtime", "priority", "rounds", "mesh")
+_TRAJECTORY_SECTIONS = ("runtime", "priority", "rounds", "mesh", "sssp")
 
 
 def _git_rev() -> str:
@@ -124,7 +125,7 @@ def main() -> None:
     ap.add_argument("--section", default=None,
                     help="comma-separated subset of: throughput, profiling, "
                          "bfs, raytrace, kernels, runtime, priority, rounds, "
-                         "mesh")
+                         "mesh, sssp")
     ap.add_argument("--emit-trajectory", nargs="?", const="auto",
                     default=None, metavar="N",
                     help="write BENCH_<n>.json at the repo root (n "
@@ -137,7 +138,7 @@ def main() -> None:
             ap.error(f"--emit-trajectory expects an integer, got "
                      f"{args.emit_trajectory!r}")
     from . import (bench_bfs, bench_kernels, bench_mesh, bench_profiling,
-                   bench_raytrace, bench_rounds, bench_runtime,
+                   bench_raytrace, bench_rounds, bench_runtime, bench_sssp,
                    bench_throughput)
 
     kw_thr = dict(threads_list=(8, 32), steps=40_000) if args.quick else {}
@@ -148,6 +149,7 @@ def main() -> None:
     kw_rnd = (dict(batches=(64, 256), fanout_depth=8, bfs_n=1024)
               if args.quick else {})
     kw_mesh = dict(batches=(64,), bfs_n=512) if args.quick else {}
+    kw_sssp = dict(batches=(64,), n=512) if args.quick else {}
     sections = {
         "throughput": lambda out: bench_throughput.main(out, **kw_thr),
         "profiling": lambda out: bench_profiling.main(out, **kw_prof),
@@ -158,6 +160,7 @@ def main() -> None:
         "priority": lambda out: bench_runtime.priority_main(out, **kw_pri),
         "rounds": lambda out: bench_rounds.main(out, **kw_rnd),
         "mesh": lambda out: bench_mesh.main(out, **kw_mesh),
+        "sssp": lambda out: bench_sssp.main(out, **kw_sssp),
     }
     if args.section:
         todo = [s.strip() for s in args.section.split(",") if s.strip()]

@@ -1,0 +1,72 @@
+"""Run the documented example scripts end-to-end so the quickstarts in
+README.md cannot rot — the CI examples gate.
+
+    PYTHONPATH=src python examples/run_all.py [--smoke]
+
+``--smoke`` exports ``REPRO_EXAMPLES_SMOKE=1`` (examples that honor it
+shrink their problem sizes) and enforces a per-example timeout.  The
+serving/training examples (``serve_lm.py``, ``train_lm.py``) are excluded
+here — they spin up the model zoo and take minutes; CI exercises that
+path through the launch tests instead.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+EXAMPLES = (
+    "quickstart.py",
+    "runtime_demo.py",
+    "bfs_demo.py",
+    "raytrace_demo.py",
+    "priority_demo.py",
+    "sssp_demo.py",
+)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke sizes + per-example timeout (CI)")
+    ap.add_argument("--timeout", type=int, default=600,
+                    help="per-example timeout in seconds (smoke mode)")
+    args = ap.parse_args()
+    here = os.path.dirname(os.path.abspath(__file__))
+    repo = os.path.dirname(here)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(repo, "src"), env.get("PYTHONPATH")) if p)
+    if args.smoke:
+        env["REPRO_EXAMPLES_SMOKE"] = "1"
+    failed = []
+    for name in EXAMPLES:
+        t0 = time.perf_counter()
+        try:
+            proc = subprocess.run(
+                [sys.executable, os.path.join(here, name)], env=env,
+                cwd=repo, capture_output=True, text=True,
+                timeout=args.timeout if args.smoke else None)
+            rc = proc.returncode
+            tail = (proc.stdout + proc.stderr).strip().splitlines()[-3:]
+        except subprocess.TimeoutExpired:
+            rc, tail = -1, [f"timed out after {args.timeout}s"]
+        el = time.perf_counter() - t0
+        status = "ok" if rc == 0 else "FAIL"
+        print(f"[{status}] {name:20s} {el:6.1f}s")
+        if rc != 0:
+            failed.append(name)
+            for line in tail:
+                print(f"       {line}")
+    if failed:
+        print(f"examples gate: {len(failed)} failed: {', '.join(failed)}")
+        return 1
+    print(f"examples gate: all {len(EXAMPLES)} examples ran clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

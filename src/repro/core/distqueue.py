@@ -44,6 +44,19 @@ the updated planes satisfy shard_map's replication checker and callers
 keep ``P()`` out_specs without ``check_rep=False``.  ``dist_claim_round``
 needs no collective at all: the claim schedule is a pure function of the
 replicated head/tail.
+
+Priority plane variant (DESIGN.md § 6): ``DistHeapState`` carries the
+heap's key/val planes at mesh scope — *sharded* (one local heap per shard,
+the k-relaxed mode) or *replicated* (every shard holds the full heap, the
+strict mode), the caller's choice of shard_map specs decides which.
+``priority_claim_schedule`` is ``claim_schedule``'s hint-ordered twin
+(even split of the round's budget, remainder to the lowest-*key* shards
+instead of the lowest indices, clamped to each shard's local size), and
+``dist_priority_publish_round`` is the one-psum publish exchange: each
+shard's packed ``(key | payload)`` child blocks ride next to a
+``(min-hint, size)`` meta word in a single ``mesh_round_gather`` row, so
+the next round's claim schedule is a pure function of replicated values —
+no second collective.
 """
 
 from __future__ import annotations
@@ -55,6 +68,7 @@ import jax.numpy as jnp
 
 from ..distributed.collectives import mesh_round_gather, mesh_ticket_base  # noqa: F401  (ticket base re-exported for callers)
 from ..jaxcompat import axis_size as _axis_size, pvary as _pvary
+from ..kernels.heap_batch import KEY_INF
 from ..kernels.ring_slots import deq_planes, enq_planes
 
 IDX_BOT = jnp.int32(2 ** 31 - 1)
@@ -315,3 +329,84 @@ def dist_claim_round(state: DistQueueState, k, batch: int, axis: str, *,
     vals_local = _pvary(vals, axis).reshape(n, batch)[me]
     ok_local = _pvary(ok, axis).reshape(n, batch)[me]
     return new_state, vals_local, ok_local > 0
+
+
+# ---------------------------------------------------------------------------
+# priority plane variant (DESIGN.md § 6) — the mesh-level G-PQ face
+# ---------------------------------------------------------------------------
+
+
+class DistHeapState(NamedTuple):
+    """Mesh-level heap planes, same key/val layout as ``kernels/heap_batch``
+    so both levels share the ``heap_planes`` batch updates.  Unlike
+    ``DistQueueState`` the planes are *not* necessarily replicated: the
+    relaxed priority mesh keeps one local heap per shard (sharded specs),
+    the strict mode replicates the full heap on every shard."""
+    keys: jax.Array     # (cap,) int32 — KEY_INF marks empty slots
+    vals: jax.Array     # (cap,) int32
+    size: jax.Array     # () int32 — this copy's live node count
+
+    @property
+    def occupancy(self):
+        return self.size
+
+
+def dist_heap_init(capacity: int) -> DistHeapState:
+    """Empty heap planes with capacity rounded up to a power of two (sift
+    depths and child fans are static functions of ``cap_log2``)."""
+    cap = 1 << max(int(capacity) - 1, 1).bit_length()
+    return DistHeapState(
+        keys=jnp.full((cap,), KEY_INF, jnp.int32),
+        vals=jnp.full((cap,), -1, jnp.int32),
+        size=jnp.int32(0),
+    )
+
+
+def priority_claim_schedule(k, n: int, batch: int, hints, sizes):
+    """``claim_schedule``'s hint-ordered twin — the priority mesh round's
+    cross-shard rebalancing rule.  The round's pop budget ``k`` (≤ the
+    global occupancy, ≤ ``n·batch``) is split evenly over the shards with
+    the remainder going to the lowest-*key* shards: shards are ranked by
+    their replicated min-key ``hints`` (ties by shard index — ``argsort``
+    is stable), the shard at hint-rank ``p`` receives ``k//n + (p < k%n)``,
+    and each share is clamped to the shard's local ``sizes`` (an empty
+    sibling cannot donate).  Empty shards carry ``KEY_INF`` hints and rank
+    last, so whenever the mesh holds work at least one share is nonzero —
+    the round loop always makes progress.  Everything here is a pure
+    function of replicated values: like the FIFO claim, the schedule
+    costs NO collective.  Returns per-shard pop counts ``(n,) int32``."""
+    sizes = jnp.asarray(sizes, jnp.int32)
+    k = jnp.minimum(jnp.asarray(k, jnp.int32),
+                    jnp.minimum(jnp.sum(sizes), n * batch))
+    share, rem = k // n, k % n
+    order = jnp.argsort(jnp.asarray(hints, jnp.int32))   # stable: index ties
+    pos = jnp.argsort(order).astype(jnp.int32)           # hint rank per shard
+    budget = share + (pos < rem)
+    return jnp.minimum(budget, jnp.minimum(sizes, batch))
+
+
+def dist_priority_publish_round(ckeys: jax.Array, cvals: jax.Array,
+                                mask: jax.Array, local_hint: jax.Array,
+                                local_size: jax.Array, axis: str):
+    """The priority mesh round's ONE collective: every shard contributes
+    its compact child block as packed ``(key | payload)`` words — the key
+    and payload planes are concatenated into the shard's single
+    ``mesh_round_gather`` row — plus a 2-word ``(post-pop min-hint,
+    post-pop size)`` meta block, and one psum hands every shard the whole
+    round's children *and* the replicated per-shard hints/sizes the next
+    claim schedule needs.  ``ranks`` are the global exclusive prefix ranks
+    over the gathered mask (shard-major, in-shard row-major — the same
+    deterministic spray order per-thread FAA would give), so child → shard
+    assignment (``rank % n``) is identical everywhere.  Returns
+    ``(gkeys, gvals, active, ranks, total, hints (n,), sizes (n,))`` with
+    the g-arrays flattened over the gathered op grid."""
+    mask_i = (mask > 0).astype(jnp.int32)
+    meta = jnp.stack([jnp.asarray(local_hint, jnp.int32),
+                      jnp.asarray(local_size, jnp.int32)])
+    gk, gv, gm, gmeta = mesh_round_gather(
+        (ckeys.astype(jnp.int32), cvals.astype(jnp.int32), mask_i, meta),
+        axis)
+    gk, gv, gm = gk.reshape(-1), gv.reshape(-1), gm.reshape(-1)
+    active = gm > 0
+    ranks = jnp.cumsum(gm) - gm
+    return gk, gv, active, ranks, jnp.sum(gm), gmeta[:, 0], gmeta[:, 1]

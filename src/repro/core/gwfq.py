@@ -55,7 +55,7 @@ Round protocol and its invariants (validated by the linearizability tests):
    exercises the ticket's slot to a terminal state itself, and is the only
    thread allowed to deliver into the result word — so every consumed value
    has exactly one recipient and the delivering CAS cannot fail.  This
-   deviation from Algorithm 2 is recorded in DESIGN.md § 8.
+   deviation from Algorithm 2 is recorded in DESIGN.md § 1.
 """
 
 from __future__ import annotations

@@ -14,6 +14,16 @@ empty), anything else = inactive lane padding.  Sifts are fixed-trip
 data-dependent control flow, so the kernel compiles to straight-line TPU
 code.  The heap size rides in SMEM alongside the op batch.
 
+``heap_planes`` is the pure-jnp twin of the kernel — the same masked
+batched sift expressed as ``lax.scan``/``fori_loop`` plane updates, so the
+mesh engine can inline heap batches into a jitted ``while_loop`` *under
+shard_map* exactly as the FIFO engine inlines ``ring_slots.enq_planes``.
+Both faces are bit-identical (asserted by differential tests), and both
+honor inactive (``OP_NOP``) lanes, which is what makes *partial waves*
+work: ``heap_pop_count`` pops a traced-count prefix of a fixed-width
+batch, ``heap_insert_masked`` installs a masked subset — the claim and
+publish waves of the priority mesh rounds (DESIGN.md § 6).
+
 VMEM budget: 2 planes × 2^cap_log2 × 4 B plus the batch — a 64Ki-node
 heap costs 512 KiB, comfortably inside the 16 MiB/core budget.
 """
@@ -159,3 +169,126 @@ def _heap_apply_jit(keys, vals, size, ops, opkeys, opvals, *, cap_log2: int,
     k, v, outk, outv, ok, nsize = outs
     return (k.reshape(cap), v.reshape(cap), nsize.reshape(())[()],
             outk.reshape(b), outv.reshape(b), ok.reshape(b).astype(bool))
+
+
+# ---------------------------------------------------------------------------
+# pure-jnp plane face — the shard_map/while_loop-inlinable twin of the kernel
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cap_log2", "arity_log2"))
+def heap_planes(keys, vals, size, ops, opkeys, opvals, *, cap_log2: int,
+                arity_log2: int = 2):
+    """Apply a batch of heap ops in batch order — pure jnp, no Pallas.
+
+    Same contract and bit-identical results as ``heap_apply`` (the batch
+    is the linearization order; ``OP_NOP`` lanes are inert), but expressed
+    as a ``lax.scan`` over the batch with fixed-trip sift loops, so it can
+    be inlined into a jitted ``lax.while_loop`` under ``shard_map`` — the
+    mesh analogue of ``ring_slots.enq_planes``/``deq_planes``.  All inputs
+    may be traced (``size`` and the op vectors included); only the shapes
+    are static.  Returns ``(keys, vals, new_size, out_keys, out_vals,
+    ok)`` with ``out_*[i]`` carrying delete-min results."""
+    cap = 1 << cap_log2
+    d = 1 << arity_log2
+    max_depth = -(-cap_log2 // arity_log2) + 1
+    size = jnp.asarray(size, jnp.int32)
+
+    def one(carry, opkv):
+        keys, vals, size = carry
+        op, key, val = opkv
+
+        # ---- INSERT: hole starts at `size`, parents move down ----------
+        do_ins = (op == OP_INSERT) & (size < cap)
+
+        def up(_, c):
+            keys, vals, j, moving = c
+            p = jnp.where(j > 0, (j - 1) >> arity_log2, 0)
+            pk = keys[p]
+            cond = moving & (j > 0) & (pk > key)
+            jc = jnp.where(cond, j, cap)        # failed lanes drop
+            pv = vals[p]
+            keys = keys.at[jc].set(pk, mode="drop")
+            vals = vals.at[jc].set(pv, mode="drop")
+            return (keys, vals, jnp.where(cond, p, j), moving & cond)
+
+        j0 = jnp.where(do_ins, size, 0)
+        keys, vals, jf, _ = jax.lax.fori_loop(
+            0, max_depth, up, (keys, vals, j0, do_ins))
+        keys = keys.at[jnp.where(do_ins, jf, cap)].set(key, mode="drop")
+        vals = vals.at[jnp.where(do_ins, jf, cap)].set(val, mode="drop")
+
+        # ---- DELETE-MIN: root out, last node sifts down into the hole --
+        do_pop = (op == OP_DELMIN) & (size > 0)
+        outk = jnp.where(do_pop, keys[0], KEY_INF)
+        outv = jnp.where(do_pop, vals[0], -1)
+        nsize = jnp.where(do_pop, size - 1, size)
+        lpos = jnp.where(do_pop & (size > 0), size - 1, 0)
+        lk = keys[lpos]
+        lv = vals[lpos]
+
+        def down(_, c):
+            keys, vals, j, moving = c
+            base = (j << arity_log2) + 1
+
+            def child(cc, acc):
+                bk, bj = acc
+                cj = base + cc
+                in_r = cj < nsize
+                ck = jnp.where(in_r, keys[jnp.where(in_r, cj, 0)], KEY_INF)
+                better = ck < bk
+                return (jnp.where(better, ck, bk), jnp.where(better, cj, bj))
+
+            bk, bj = jax.lax.fori_loop(
+                0, d, child, (jnp.int32(KEY_INF), jnp.int32(-1)))
+            cond = moving & (bj >= 0) & (bk < lk)
+            jc = jnp.where(cond, j, cap)
+            bv = vals[jnp.where(cond, bj, 0)]
+            keys = keys.at[jc].set(bk, mode="drop")
+            vals = vals.at[jc].set(bv, mode="drop")
+            return (keys, vals, jnp.where(cond, bj, j), moving & cond)
+
+        moving0 = do_pop & (nsize > 0)
+        keys, vals, jf2, _ = jax.lax.fori_loop(
+            0, max_depth, down, (keys, vals, jnp.int32(0), moving0))
+        place = jnp.where(moving0, jf2, cap)
+        keys = keys.at[place].set(lk, mode="drop")
+        vals = vals.at[place].set(lv, mode="drop")
+        # scrub the vacated tail slot so stale keys can't resurface
+        scrub = jnp.where(do_pop, lpos, cap)
+        keys = keys.at[scrub].set(KEY_INF, mode="drop")
+        vals = vals.at[scrub].set(-1, mode="drop")
+
+        ok = (do_ins | do_pop).astype(jnp.int32)
+        new_size = jnp.where(do_ins, size + 1, nsize)
+        return (keys, vals, new_size), (outk, outv, ok)
+
+    (keys, vals, size), (outk, outv, ok) = jax.lax.scan(
+        one, (keys, vals, size),
+        (ops.astype(jnp.int32), opkeys.astype(jnp.int32),
+         opvals.astype(jnp.int32)))
+    return keys, vals, size, outk, outv, ok.astype(bool)
+
+
+def heap_pop_count(keys, vals, size, count, *, batch: int, cap_log2: int,
+                   arity_log2: int = 2):
+    """Pop the ``count`` smallest (key, val) pairs through a fixed-width
+    masked wave: lanes ``>= count`` are ``OP_NOP`` padding, so ``count``
+    may be traced (the mesh claim schedule's per-shard share).  Returns
+    the ``heap_planes`` tuple; ``ok[i] = i < min(count, size)``."""
+    lane = jnp.arange(batch, dtype=jnp.int32)
+    ops = jnp.where(lane < jnp.asarray(count, jnp.int32), OP_DELMIN, OP_NOP)
+    pad = jnp.full((batch,), KEY_INF, jnp.int32)
+    return heap_planes(keys, vals, size, ops, pad, pad,
+                       cap_log2=cap_log2, arity_log2=arity_log2)
+
+
+def heap_insert_masked(keys, vals, size, inkeys, invals, mask, *,
+                       cap_log2: int, arity_log2: int = 2):
+    """Install the masked subset of a fixed-width (key, val) wave in lane
+    order (masked-out lanes are ``OP_NOP``) — the publish wave of the
+    priority mesh rounds, where each shard keeps only its sprayed share of
+    the gathered children.  Returns the ``heap_planes`` tuple."""
+    ops = jnp.where(mask, OP_INSERT, OP_NOP)
+    return heap_planes(keys, vals, size, ops, inkeys, invals,
+                       cap_log2=cap_log2, arity_log2=arity_log2)

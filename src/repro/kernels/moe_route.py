@@ -1,5 +1,5 @@
 """Capacity-bounded MoE dispatch via per-expert ticket reservation — the
-paper's wave-batched FAA applied to expert routing (DESIGN.md § 3).
+paper's wave-batched FAA applied to expert routing (DESIGN.md § 2.1).
 
 Each routed (token, choice) pair must claim a slot in its expert's bounded
 ring.  A naive implementation performs one atomic per pair on the expert's

@@ -9,13 +9,15 @@ Two faces over the same queue core:
 * **JAX face** — ``RoundRunner`` / ``PriorityRoundRunner`` (deterministic
   rounds over the Pallas ring/heap, running on the fused device-resident
   megaround engine ``fusedrounds.FusedRounds`` by default with host sync
-  only at quiescence) and ``mesh_task_round`` (the same round at mesh
-  scope on ``core.distqueue``).
+  only at quiescence), ``MeshRoundRunner`` (the FIFO megaround under
+  shard_map, DESIGN.md § 2.3), and ``PriorityMeshRoundRunner`` (the
+  sharded G-PQ megaround — strict or k-relaxed pop order, DESIGN.md § 6).
 """
 
 from .executor import Arrival, ExecutorConfig, Handler, TaskRuntime
 from .fusedrounds import FusedPriorityRounds, FusedRounds
-from .meshrounds import FusedMeshRounds, MeshRoundRunner
+from .meshrounds import (FusedMeshRounds, FusedPriorityMeshRounds,
+                         MeshRoundRunner, PriorityMeshRoundRunner)
 from .rounds import (HeapState, PriorityRoundRunner, RingState, RoundRunner,
                      heap_init, mesh_task_round, ring_init)
 from .taskpool import (FabricMetrics, HostTaskPool, PriorityFabric,
@@ -23,8 +25,9 @@ from .taskpool import (FabricMetrics, HostTaskPool, PriorityFabric,
 
 __all__ = [
     "Arrival", "ExecutorConfig", "FabricMetrics", "FusedMeshRounds",
-    "FusedPriorityRounds", "FusedRounds", "Handler", "HostTaskPool",
-    "HeapState", "MeshRoundRunner", "PriorityFabric", "PriorityRoundRunner",
+    "FusedPriorityMeshRounds", "FusedPriorityRounds", "FusedRounds",
+    "Handler", "HostTaskPool", "HeapState", "MeshRoundRunner",
+    "PriorityFabric", "PriorityMeshRoundRunner", "PriorityRoundRunner",
     "RingState", "RoundRunner", "TaskFabric", "TaskRecord", "TaskSpec",
     "TaskRuntime", "heap_init", "mesh_task_round", "ring_init",
 ]

@@ -242,6 +242,15 @@ class FusedRounds(_FusedEngine):
 
     def run(self, initial: np.ndarray, acc: Any = None,
             max_rounds: int = 10_000) -> Tuple[Any, RingState]:
+        """Seed the ring and run megarounds to quiescence.  Sync contract:
+        the host blocks exactly once per ``sync_every`` chunk (once total
+        when ``sync_every=0``) on the occupancy readback; ``stats`` and
+        ``sync_log`` are populated at each sync.  Determinism: the run is
+        bit-deterministic — identical tickets, planes, acc, and stats to
+        the legacy per-round engine.  Raises ``RuntimeError`` on ring
+        overflow or ``max_rounds`` truncation (at the sync *after* the
+        flagged round, so stats reflect the partial run).  Returns
+        ``(acc, final RingState)``."""
         self._reset()
         st = self._seed(ring_init(self.capacity_log2),
                         np.asarray(initial, np.int32).reshape(-1))
@@ -345,6 +354,11 @@ class FusedPriorityRounds(_FusedEngine):
     def run(self, initial_keys: np.ndarray, initial_vals: np.ndarray,
             acc: Any = None, max_rounds: int = 10_000
             ) -> Tuple[Any, HeapState]:
+        """Seed the heap and run priority megarounds to quiescence.  Same
+        sync/determinism contract as ``FusedRounds.run`` (one host sync
+        per chunk, bit-identical to the legacy engine, RuntimeError on
+        heap overflow/truncation at the next sync), with pops in exact
+        min-key order within each round.  Returns ``(acc, HeapState)``."""
         self._reset()
         ik = np.asarray(initial_keys, np.int32).reshape(-1)
         iv = np.asarray(initial_vals, np.int32).reshape(-1)

@@ -39,6 +39,31 @@ Per-shard state bit-identity is asserted by tests instead.
 
 Both engines are bit-identical — same acc leaves, same planes, same
 head/tail and stats counters — asserted on tree and BFS workloads.
+
+Priority mesh rounds (DESIGN.md § 6) live here too:
+``PriorityMeshRoundRunner`` / ``FusedPriorityMeshRounds`` run the
+claim → pop-min → step → push cycle at mesh scope over the
+``core.distqueue`` priority plane (``DistHeapState``), in two orderings:
+
+* ``relaxed=True`` (default) — one *local* heap per shard; the round's
+  pop budget is rebalanced by the hint-ordered even-split schedule
+  (``priority_claim_schedule``: remainder to the lowest-key shards) and
+  children spray round-robin by publish rank.  Globally this is a
+  k-relaxed delete-min; the envelope is
+  ``sched.relaxed.mesh_relaxation_bound``.
+* ``relaxed=False`` (strict) — the heap is replicated: every shard
+  applies the identical pop/insert waves and steps only its
+  ``claim_schedule`` slice, so pops follow exact global min-key order
+  (k = 0) at the price of every shard doing full-heap work.
+
+Either way the publish wave costs exactly one
+``dist_priority_publish_round`` psum per round, carrying the packed
+``(key | payload)`` child blocks plus each shard's post-pop (hint, size)
+meta word, so the next claim schedule is again collective-free.  Sync,
+determinism, and failure contracts match the FIFO mesh engine: fused =
+host sync only at global quiescence (or ``sync_every``), legacy = one
+readback per round, both bit-identical; overflow/truncation flag-then-
+raise ``RuntimeError`` at the next sync.
 """
 
 from __future__ import annotations
@@ -51,12 +76,17 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from ..core.distqueue import (DistQueueState, dist_claim_round,
-                              dist_publish_round, dist_queue_init)
+from ..core.distqueue import (DistHeapState, DistQueueState, claim_schedule,
+                              dist_claim_round, dist_heap_init,
+                              dist_priority_publish_round, dist_publish_round,
+                              dist_queue_init, priority_claim_schedule)
+from ..kernels.heap_batch import (KEY_INF as HEAP_KEY_INF, heap_insert_masked,
+                                  heap_pop_count)
 from ..kernels.ring_slots import enq_planes
-from .fusedrounds import IDX_BOT, StepFn, _FusedEngine
+from .fusedrounds import IDX_BOT, PriorityStepFn, StepFn, _FusedEngine
 
-__all__ = ["FusedMeshRounds", "MeshRoundRunner"]
+__all__ = ["FusedMeshRounds", "FusedPriorityMeshRounds", "MeshRoundRunner",
+           "PriorityMeshRoundRunner"]
 
 
 class _MeshEngineBase(_FusedEngine):
@@ -180,6 +210,15 @@ class FusedMeshRounds(_MeshEngineBase):
 
     def run(self, initial: np.ndarray, acc: Any = None,
             max_rounds: int = 10_000) -> Tuple[Any, DistQueueState]:
+        """Seed the replicated ring and run mesh megarounds to global
+        quiescence.  Sync contract: one host block per ``sync_every``
+        chunk (once total when 0) on the replicated occupancy; all other
+        coordination stays on device (one psum per round).  Determinism:
+        bit-identical to the legacy per-round path — same acc leaves,
+        planes, head/tail, stats.  Raises ``RuntimeError`` on ring
+        overflow or truncation at the next sync.  Returns ``(acc, final
+        DistQueueState)``; acc keeps a leading shard axis unless
+        ``combine`` reduces it."""
         self._reset()
         st = self._seed(dist_queue_init(self.capacity),
                         np.asarray(initial, np.int32).reshape(-1))
@@ -248,6 +287,12 @@ class MeshRoundRunner(_MeshEngineBase):
 
     def run(self, initial: np.ndarray, acc: Any = None,
             max_rounds: int = 10_000) -> Tuple[Any, DistQueueState]:
+        """Run to quiescence on the selected engine.  ``fused=True``:
+        ``FusedMeshRounds.run`` contract (host sync only at quiescence /
+        ``sync_every``); ``fused=False``: one shard_map dispatch and one
+        occupancy readback per round (``host_syncs == rounds``).  Both
+        bit-deterministic and identical to each other; both raise on
+        overflow/truncation."""
         if self._engine is not None:
             try:
                 return self._engine.run(initial, acc, max_rounds)
@@ -294,6 +339,458 @@ class MeshRoundRunner(_MeshEngineBase):
                 f"with occupancy {occ}: not quiescent (stats['drained']=0)")
         final = DistQueueState(state[0], state[1], state[2], state[3],
                                tail=state[5], head=state[4])
+        if self.combine is not None:
+            acc = self.combine(acc)
+        return acc, final
+
+
+# ---------------------------------------------------------------------------
+# priority mesh rounds (DESIGN.md § 6)
+# ---------------------------------------------------------------------------
+
+
+class _PriorityMeshBase(_FusedEngine):
+    """Shared priority-mesh machinery: seeding, the one-round bodies, and
+    the mode-specific shard_map specs.  ``relaxed=True`` = per-shard local
+    heaps with hint-ordered claim rebalancing; ``relaxed=False`` = one
+    replicated heap popped in exact global min-key order."""
+
+    def __init__(self, step_fn: PriorityStepFn, *, mesh, axis: str = "data",
+                 capacity_log2: int = 10, batch: int = 64,
+                 arity_log2: int = 2, relaxed: bool = True,
+                 sync_every: int = 0) -> None:
+        self.step_fn = step_fn
+        self.mesh = mesh
+        self.axis = axis
+        self.shards = int(mesh.shape[axis])
+        self.capacity_log2 = capacity_log2
+        self.capacity = 1 << capacity_log2
+        self.batch = batch
+        self.arity_log2 = arity_log2
+        self.relaxed = relaxed
+        if relaxed and batch > self.capacity:
+            raise ValueError(
+                f"batch {batch} exceeds per-shard heap capacity "
+                f"{self.capacity}")
+        if not relaxed and batch * self.shards > self.capacity:
+            raise ValueError(
+                f"mesh batch {batch} x {self.shards} shards exceeds heap "
+                f"capacity {self.capacity}")
+        self.sync_every = sync_every
+        self._reset()
+
+    # -- seeding (host-side, before shard_map) ------------------------------
+    def _seed(self, ik: np.ndarray, iv: np.ndarray):
+        """Install the seed (key, val) pairs.  Relaxed mode sprays them
+        round-robin by seed rank (``rank % shards``) into the per-shard
+        heaps and returns stacked ``(keys (S,cap), vals (S,cap),
+        sizes (S,), hints (S,))``; strict mode installs everything into
+        the one replicated heap and returns ``(keys, vals, size)``."""
+        k = len(ik)
+        if not self.relaxed:
+            if k > self.capacity:
+                raise RuntimeError(
+                    f"mesh heap overflow: {k} seed values exceed capacity "
+                    f"{self.capacity} (raise capacity_log2)")
+            st = dist_heap_init(self.capacity)
+            if k == 0:
+                return st.keys, st.vals, st.size
+            keys, vals, size, _, _, ok = heap_insert_masked(
+                st.keys, st.vals, st.size, jnp.asarray(ik), jnp.asarray(iv),
+                jnp.ones((k,), bool), cap_log2=self.capacity_log2,
+                arity_log2=self.arity_log2)
+            assert bool(np.asarray(ok).all()), "capacity checked: cannot miss"
+            return keys, vals, size
+        shard_of = np.arange(k) % self.shards
+        per = [np.flatnonzero(shard_of == s) for s in range(self.shards)]
+        worst = max((len(p) for p in per), default=0)
+        if worst > self.capacity:
+            raise RuntimeError(
+                f"mesh heap overflow: {worst} seed values land on one shard, "
+                f"exceeding per-shard capacity {self.capacity} (raise "
+                f"capacity_log2)")
+        keys_l, vals_l, sizes, hints = [], [], [], []
+        for idx in per:
+            st = dist_heap_init(self.capacity)
+            kk, vv, sz = st.keys, st.vals, st.size
+            if len(idx):
+                kk, vv, sz, _, _, ok = heap_insert_masked(
+                    kk, vv, sz, jnp.asarray(ik[idx]), jnp.asarray(iv[idx]),
+                    jnp.ones((len(idx),), bool),
+                    cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
+                assert bool(np.asarray(ok).all())
+            keys_l.append(kk)
+            vals_l.append(vv)
+            sizes.append(int(sz))
+            hints.append(int(jnp.min(kk)))
+        return (jnp.stack(keys_l), jnp.stack(vals_l),
+                jnp.asarray(sizes, jnp.int32), jnp.asarray(hints, jnp.int32))
+
+    # -- one priority mesh round, shared verbatim by both engines -----------
+    def _round_relaxed(self, keys, vals, sizes, hints, acc):
+        """claim (no collective: hint-ordered schedule over replicated
+        sizes/hints) → masked pop wave on the local heap → step →
+        publish (ONE psum) → masked insert of this shard's sprayed share.
+        Returns (keys, vals, sizes, hints, acc, popped, total, over,
+        trace)."""
+        me = jax.lax.axis_index(self.axis)
+        counts = priority_claim_schedule(jnp.sum(sizes), self.shards,
+                                         self.batch, hints, sizes)
+        keys, vals, size, outk, outv, ok = heap_pop_count(
+            keys, vals, sizes[me], counts[me], batch=self.batch,
+            cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
+        acc, ckeys, cvals, cmask = self.step_fn(acc, outk, outv, ok)
+        cm = jnp.broadcast_to(cmask.astype(bool), ckeys.shape).reshape(-1)
+        ckf = ckeys.reshape(-1).astype(jnp.int32)
+        cvf = cvals.reshape(-1).astype(jnp.int32)
+        gk, gv, gactive, ranks, total, hints_pop, sizes_pop = \
+            dist_priority_publish_round(ckf, cvf, cm.astype(jnp.int32),
+                                        jnp.min(keys), size, self.axis)
+        shard_of = jnp.where(gactive, ranks % self.shards, self.shards)
+        assigned = (jnp.zeros((self.shards + 1,), jnp.int32)
+                    .at[shard_of].add(1))[:self.shards]
+        over = jnp.any(sizes_pop + assigned > self.capacity)
+        mine = gactive & (shard_of == me) & ~over
+        keys, vals, size, _, _, _ = heap_insert_masked(
+            keys, vals, size, gk, gv, mine,
+            cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
+        ckmin = (jnp.full((self.shards + 1,), HEAP_KEY_INF, jnp.int32)
+                 .at[shard_of].min(jnp.where(gactive, gk, HEAP_KEY_INF))
+                 )[:self.shards]
+        hints = jnp.where(over, hints_pop, jnp.minimum(hints_pop, ckmin))
+        sizes = jnp.where(over, sizes_pop, sizes_pop + assigned)
+        total = jnp.where(over, 0, total)
+        trace = (outk, outv, ok, gk, gv, gactive)
+        return (keys, vals, sizes, hints, acc, jnp.sum(counts), total, over,
+                trace)
+
+    def _round_strict(self, keys, vals, size, acc):
+        """Every shard applies the identical full-width pop wave to the
+        replicated heap (exact global min-key order), steps only its
+        ``claim_schedule`` slice, and installs ALL gathered children —
+        the planes stay replicated by construction.  Returns (keys, vals,
+        size, acc, popped, total, over, trace)."""
+        me = jax.lax.axis_index(self.axis)
+        sb = self.shards * self.batch
+        k = jnp.minimum(size, jnp.int32(sb))
+        keys, vals, size, outk, outv, _ = heap_pop_count(
+            keys, vals, size, k, batch=sb,
+            cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
+        active, ranks = claim_schedule(k, self.shards, self.batch)
+        act_l = active.reshape(self.shards, self.batch)[me]
+        rk_l = ranks.reshape(self.shards, self.batch)[me]
+        outk_l = jnp.where(act_l, outk[rk_l], HEAP_KEY_INF)
+        outv_l = jnp.where(act_l, outv[rk_l], -1)
+        acc, ckeys, cvals, cmask = self.step_fn(acc, outk_l, outv_l, act_l)
+        cm = jnp.broadcast_to(cmask.astype(bool), ckeys.shape).reshape(-1)
+        ckf = ckeys.reshape(-1).astype(jnp.int32)
+        cvf = cvals.reshape(-1).astype(jnp.int32)
+        gk, gv, gactive, _, total, _, _ = dist_priority_publish_round(
+            ckf, cvf, cm.astype(jnp.int32), jnp.min(keys), size, self.axis)
+        over = (size + total) > jnp.int32(self.capacity)
+        ins = gactive & ~over
+        keys, vals, size, _, _, _ = heap_insert_masked(
+            keys, vals, size, gk, gv, ins,
+            cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
+        total = jnp.where(over, 0, total)
+        trace = (outk_l, outv_l, act_l, gk, gv, gactive)
+        return keys, vals, size, acc, k, total, over, trace
+
+    def _broadcast_acc(self, acc):
+        acc = jax.tree_util.tree_map(jnp.asarray, acc)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (self.shards,) + x.shape),
+            acc)
+
+
+class FusedPriorityMeshRounds(_PriorityMeshBase):
+    """The priority mesh megaround loop: one jitted shard_map call runs the
+    whole claim → pop-min → step → push cycle for up to ``limit`` rounds
+    with the heap planes (per-shard in relaxed mode, replicated in strict
+    mode) as loop-carried device state; the host syncs once at global
+    quiescence (or every ``sync_every`` rounds).  ``run`` mirrors
+    ``FusedPriorityRounds.run``: bit-deterministic, raises ``RuntimeError``
+    on heap overflow or ``max_rounds`` truncation at the next sync, and
+    returns (acc, final ``DistHeapState``) — acc carries a leading shard
+    axis unless ``combine`` reduces it; relaxed-mode final planes are
+    stacked ``(shards, cap)``."""
+
+    def __init__(self, step_fn: PriorityStepFn, *, mesh, axis: str = "data",
+                 capacity_log2: int = 10, batch: int = 64,
+                 arity_log2: int = 2, relaxed: bool = True,
+                 sync_every: int = 0,
+                 combine: Callable[[Any], Any] = None) -> None:
+        super().__init__(step_fn, mesh=mesh, axis=axis,
+                         capacity_log2=capacity_log2, batch=batch,
+                         arity_log2=arity_log2, relaxed=relaxed,
+                         sync_every=sync_every)
+        self.combine = combine
+        if relaxed:
+            impl, hp = self._megaround_relaxed, P(self.axis)
+            in_specs = (hp, hp, P(), P(), hp, P(), P(), P(), P())
+            out_specs = (hp, hp, P(), P(), hp, P(), P(), P(), P(), P())
+        else:
+            impl, hp = self._megaround_strict, P()
+            in_specs = (hp, hp, P(), P(self.axis), P(), P(), P(), P())
+            out_specs = (hp, hp, P(), P(self.axis), P(), P(), P(), P(), P())
+        self._megaround = jax.jit(shard_map(
+            impl, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False))   # while_loop has no replication rule
+
+    def _megaround_relaxed(self, keys, vals, sizes, hints, acc,
+                           processed, spawned, max_occ, limit):
+        keys, vals = keys[0], vals[0]
+        acc = jax.tree_util.tree_map(lambda x: x[0], acc)
+
+        def body(carry):
+            (keys, vals, sizes, hints, acc, processed, spawned, max_occ,
+             oflow, rounds) = carry
+            keys, vals, sizes, hints, acc, k, total, over, _ = \
+                self._round_relaxed(keys, vals, sizes, hints, acc)
+            return (keys, vals, sizes, hints, acc, processed + k,
+                    spawned + total,
+                    jnp.maximum(max_occ, jnp.sum(sizes)),
+                    oflow | over, rounds + 1)
+
+        def cond(carry):
+            _, _, sizes, _, _, _, _, _, oflow, rounds = carry
+            return (jnp.sum(sizes) > 0) & (~oflow) & (rounds < limit)
+
+        carry = (keys, vals, sizes, hints, acc, processed, spawned, max_occ,
+                 jnp.bool_(False), jnp.int32(0))
+        out = jax.lax.while_loop(cond, body, carry)
+        acc_stacked = jax.tree_util.tree_map(lambda x: x[None], out[4])
+        return (out[0][None], out[1][None], out[2], out[3], acc_stacked,
+                out[5], out[6], out[7], out[8], out[9])
+
+    def _megaround_strict(self, keys, vals, size, acc,
+                          processed, spawned, max_occ, limit):
+        acc = jax.tree_util.tree_map(lambda x: x[0], acc)
+
+        def body(carry):
+            (keys, vals, size, acc, processed, spawned, max_occ, oflow,
+             rounds) = carry
+            keys, vals, size, acc, k, total, over, _ = \
+                self._round_strict(keys, vals, size, acc)
+            return (keys, vals, size, acc, processed + k, spawned + total,
+                    jnp.maximum(max_occ, size), oflow | over, rounds + 1)
+
+        def cond(carry):
+            _, _, size, _, _, _, _, oflow, rounds = carry
+            return (size > 0) & (~oflow) & (rounds < limit)
+
+        carry = (keys, vals, size, acc, processed, spawned, max_occ,
+                 jnp.bool_(False), jnp.int32(0))
+        out = jax.lax.while_loop(cond, body, carry)
+        acc_stacked = jax.tree_util.tree_map(lambda x: x[None], out[3])
+        return (out[0], out[1], out[2], acc_stacked, out[4], out[5], out[6],
+                out[7], out[8])
+
+    def run(self, initial_keys: np.ndarray, initial_vals: np.ndarray,
+            acc: Any = None, max_rounds: int = 10_000
+            ) -> Tuple[Any, DistHeapState]:
+        """Seed the heap planes (relaxed: round-robin spray by seed rank;
+        strict: one replicated heap) and run priority megarounds to
+        global quiescence.  Sync contract: one host block per
+        ``sync_every`` chunk (once total when 0); one psum per round on
+        device.  Determinism: bit-identical to the legacy per-round path.
+        Raises ``RuntimeError`` on heap overflow or truncation at the
+        next sync.  Returns ``(acc, DistHeapState)`` — relaxed-mode
+        planes stacked ``(shards, cap)`` with per-shard sizes, acc with a
+        leading shard axis unless ``combine`` reduces it."""
+        self._reset()
+        ik = np.asarray(initial_keys, np.int32).reshape(-1)
+        iv = np.asarray(initial_vals, np.int32).reshape(-1)
+        assert ik.shape == iv.shape
+        acc = self._broadcast_acc(acc)
+        if self.relaxed:
+            keys, vals, sizes, hints = self._seed(ik, iv)
+            occ0 = jnp.int32(int(np.asarray(sizes).sum()))
+            state = [keys, vals, sizes, hints, acc,
+                     jnp.int32(0), jnp.int32(0), occ0]
+
+            def chunk_fn(limit):
+                (state[0], state[1], state[2], state[3], state[4], state[5],
+                 state[6], state[7], oflow, r
+                 ) = self._megaround(*state, jnp.int32(limit))
+                occ = int(np.asarray(state[2]).sum())        # THE sync
+                return (occ, int(r), bool(oflow), int(state[5]),
+                        int(state[6]), int(state[7]))
+
+            self._drive(chunk_fn, max_rounds, "mesh heap")
+            final = DistHeapState(state[0], state[1], state[2])
+        else:
+            keys, vals, size = self._seed(ik, iv)
+            state = [keys, vals, size, acc,
+                     jnp.int32(0), jnp.int32(0), jnp.asarray(size, jnp.int32)]
+
+            def chunk_fn(limit):
+                (state[0], state[1], state[2], state[3], state[4], state[5],
+                 state[6], oflow, r
+                 ) = self._megaround(*state, jnp.int32(limit))
+                occ = int(np.asarray(state[2]))              # THE sync
+                return (occ, int(r), bool(oflow), int(state[4]),
+                        int(state[5]), int(state[6]))
+
+            self._drive(chunk_fn, max_rounds, "mesh heap")
+            final = DistHeapState(state[0], state[1], state[2])
+        acc = state[4] if self.relaxed else state[3]
+        if self.combine is not None:
+            acc = self.combine(acc)
+        return acc, final
+
+
+class PriorityMeshRoundRunner(_PriorityMeshBase):
+    """Mesh twin of ``PriorityRoundRunner``: ``fused=True`` (default)
+    delegates to ``FusedPriorityMeshRounds`` (host sync only at global
+    quiescence); ``fused=False`` keeps the legacy host-driven loop — one
+    jitted shard_map dispatch and one occupancy readback per round — for
+    step-debug, as the parity baseline, and as the history recorder
+    (``trace=True``, legacy only: per round the popped (key, val, ok)
+    batches per shard and the gathered published children, the raw
+    material for ``sched.plinearizability`` checking).  Both engines are
+    bit-identical: same acc leaves, same heap planes, same sizes/hints and
+    stats counters."""
+
+    def __init__(self, step_fn: PriorityStepFn, *, mesh, axis: str = "data",
+                 capacity_log2: int = 10, batch: int = 64,
+                 arity_log2: int = 2, relaxed: bool = True,
+                 fused: bool = True, sync_every: int = 0,
+                 combine: Callable[[Any], Any] = None,
+                 trace: bool = False) -> None:
+        super().__init__(step_fn, mesh=mesh, axis=axis,
+                         capacity_log2=capacity_log2, batch=batch,
+                         arity_log2=arity_log2, relaxed=relaxed,
+                         sync_every=sync_every)
+        self.fused = fused
+        self.combine = combine
+        if trace and fused:
+            raise ValueError("trace recording needs the per-round host "
+                             "boundary: use fused=False")
+        self.trace_enabled = trace
+        self.trace = []
+        if fused:
+            self._engine = FusedPriorityMeshRounds(
+                step_fn, mesh=mesh, axis=axis, capacity_log2=capacity_log2,
+                batch=batch, arity_log2=arity_log2, relaxed=relaxed,
+                sync_every=sync_every, combine=combine)
+            return
+        self._engine = None
+        sp = P(self.axis)
+        if relaxed:
+            impl, hp = self._round_impl_relaxed, sp
+            in_specs = (hp, hp, P(), P(), sp)
+            out_core = (hp, hp, P(), P(), sp, P(), P(), P())
+        else:
+            impl, hp = self._round_impl_strict, P()
+            in_specs = (hp, hp, P(), sp)
+            out_core = (hp, hp, P(), sp, P(), P(), P())
+        # trace arrays ride in the jit outputs only when recording — the
+        # untraced legacy baseline must not pay per-round materialization
+        # the fused engine never pays
+        out_specs = out_core + ((sp, sp, sp, P(), P(), P())
+                                if trace else ())
+        ncore = len(out_core)
+
+        def round_fn(*args):
+            out = impl(*args)
+            return out if trace else out[:ncore]
+
+        self._round_jit = jax.jit(shard_map(
+            round_fn, mesh=self.mesh, in_specs=in_specs,
+            out_specs=out_specs, check_rep=False))
+
+    def _round_impl_relaxed(self, keys, vals, sizes, hints, acc):
+        keys, vals = keys[0], vals[0]
+        acc = jax.tree_util.tree_map(lambda x: x[0], acc)
+        keys, vals, sizes, hints, acc, k, total, over, tr = \
+            self._round_relaxed(keys, vals, sizes, hints, acc)
+        acc = jax.tree_util.tree_map(lambda x: x[None], acc)
+        outk, outv, ok, gk, gv, gactive = tr
+        return (keys[None], vals[None], sizes, hints, acc, k, total, over,
+                outk[None], outv[None], ok[None], gk, gv, gactive)
+
+    def _round_impl_strict(self, keys, vals, size, acc):
+        acc = jax.tree_util.tree_map(lambda x: x[0], acc)
+        keys, vals, size, acc, k, total, over, tr = \
+            self._round_strict(keys, vals, size, acc)
+        acc = jax.tree_util.tree_map(lambda x: x[None], acc)
+        outk, outv, ok, gk, gv, gactive = tr
+        return (keys, vals, size, acc, k, total, over,
+                outk[None], outv[None], ok[None], gk, gv, gactive)
+
+    def run(self, initial_keys: np.ndarray, initial_vals: np.ndarray,
+            acc: Any = None, max_rounds: int = 10_000
+            ) -> Tuple[Any, DistHeapState]:
+        """Run to quiescence on the selected engine.  ``fused=True``:
+        ``FusedPriorityMeshRounds.run`` contract (host sync only at
+        quiescence / ``sync_every``); ``fused=False``: one dispatch and
+        one occupancy readback per round (``host_syncs == rounds``),
+        appending per-round pop/push records to ``self.trace`` when
+        ``trace=True``.  Both bit-deterministic and identical to each
+        other; both raise on overflow/truncation."""
+        if self._engine is not None:
+            try:
+                return self._engine.run(initial_keys, initial_vals, acc,
+                                        max_rounds)
+            finally:
+                self.stats = dict(self._engine.stats, fused=1)
+                self.sync_log = self._engine.sync_log
+        self._reset()
+        self.trace = []
+        ik = np.asarray(initial_keys, np.int32).reshape(-1)
+        iv = np.asarray(initial_vals, np.int32).reshape(-1)
+        assert ik.shape == iv.shape
+        acc = self._broadcast_acc(acc)
+        if self.relaxed:
+            keys, vals, sizes, hints = self._seed(ik, iv)
+            state = [keys, vals, sizes, hints]
+            occ = int(np.asarray(sizes).sum())
+        else:
+            keys, vals, size = self._seed(ik, iv)
+            state = [keys, vals, size]
+            occ = int(np.asarray(size))
+        rounds = processed = spawned = host_syncs = 0
+        max_occ = occ
+        overflow = False
+        while occ > 0 and rounds < max_rounds:
+            out = self._round_jit(*state, acc)
+            nstate = len(state)
+            state = list(out[:nstate])
+            acc, k, total, over = out[nstate:nstate + 4]
+            occ = (int(np.asarray(state[2]).sum()) if self.relaxed
+                   else int(np.asarray(state[2])))
+            host_syncs += 1                             # per-round readback
+            rounds += 1
+            processed += int(k)
+            spawned += int(total)
+            max_occ = max(max_occ, occ)
+            self.sync_log.append({"rounds": rounds, "occupancy": occ})
+            if self.trace_enabled:
+                outk, outv, ok, gk, gv, gactive = out[nstate + 4:]
+                self.trace.append({
+                    "pops": (np.asarray(outk), np.asarray(outv),
+                             np.asarray(ok)),
+                    "pushes": (np.asarray(gk), np.asarray(gv),
+                               np.asarray(gactive)),
+                })
+            if bool(over):
+                overflow = True
+                break
+        self.stats = {"rounds": rounds, "processed": processed,
+                      "spawned": spawned, "max_occupancy": max_occ,
+                      "drained": int(occ == 0),
+                      "host_syncs": host_syncs, "fused": 0}
+        if overflow:
+            raise RuntimeError(
+                f"mesh heap overflow: occupancy {occ} + spawned children "
+                f"exceed capacity {self.capacity} at round {rounds} (raise "
+                f"capacity_log2 or lower the fanout)")
+        if occ > 0:
+            raise RuntimeError(
+                f"mesh heap round loop truncated at max_rounds={max_rounds} "
+                f"with occupancy {occ}: not quiescent (stats['drained']=0)")
+        final = DistHeapState(state[0], state[1], state[2])
         if self.combine is not None:
             acc = self.combine(acc)
         return acc, final

@@ -13,14 +13,15 @@ and the host-thread twin used by the serving engine's EDF admission.
 from .gpq import DELMIN, GPQ, INS, NODE, NodeFormat
 from .hostpq import HostPriorityPool
 from .plinearizability import (check_p_linearizable,
-                               check_p_linearizable_search)
+                               check_p_linearizable_search,
+                               mesh_trace_history)
 from .policy import (EDFPolicy, POLICIES, PriorityPolicy, StrictPolicy,
                      WeightedPolicy, make_policy)
-from .relaxed import RelaxedGPQ
+from .relaxed import RelaxedGPQ, mesh_relaxation_bound
 
 __all__ = [
     "DELMIN", "EDFPolicy", "GPQ", "HostPriorityPool", "INS", "NODE",
     "NodeFormat", "POLICIES", "PriorityPolicy", "RelaxedGPQ", "StrictPolicy",
     "WeightedPolicy", "check_p_linearizable", "check_p_linearizable_search",
-    "make_policy",
+    "make_policy", "mesh_relaxation_bound", "mesh_trace_history",
 ]

@@ -192,6 +192,44 @@ def check_p_linearizable(history: Sequence[HistoryEvent],
         True, f"priority-linearizable up to relaxation {k} (pattern check)")
 
 
+def mesh_trace_history(trace, seeds) -> List[HistoryEvent]:
+    """Convert a ``PriorityMeshRoundRunner(trace=True)`` recording into a
+    checkable history.  ``seeds`` is the run's initial ``[(key, ident)]``
+    list; ``trace`` is the runner's per-round list of ``{"pops": (keys
+    (S,B), vals (S,B), ok (S,B)), "pushes": (gkeys, gvals, active)}``.
+
+    Timing reflects the engine's linearization structure: rounds are
+    totally ordered by the collective schedule; within a round every
+    shard's pops share ONE interval (they are concurrent — no
+    linearization is forced to keep a same-round sibling pop pending),
+    and the publish wave's inserts follow in a later interval of the same
+    round.  ``ident`` = the payload word, so payloads must be unique
+    across the run (use a spawn-tree workload, not a workload that can
+    re-publish a payload).  Feed the result to ``check_p_linearizable``
+    with ``k = relaxed.mesh_relaxation_bound(...)``."""
+    h: List[HistoryEvent] = []
+    for key, ident in seeds:
+        h.append(HistoryEvent(proc=0, op=INS, arg=(int(key), int(ident)),
+                              ret=True, call=0, end=1))
+    for r, rec in enumerate(trace):
+        t = 4 * r + 4
+        pk, pv, ok = rec["pops"]
+        for s in range(pk.shape[0]):
+            for lane in range(pk.shape[1]):
+                if ok[s, lane]:
+                    h.append(HistoryEvent(
+                        proc=s, op=DELMIN, arg=None,
+                        ret=(int(pk[s, lane]), int(pv[s, lane])),
+                        call=t, end=t + 1))
+        gk, gv, ga = rec["pushes"]
+        for i in range(len(gk)):
+            if ga[i]:
+                h.append(HistoryEvent(proc=0, op=INS,
+                                      arg=(int(gk[i]), int(gv[i])),
+                                      ret=True, call=t + 2, end=t + 3))
+    return h
+
+
 # ---------------------------------------------------------------------------
 # Exact Wing–Gong search against the k-relaxed priority-queue spec
 # (independent oracle for small histories)

@@ -36,6 +36,17 @@ shared pending counter at zero — an instant at which no completed,
 undeleted insert existed.  A sweep that drains every ring empty while the
 counter is nonzero (the counted inserts are still in flight) retries with
 backoff rather than guessing.
+
+Mesh-window interference
+------------------------
+The priority *mesh* engine (``runtime/meshrounds.py``, DESIGN.md § 6) is
+the same relaxation one level up: each shard of the mesh is a "ring" that
+pops its local minimum, and the per-round claim/publish windows play the
+role of the sweep window.  ``mesh_relaxation_bound`` extends the envelope
+with that term; like the ``R > 1`` regime here it is a declared envelope
+(validated by holding recorded round histories to it with the
+``plinearizability`` checker), not a tight constant — and like ``R = 1``,
+the strict replicated-heap mode collapses it back to the exact base bound.
 """
 
 from __future__ import annotations
@@ -45,6 +56,40 @@ from typing import List, Optional, Tuple
 from ..core.atomics import AtomicMemory
 from ..core.sim import Ctx
 from .gpq import DELMIN, GPQ, INS, NEG1, NODE, NodeFormat
+
+
+def mesh_relaxation_bound(shards: int, batch: int, max_occupancy: int, *,
+                          lazy: int = 0, rings: int = 1,
+                          num_threads: int = 1) -> int:
+    """Relaxation envelope ``k`` for the sharded priority mesh rounds
+    (DESIGN.md § 6) — the mesh-window interference term stacked on the
+    chip-level ``RelaxedGPQ`` envelope.
+
+    Derivation.  A round pops each shard's *local* minima, so a pop from
+    shard ``i`` can rank behind keys resident on sibling shards at its
+    linearization window.  Same-round sibling pops are concurrent (their
+    deletes are invoked inside the window, so no linearization is forced
+    to keep them pending); what remains chargeable is each sibling's
+    *unpopped* residue.  Round-robin rank spray balances per-shard
+    arrivals to within one child per round and the hint-ordered
+    even-split claim balances departures the same way, so a shard's
+    residue stays within one batch of the even share — the envelope
+    charges each of the ``shards − 1`` siblings
+    ``ceil(max_occupancy / shards) + batch`` hidden keys.  At
+    ``shards = 1`` (or the strict replicated-heap mode) the mesh term
+    vanishes and the bound is the chip-level base, which is exact — pops
+    leave the one heap in global min-key order.
+
+    ``lazy``/``rings``/``num_threads`` fold in the chip-level envelope
+    when each mesh shard is itself a relaxed G-PQ (the device engine uses
+    an exact applied heap per shard, i.e. the ``lazy = 0, rings = 1``
+    point).  Sound in the checker's sense: recorded mesh histories are
+    held to this ``k`` by ``check_p_linearizable`` in the test suite."""
+    base = lazy + 2 * (rings - 1) * num_threads
+    if shards <= 1:
+        return base
+    resident = -(-int(max_occupancy) // int(shards)) + int(batch)
+    return base + (shards - 1) * resident
 
 
 class RelaxedGPQ:

@@ -1,0 +1,320 @@
+"""Priority mesh rounds + delta-stepping SSSP invariants (DESIGN.md § 6):
+
+* ``heap_planes`` (the pure-jnp masked batched sift) is bit-identical to
+  the ``heap_apply`` Pallas kernel, including partial (``OP_NOP``-padded)
+  waves via ``heap_pop_count`` / ``heap_insert_masked``;
+* ``PriorityMeshRoundRunner`` fused-vs-legacy bit-identity (acc, heap
+  planes, stats) in both orderings, on the spawn-tree workload and on
+  SSSP;
+* SSSP distances are exact vs the Dijkstra oracle (1 shard in-process;
+  2 and 4 shards via the bench_sssp --smoke forced-device subprocess);
+* overflow, seed overflow, and ``max_rounds`` truncation raise
+  ``RuntimeError`` from both engines on the priority plane;
+* recorded pop histories are priority-linearizable at the declared
+  relaxation: ``k = 0`` at 1 shard (both orderings — one heap pops in
+  exact min-key order), ``mesh_relaxation_bound`` at 2 shards (inside
+  the smoke subprocess);
+* ``priority_claim_schedule`` follows the hint-ordered even-split
+  contract.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.jaxcompat import make_mesh  # noqa: E402
+from repro.kernels.heap_batch import (  # noqa: E402
+    KEY_INF, OP_DELMIN, OP_INSERT, OP_NOP, heap_apply, heap_insert_masked,
+    heap_planes, heap_pop_count)
+from repro.runtime import PriorityMeshRoundRunner  # noqa: E402
+from repro.sched import (check_p_linearizable, mesh_relaxation_bound,  # noqa: E402
+                         mesh_trace_history)
+
+STAT_KEYS = ("rounds", "processed", "spawned", "max_occupancy", "drained")
+
+
+def _mesh1():
+    return make_mesh((1,), ("data",))
+
+
+# -- heap_planes: the pure-jnp twin of the Pallas kernel ----------------------
+
+
+def test_heap_planes_bit_identical_to_kernel():
+    rng = np.random.default_rng(0)
+    cap_log2, arity_log2 = 5, 2
+    cap = 1 << cap_log2
+    for trial in range(8):
+        k1 = jnp.full((cap,), KEY_INF, jnp.int32)
+        v1 = jnp.full((cap,), -1, jnp.int32)
+        s1 = jnp.int32(0)
+        k2, v2, s2 = k1, v1, s1
+        for _ in range(5):
+            b = int(rng.integers(1, 12))
+            ops = jnp.asarray(
+                rng.choice([OP_INSERT, OP_DELMIN, OP_NOP], b).astype(np.int32))
+            opk = jnp.asarray(rng.integers(0, 1000, b).astype(np.int32))
+            opv = jnp.asarray(rng.integers(0, 1000, b).astype(np.int32))
+            k1, v1, s1, outk1, outv1, ok1 = heap_apply(
+                k1, v1, s1, ops, opk, opv, cap_log2=cap_log2,
+                arity_log2=arity_log2)
+            k2, v2, s2, outk2, outv2, ok2 = heap_planes(
+                k2, v2, s2, ops, opk, opv, cap_log2=cap_log2,
+                arity_log2=arity_log2)
+            np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+            np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+            assert int(s1) == int(s2)
+            np.testing.assert_array_equal(np.asarray(outk1), np.asarray(outk2))
+            np.testing.assert_array_equal(np.asarray(outv1), np.asarray(outv2))
+            np.testing.assert_array_equal(np.asarray(ok1), np.asarray(ok2))
+
+
+def test_heap_partial_waves_drain_sorted():
+    """Masked pop/insert wrappers: traced-count pops return the smallest
+    keys in order; NOP lanes are inert."""
+    rng = np.random.default_rng(1)
+    cap_log2 = 6
+    cap = 1 << cap_log2
+    keys = jnp.full((cap,), KEY_INF, jnp.int32)
+    vals = jnp.full((cap,), -1, jnp.int32)
+    size = jnp.int32(0)
+    ik = rng.permutation(40).astype(np.int32)
+    mask = np.ones(40, bool)
+    mask[[3, 17]] = False                      # masked-out lanes stay out
+    keys, vals, size, _, _, ok = heap_insert_masked(
+        keys, vals, size, jnp.asarray(ik), jnp.asarray(ik),
+        jnp.asarray(mask), cap_log2=cap_log2)
+    assert int(size) == 38
+    np.testing.assert_array_equal(np.asarray(ok), mask)
+    keys, vals, size, outk, outv, ok = heap_pop_count(
+        keys, vals, size, 38, batch=48, cap_log2=cap_log2)
+    expect = sorted(ik[mask].tolist())
+    assert np.asarray(outk)[:38].tolist() == expect
+    assert np.asarray(outv)[:38].tolist() == expect
+    assert int(size) == 0
+    assert not bool(np.asarray(ok)[38:].any())
+
+
+# -- priority mesh rounds: fused vs legacy parity -----------------------------
+
+
+def _tree_step(limit=32):
+    def step(acc, keys, vals, valid):
+        acc = acc.at[jnp.where(valid, vals, 0)].add(valid.astype(jnp.int32))
+        cv = jnp.stack([vals * 2, vals * 2 + 1], -1).astype(jnp.int32)
+        ck = (cv * 7919) % 1000                # scrambled keys
+        cm = (valid & (vals < limit))[:, None]
+        return acc, ck, cv, cm
+    return step
+
+
+@pytest.mark.parametrize("relaxed", [True, False])
+def test_priority_mesh_fused_matches_legacy_tree(relaxed):
+    mesh = _mesh1()
+    accs, finals, stats = [], [], []
+    for fused in (True, False):
+        r = PriorityMeshRoundRunner(_tree_step(), mesh=mesh, capacity_log2=8,
+                                    batch=16, relaxed=relaxed, fused=fused,
+                                    combine=lambda a: a.sum(0))
+        acc, st = r.run([7919 % 1000], [1], acc=jnp.zeros(80, jnp.int32))
+        accs.append(np.asarray(acc))
+        finals.append(st)
+        stats.append(r.stats)
+    np.testing.assert_array_equal(accs[0], accs[1])
+    for a, b in zip(finals[0][:2], finals[1][:2]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k in STAT_KEYS:
+        assert stats[0][k] == stats[1][k], k
+    # the headline: host sync only at quiescence vs every round
+    assert stats[0]["host_syncs"] == 1
+    assert stats[1]["host_syncs"] == stats[1]["rounds"]
+    # tasks 1..63 processed exactly once each
+    assert accs[0][1:64].tolist() == [1] * 63
+
+
+def test_priority_mesh_sync_every_heartbeat():
+    mesh = _mesh1()
+    r = PriorityMeshRoundRunner(_tree_step(), mesh=mesh, capacity_log2=8,
+                                batch=16, sync_every=2,
+                                combine=lambda a: a.sum(0))
+    acc, _ = r.run([0], [1], acc=jnp.zeros(80, jnp.int32))
+    full = PriorityMeshRoundRunner(_tree_step(), mesh=mesh, capacity_log2=8,
+                                   batch=16, combine=lambda a: a.sum(0))
+    acc2, _ = full.run([0], [1], acc=jnp.zeros(80, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(acc2))
+    assert r.stats["host_syncs"] > 1
+    assert r.sync_log[-1]["occupancy"] == 0
+
+
+# -- overflow / truncation on the priority plane ------------------------------
+
+
+def _explode_step():
+    def step(acc, keys, vals, valid):
+        cv = jnp.broadcast_to(vals[:, None], (vals.shape[0], 4)) + 1
+        cm = jnp.broadcast_to(valid[:, None], cv.shape)
+        return acc, cv.astype(jnp.int32), cv.astype(jnp.int32), cm
+    return step
+
+
+@pytest.mark.parametrize("relaxed", [True, False])
+@pytest.mark.parametrize("fused", [True, False])
+def test_priority_mesh_overflow_raises(relaxed, fused):
+    r = PriorityMeshRoundRunner(_explode_step(), mesh=_mesh1(),
+                                capacity_log2=4, batch=8, relaxed=relaxed,
+                                fused=fused)
+    with pytest.raises(RuntimeError, match="mesh heap overflow"):
+        r.run(np.arange(8), np.arange(8), acc=jnp.int32(0), max_rounds=100)
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_priority_mesh_seed_overflow_raises(fused):
+    r = PriorityMeshRoundRunner(_tree_step(), mesh=_mesh1(), capacity_log2=4,
+                                batch=8, fused=fused)
+    with pytest.raises(RuntimeError, match="mesh heap overflow"):
+        r.run(np.arange(64), np.arange(64), acc=jnp.zeros(80, jnp.int32))
+
+
+def _immortal_step():
+    def step(acc, keys, vals, valid):
+        return (acc, keys[:, None], vals[:, None],
+                valid[:, None])               # every task respawns
+    return step
+
+
+@pytest.mark.parametrize("relaxed", [True, False])
+@pytest.mark.parametrize("fused", [True, False])
+def test_priority_mesh_truncation_raises(relaxed, fused):
+    r = PriorityMeshRoundRunner(_immortal_step(), mesh=_mesh1(),
+                                capacity_log2=6, batch=8, relaxed=relaxed,
+                                fused=fused)
+    with pytest.raises(RuntimeError, match="not quiescent"):
+        r.run([1, 2, 3], [1, 2, 3], acc=jnp.int32(0), max_rounds=5)
+    assert r.stats["drained"] == 0
+    assert r.stats["rounds"] == 5
+
+
+def test_priority_mesh_batch_exceeds_capacity_raises():
+    with pytest.raises(ValueError, match="exceeds per-shard heap capacity"):
+        PriorityMeshRoundRunner(_tree_step(), mesh=_mesh1(), capacity_log2=4,
+                                batch=64)
+
+
+def test_trace_requires_legacy_engine():
+    with pytest.raises(ValueError, match="fused=False"):
+        PriorityMeshRoundRunner(_tree_step(), mesh=_mesh1(), trace=True)
+
+
+# -- relaxation semantics -----------------------------------------------------
+
+
+@pytest.mark.parametrize("relaxed", [True, False])
+def test_single_shard_pop_history_is_exact(relaxed):
+    """At 1 shard both orderings pop one heap in global min-key order:
+    the recorded history must be priority-linearizable at k = 0."""
+    r = PriorityMeshRoundRunner(_tree_step(limit=64), mesh=_mesh1(),
+                                capacity_log2=8, batch=8, relaxed=relaxed,
+                                fused=False, trace=True,
+                                combine=lambda a: a.sum(0))
+    seeds = [(7919 % 1000, 1)]
+    acc, _ = r.run([k for k, _ in seeds], [v for _, v in seeds],
+                   acc=jnp.zeros(200, jnp.int32))
+    assert np.asarray(acc)[1:128].tolist() == [1] * 127
+    hist = mesh_trace_history(r.trace, seeds)
+    res = check_p_linearizable(hist, 0)
+    assert res.ok, res.reason
+    assert mesh_relaxation_bound(1, 8, r.stats["max_occupancy"]) == 0
+
+
+def test_mesh_relaxation_bound_shape():
+    assert mesh_relaxation_bound(1, 64, 10_000) == 0
+    assert mesh_relaxation_bound(1, 64, 10_000, lazy=3) == 3
+    # the chip-level envelope stacks under the mesh term
+    assert (mesh_relaxation_bound(2, 64, 1000, rings=4, num_threads=8)
+            == 2 * 3 * 8 + 1 * (500 + 64))
+    # monotone in every mesh argument
+    assert (mesh_relaxation_bound(4, 64, 1000)
+            > mesh_relaxation_bound(2, 64, 1000))
+    assert (mesh_relaxation_bound(2, 128, 1000)
+            > mesh_relaxation_bound(2, 64, 1000))
+
+
+def test_priority_claim_schedule_hint_ordered():
+    from repro.core.distqueue import priority_claim_schedule
+    # remainder goes to the lowest-key shards, shares clamp to local size
+    counts = np.asarray(priority_claim_schedule(
+        7, 3, 4, jnp.asarray([50, 10, 99]), jnp.asarray([5, 5, 5])))
+    # hint order: shard1 (10), shard0 (50), shard2 (99); 7 = 2·3 + 1, so
+    # the one remainder unit lands on shard1, the lowest-key shard
+    assert counts.tolist() == [2, 3, 2]
+    # an empty shard cannot donate; its share is clamped away
+    counts = np.asarray(priority_claim_schedule(
+        8, 2, 8, jnp.asarray([1, 2 ** 31 - 1]), jnp.asarray([8, 0])))
+    assert counts.tolist() == [4, 0]
+    # budget never exceeds batch per shard
+    counts = np.asarray(priority_claim_schedule(
+        100, 2, 8, jnp.asarray([1, 2]), jnp.asarray([50, 50])))
+    assert counts.tolist() == [8, 8]
+
+
+# -- SSSP: exact vs Dijkstra, fused/legacy bit-identity -----------------------
+
+
+@pytest.mark.parametrize("relaxed", [True, False])
+def test_sssp_single_shard_exact_and_bit_identical(relaxed):
+    from repro.apps import bfs, sssp
+    mesh = _mesh1()
+    for g in (bfs.road_like(144), bfs.kron_like(200, avg_deg=6, seed=2)):
+        w = sssp.with_weights(g, max_w=8, seed=1)
+        ref = sssp.dijkstra_reference(g, w, 0)
+        res = {}
+        for fused in (True, False):
+            dist, stats = sssp.sssp_mesh_rounds(g, w, 0, mesh=mesh, batch=32,
+                                                relaxed=relaxed, fused=fused)
+            np.testing.assert_array_equal(dist, ref)
+            res[fused] = stats
+        for k in STAT_KEYS:
+            assert res[True][k] == res[False][k], (g.name, k)
+        assert res[True]["host_syncs"] == 1
+
+
+def test_sssp_delta_sweep_stays_exact():
+    """Bucket width trades rounds for re-relaxations, never exactness."""
+    from repro.apps import bfs, sssp
+    mesh = _mesh1()
+    g = bfs.road_like(100)
+    w = sssp.with_weights(g, max_w=6, seed=3)
+    ref = sssp.dijkstra_reference(g, w, 0)
+    for delta in (1, 4, 16):
+        dist, stats = sssp.sssp_mesh_rounds(g, w, 0, mesh=mesh, batch=16,
+                                            delta=delta)
+        np.testing.assert_array_equal(dist, ref)
+        assert stats["drained"] == 1
+
+
+def test_sssp_payload_packing_guard():
+    from repro.apps import bfs, sssp
+    g = bfs.road_like(144)
+    w = np.full(g.m, 2 ** 20, np.int32)       # forces (d·n + v) past int32
+    with pytest.raises(ValueError, match="packed"):
+        sssp.sssp_mesh_rounds_runner(g, w, mesh=_mesh1())
+
+
+# -- ≥2-shard acceptance (forced-device subprocess) ---------------------------
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_bench_sssp_smoke_multi_shard(shards):
+    """The CI gate: fused/legacy bit-parity, exact Dijkstra distances, and
+    the declared relaxation envelope on a forced-device mesh."""
+    import io
+    from benchmarks.bench_sssp import smoke
+    buf = io.StringIO()
+    assert smoke(buf, shards=shards), buf.getvalue()

@@ -1,0 +1,101 @@
+"""Docs cross-reference checker (CI gate).
+
+Validates that the documentation web cannot rot:
+
+1. every ``DESIGN.md § x[.y]`` pointer in the source tree, benchmarks,
+   examples, tests, README, and docs/PAPER_MAP.md names a section header
+   that actually exists in DESIGN.md;
+2. docs/PAPER_MAP.md covers every paper section § II–§ V with its own
+   ``## § <n>`` header (the acceptance contract of the paper map);
+3. every internal ``§ x.y`` cross-reference *inside* DESIGN.md resolves
+   to one of its own headers.
+
+Run from the repo root: ``python tools/docs_check.py`` — exits nonzero
+with a list of stale pointers on failure.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# e.g. "## § 2 Accelerator mapping" / "### § 2.3 Mesh-level ..."
+_HEADER = re.compile(r"^#+\s*§\s*(\d+(?:\.\d+)?)\b", re.M)
+# e.g. "DESIGN.md § 4.3" (an optional trailing ".5" would be a subsection)
+_POINTER = re.compile(r"DESIGN\.md\s*§\s*(\d+(?:\.\d+)?)")
+# bare internal refs inside DESIGN.md: "§ 2.3", "§ 5" — but not "§ II" etc.
+_INTERNAL = re.compile(r"§\s*(\d+(?:\.\d+)?)")
+# the paper sections PAPER_MAP.md must cover
+_PAPER_SECTIONS = ("II", "III", "IV", "V")
+
+
+def design_headers(design_text: str) -> set:
+    return set(_HEADER.findall(design_text))
+
+
+def check() -> list:
+    errors = []
+    design_path = os.path.join(REPO, "DESIGN.md")
+    with open(design_path) as f:
+        design = f.read()
+    headers = design_headers(design)
+    if not headers:
+        return [f"{design_path}: no '§ <n>' headers found"]
+
+    # 1. DESIGN.md § pointers across the repo
+    pointer_files = []
+    for pat in ("src/**/*.py", "benchmarks/*.py", "examples/*.py",
+                "tests/*.py", "tools/*.py", "README.md",
+                "docs/PAPER_MAP.md"):
+        pointer_files += glob.glob(os.path.join(REPO, pat), recursive=True)
+    for path in sorted(set(pointer_files)):
+        with open(path) as f:
+            text = f.read()
+        for m in _POINTER.finditer(text):
+            sec = m.group(1)
+            if sec not in headers:
+                line = text[:m.start()].count("\n") + 1
+                errors.append(f"{os.path.relpath(path, REPO)}:{line}: "
+                              f"stale pointer DESIGN.md § {sec} "
+                              f"(no such header)")
+
+    # 2. PAPER_MAP.md covers paper § II–§ V
+    pm_path = os.path.join(REPO, "docs", "PAPER_MAP.md")
+    if not os.path.exists(pm_path):
+        errors.append("docs/PAPER_MAP.md is missing")
+    else:
+        with open(pm_path) as f:
+            pm = f.read()
+        for sec in _PAPER_SECTIONS:
+            if not re.search(rf"^##\s*§\s*{sec}\b", pm, re.M):
+                errors.append(f"docs/PAPER_MAP.md: no '## § {sec}' section "
+                              f"(paper § {sec} uncovered)")
+
+    # 3. DESIGN.md internal cross-references
+    for m in _INTERNAL.finditer(design):
+        sec = m.group(1)
+        if sec not in headers:
+            line = design[:m.start()].count("\n") + 1
+            errors.append(f"DESIGN.md:{line}: internal reference § {sec} "
+                          f"has no matching header")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    if errors:
+        print(f"docs-check: {len(errors)} stale reference(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("docs-check: all DESIGN.md § pointers resolve; PAPER_MAP.md "
+          "covers paper § II-§ V")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
