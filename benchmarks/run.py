@@ -6,7 +6,14 @@ Sections: Fig. 4 throughput, Fig. 5 per-op profiling (+ Fig. 1 ablation),
 Table IV/Fig. 6 BFS, Fig. 7 ray tracing, kernel micro-benchmarks, the
 task-runtime fabric comparison (bench_runtime), the G-PQ priority policy
 comparison (bench_runtime.priority_main), the round/mesh megaround
-engines (bench_rounds, bench_mesh), and priority-mesh SSSP (bench_sssp).
+engines (bench_rounds, bench_mesh), priority-mesh SSSP (bench_sssp), and
+the telemetry overhead sweep (bench_obs).
+
+``--trace [DIR]`` emits the observability artifact instead of (or before)
+the sweep: a 2-shard mesh SSSP run's telemetry as ``trace_sssp.jsonl`` +
+``trace_sssp.json`` (Chrome trace) with per-round occupancy, claim
+imbalance, and measured rank error vs the declared relaxation envelope —
+schema-validated by ``tools/trace_check.py`` before the driver exits 0.
 
 CSV lines go to stdout: ``name,...`` per row.  With ``--json`` the same
 rows are parsed into ``{section: [row dicts]}`` and written to the given
@@ -74,7 +81,8 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # Trajectory rows keep only scheduling-relevant metrics; everything else in
 # a row (configs, counts) rides along untouched.
-_TRAJECTORY_SECTIONS = ("runtime", "priority", "rounds", "mesh", "sssp")
+_TRAJECTORY_SECTIONS = ("runtime", "priority", "rounds", "mesh", "sssp",
+                        "obs")
 
 
 def _git_rev() -> str:
@@ -125,7 +133,14 @@ def main() -> None:
     ap.add_argument("--section", default=None,
                     help="comma-separated subset of: throughput, profiling, "
                          "bfs, raytrace, kernels, runtime, priority, rounds, "
-                         "mesh, sssp")
+                         "mesh, sssp, obs")
+    ap.add_argument("--trace", nargs="?", const=".", default=None,
+                    metavar="DIR",
+                    help="emit the telemetry artifact into DIR (default .): "
+                         "a 2-shard mesh SSSP run's JSONL + Chrome trace "
+                         "with per-round occupancy, claim imbalance, and "
+                         "measured rank error vs the declared envelope, "
+                         "validated by tools/trace_check.py")
     ap.add_argument("--emit-trajectory", nargs="?", const="auto",
                     default=None, metavar="N",
                     help="write BENCH_<n>.json at the repo root (n "
@@ -137,9 +152,16 @@ def main() -> None:
         except ValueError:
             ap.error(f"--emit-trajectory expects an integer, got "
                      f"{args.emit_trajectory!r}")
-    from . import (bench_bfs, bench_kernels, bench_mesh, bench_profiling,
-                   bench_raytrace, bench_rounds, bench_runtime, bench_sssp,
-                   bench_throughput)
+    from . import (bench_bfs, bench_kernels, bench_mesh, bench_obs,
+                   bench_profiling, bench_raytrace, bench_rounds,
+                   bench_runtime, bench_sssp, bench_throughput)
+
+    if args.trace is not None:
+        if not bench_obs.trace_main(trace_dir=args.trace,
+                                    shards=2, n=256 if args.quick else 512):
+            sys.exit(1)
+        if args.section is None and args.emit_trajectory is None:
+            return                       # --trace alone: artifact only
 
     kw_thr = dict(threads_list=(8, 32), steps=40_000) if args.quick else {}
     kw_prof = dict(threads_list=(8, 32), steps=40_000) if args.quick else {}
@@ -150,6 +172,8 @@ def main() -> None:
               if args.quick else {})
     kw_mesh = dict(batches=(64,), bfs_n=512) if args.quick else {}
     kw_sssp = dict(batches=(64,), n=512) if args.quick else {}
+    kw_obs = (dict(batches=(64,), fanout_depth=8, bfs_n=1024, sssp_n=256)
+              if args.quick else {})
     sections = {
         "throughput": lambda out: bench_throughput.main(out, **kw_thr),
         "profiling": lambda out: bench_profiling.main(out, **kw_prof),
@@ -161,6 +185,7 @@ def main() -> None:
         "rounds": lambda out: bench_rounds.main(out, **kw_rnd),
         "mesh": lambda out: bench_mesh.main(out, **kw_mesh),
         "sssp": lambda out: bench_sssp.main(out, **kw_sssp),
+        "obs": lambda out: bench_obs.main(out, **kw_obs),
     }
     if args.section:
         todo = [s.strip() for s in args.section.split(",") if s.strip()]

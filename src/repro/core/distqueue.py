@@ -265,12 +265,18 @@ def dist_dequeue_round(state: DistQueueState, want: jax.Array, axis: str, *,
 
 def dist_publish_round(state: DistQueueState, values: jax.Array,
                        mask: jax.Array, axis: str, *, capacity: int,
-                       engine: str = "planes"):
+                       engine: str = "planes", with_counts: bool = False):
     """Enqueue round with traced overflow suppression (the fused mesh
     engine's install wave): when the round's total spawn would push
     occupancy past ``capacity``, NOTHING installs, tail stays put, and
     ``over`` returns True so the driver can raise host-side at the next
-    sync.  Returns (new_state, granted (B,), total, over)."""
+    sync.  Returns (new_state, granted (B,), total, over).
+
+    ``with_counts=True`` (the telemetry path, DESIGN.md § 7) additionally
+    returns the per-shard publish counts ``(n,) int32`` — each shard's
+    contribution to the gathered round, zeroed on suppression.  The counts
+    are row sums of the already-gathered mask: replicated for free, no
+    extra collective."""
     b = values.shape[0]
     lg = _nslots_log2(state)
     gv, active, ranks, total = _gathered_round(values, mask, axis)
@@ -287,7 +293,11 @@ def dist_publish_round(state: DistQueueState, values: jax.Array,
     n = _axis_size(axis)
     me = jax.lax.axis_index(axis)
     ok_local = _pvary(ok, axis).reshape(n, b)[me]
-    return new_state, (ok_local > 0) & (mask > 0), total, over
+    granted = (ok_local > 0) & (mask > 0)
+    if with_counts:
+        counts = _pvary(active, axis).reshape(n, b).sum(1, dtype=jnp.int32)
+        return new_state, granted, total, over, counts
+    return new_state, granted, total, over
 
 
 def claim_schedule(k, n: int, batch: int):
@@ -311,12 +321,18 @@ def claim_schedule(k, n: int, batch: int):
 
 
 def dist_claim_round(state: DistQueueState, k, batch: int, axis: str, *,
-                     engine: str = "planes"):
+                     engine: str = "planes", with_grid: bool = False):
     """Claim ``k`` items (a replicated scalar, ≤ occupancy) spread evenly
     over the shards — ``claim_schedule`` — with NO collective: every shard
     derives the full mesh's dequeue tickets from the replicated head.
     Returns (new_state, values (batch,), ok (batch,)) — values/ok are this
-    shard's slice of the schedule."""
+    shard's slice of the schedule.
+
+    ``with_grid=True`` (the telemetry path, DESIGN.md § 7) additionally
+    returns the full gathered claim grid ``(values (n·batch,), ok
+    (n·batch,))`` — computed from replicated planes/tickets, so it is
+    already replicated: global per-round extrema come for free, no
+    collective."""
     lg = _nslots_log2(state)
     n = _axis_size(axis)
     active, ranks = claim_schedule(k, n, batch)
@@ -326,8 +342,12 @@ def dist_claim_round(state: DistQueueState, k, batch: int, axis: str, *,
     k = jnp.minimum(jnp.asarray(k, jnp.int32), n * batch)
     new_state = DistQueueState(*planes, tail=state.tail, head=state.head + k)
     me = jax.lax.axis_index(axis)
-    vals_local = _pvary(vals, axis).reshape(n, batch)[me]
-    ok_local = _pvary(ok, axis).reshape(n, batch)[me]
+    vals_full = _pvary(vals, axis)
+    ok_full = _pvary(ok, axis)
+    vals_local = vals_full.reshape(n, batch)[me]
+    ok_local = ok_full.reshape(n, batch)[me]
+    if with_grid:
+        return new_state, vals_local, ok_local > 0, (vals_full, ok_full > 0)
     return new_state, vals_local, ok_local > 0
 
 
@@ -387,7 +407,8 @@ def priority_claim_schedule(k, n: int, batch: int, hints, sizes):
 
 def dist_priority_publish_round(ckeys: jax.Array, cvals: jax.Array,
                                 mask: jax.Array, local_hint: jax.Array,
-                                local_size: jax.Array, axis: str):
+                                local_size: jax.Array, axis: str,
+                                pop_meta=None):
     """The priority mesh round's ONE collective: every shard contributes
     its compact child block as packed ``(key | payload)`` words — the key
     and payload planes are concatenated into the shard's single
@@ -399,14 +420,27 @@ def dist_priority_publish_round(ckeys: jax.Array, cvals: jax.Array,
     deterministic spray order per-thread FAA would give), so child → shard
     assignment (``rank % n``) is identical everywhere.  Returns
     ``(gkeys, gvals, active, ranks, total, hints (n,), sizes (n,))`` with
-    the g-arrays flattened over the gathered op grid."""
+    the g-arrays flattened over the gathered op grid.
+
+    ``pop_meta=(local_min, local_max)`` (the telemetry path, DESIGN.md
+    § 7) widens the meta block to 4 words so each shard's popped-key
+    extrema ride the SAME psum — the one-collective-per-round invariant
+    holds with telemetry on — and appends ``(pop_mins (n,), pop_maxs
+    (n,))`` to the return tuple."""
     mask_i = (mask > 0).astype(jnp.int32)
-    meta = jnp.stack([jnp.asarray(local_hint, jnp.int32),
-                      jnp.asarray(local_size, jnp.int32)])
+    meta_words = [jnp.asarray(local_hint, jnp.int32),
+                  jnp.asarray(local_size, jnp.int32)]
+    if pop_meta is not None:
+        meta_words += [jnp.asarray(pop_meta[0], jnp.int32),
+                       jnp.asarray(pop_meta[1], jnp.int32)]
+    meta = jnp.stack(meta_words)
     gk, gv, gm, gmeta = mesh_round_gather(
         (ckeys.astype(jnp.int32), cvals.astype(jnp.int32), mask_i, meta),
         axis)
     gk, gv, gm = gk.reshape(-1), gv.reshape(-1), gm.reshape(-1)
     active = gm > 0
     ranks = jnp.cumsum(gm) - gm
-    return gk, gv, active, ranks, jnp.sum(gm), gmeta[:, 0], gmeta[:, 1]
+    out = (gk, gv, active, ranks, jnp.sum(gm), gmeta[:, 0], gmeta[:, 1])
+    if pop_meta is not None:
+        out = out + (gmeta[:, 2], gmeta[:, 3])
+    return out

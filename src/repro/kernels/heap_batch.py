@@ -148,7 +148,7 @@ def _heap_apply_jit(keys, vals, size, ops, opkeys, opvals, *, cap_log2: int,
     cap = 1 << cap_log2
     b = ops.shape[0]
     kern = functools.partial(_heap_kernel, cap_log2, arity_log2)
-    outs = pl.pallas_call(
+    call = pl.pallas_call(
         kern,
         grid=(1,),
         in_specs=[
@@ -164,8 +164,11 @@ def _heap_apply_jit(keys, vals, size, ops, opkeys, opvals, *, cap_log2: int,
         + [jax.ShapeDtypeStruct((1, b), jnp.int32)] * 3
         + [jax.ShapeDtypeStruct((1, 1), jnp.int32)],
         interpret=interpret,
-    )(size.reshape(1), ops.reshape(1, b), opkeys.reshape(1, b),
-      opvals.reshape(1, b), keys.reshape(1, cap), vals.reshape(1, cap))
+    )
+    with jax.named_scope("repro.heap_apply"):
+        outs = call(size.reshape(1), ops.reshape(1, b), opkeys.reshape(1, b),
+                    opvals.reshape(1, b), keys.reshape(1, cap),
+                    vals.reshape(1, cap))
     k, v, outk, outv, ok, nsize = outs
     return (k.reshape(cap), v.reshape(cap), nsize.reshape(())[()],
             outk.reshape(b), outv.reshape(b), ok.reshape(b).astype(bool))

@@ -139,7 +139,7 @@ def _ring_enqueue_jit(cycles, safes, enqs, idxs, tickets, values, head, *,
     nslots = 1 << nslots_log2
     b = tickets.shape[0]
     kern = functools.partial(_enq_kernel, nslots_log2, idx_bot)
-    outs = pl.pallas_call(
+    call = pl.pallas_call(
         kern,
         grid=(1,),
         in_specs=[
@@ -152,9 +152,12 @@ def _ring_enqueue_jit(cycles, safes, enqs, idxs, tickets, values, head, *,
         out_shape=[jax.ShapeDtypeStruct((1, nslots), jnp.int32)] * 4
         + [jax.ShapeDtypeStruct((1, b), jnp.int32)],
         interpret=interpret,
-    )(head.reshape(1), tickets.reshape(1, b), values.reshape(1, b),
-      cycles.reshape(1, nslots), safes.reshape(1, nslots),
-      enqs.reshape(1, nslots), idxs.reshape(1, nslots))
+    )
+    with jax.named_scope("repro.ring_enqueue"):
+        outs = call(head.reshape(1), tickets.reshape(1, b),
+                    values.reshape(1, b),
+                    cycles.reshape(1, nslots), safes.reshape(1, nslots),
+                    enqs.reshape(1, nslots), idxs.reshape(1, nslots))
     cyc, saf, enq, idx, ok = outs
     return (cyc.reshape(nslots), saf.reshape(nslots), enq.reshape(nslots),
             idx.reshape(nslots), ok.reshape(b).astype(bool))
@@ -178,7 +181,7 @@ def _ring_dequeue_jit(cycles, safes, enqs, idxs, tickets, *,
     nslots = 1 << nslots_log2
     b = tickets.shape[0]
     kern = functools.partial(_deq_kernel, nslots_log2, idx_bot)
-    outs = pl.pallas_call(
+    call = pl.pallas_call(
         kern,
         grid=(1,),
         in_specs=[pl.BlockSpec((1, b), lambda i: (0, 0))]
@@ -188,9 +191,11 @@ def _ring_dequeue_jit(cycles, safes, enqs, idxs, tickets, *,
         out_shape=[jax.ShapeDtypeStruct((1, nslots), jnp.int32)] * 4
         + [jax.ShapeDtypeStruct((1, b), jnp.int32)] * 2,
         interpret=interpret,
-    )(tickets.reshape(1, b),
-      cycles.reshape(1, nslots), safes.reshape(1, nslots),
-      enqs.reshape(1, nslots), idxs.reshape(1, nslots))
+    )
+    with jax.named_scope("repro.ring_dequeue"):
+        outs = call(tickets.reshape(1, b),
+                    cycles.reshape(1, nslots), safes.reshape(1, nslots),
+                    enqs.reshape(1, nslots), idxs.reshape(1, nslots))
     cyc, saf, enq, idx, val, ok = outs
     return (cyc.reshape(nslots), saf.reshape(nslots), enq.reshape(nslots),
             idx.reshape(nslots), val.reshape(b), ok.reshape(b).astype(bool))

@@ -62,7 +62,7 @@ def _wavefaa_jit(active: jax.Array, counter: jax.Array, *, interpret: bool):
     blocks = n // LANES
     a = active.astype(jnp.int32).reshape(blocks * 8, 128)
     ctr = counter.astype(jnp.int32).reshape(1)
-    tickets, newctr = pl.pallas_call(
+    call = pl.pallas_call(
         _wavefaa_kernel,
         grid=(blocks,),
         in_specs=[
@@ -79,5 +79,7 @@ def _wavefaa_jit(active: jax.Array, counter: jax.Array, *, interpret: bool):
         ],
         scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
         interpret=interpret,
-    )(ctr, a)
+    )
+    with jax.named_scope("repro.wavefaa"):
+        tickets, newctr = call(ctr, a)
     return tickets.reshape(n), newctr

@@ -1,0 +1,30 @@
+"""Observability layer (DESIGN.md § 7): device-resident trace planes for
+the fused engines, a unified host metrics registry, and trace exporters.
+
+* :mod:`repro.obs.trace` — ``TracePlane`` in-loop ring + ``Telemetry``
+  host driver + the unified ``SyncPoint`` heartbeat schema
+* :mod:`repro.obs.metrics` — ``MetricsRegistry`` (counters / gauges /
+  histograms behind stable ``metric_key`` names)
+* :mod:`repro.obs.export` — JSONL + Chrome trace-event emitters
+* :mod:`repro.obs.analyze` — occupancy/imbalance timelines, measured
+  rank error vs the declared ``mesh_relaxation_bound`` envelope
+"""
+
+from .analyze import (imbalance_timeline, key_inversions,
+                      measured_rank_error, occupancy_timeline,
+                      rank_error_vs_envelope)
+from .export import (read_jsonl, to_chrome_trace, write_chrome_trace,
+                     write_jsonl)
+from .metrics import Histogram, MetricsRegistry, metric_key
+from .trace import (KEY_SENTINEL, RoundRecord, SyncPoint, Telemetry,
+                    TracePlane, drain_plane, masked_min_max, trace_init,
+                    trace_record)
+
+__all__ = [
+    "KEY_SENTINEL", "Histogram", "MetricsRegistry", "RoundRecord",
+    "SyncPoint", "Telemetry", "TracePlane", "drain_plane",
+    "imbalance_timeline", "key_inversions", "masked_min_max",
+    "measured_rank_error", "metric_key", "occupancy_timeline",
+    "rank_error_vs_envelope", "read_jsonl", "to_chrome_trace",
+    "trace_init", "trace_record", "write_chrome_trace", "write_jsonl",
+]

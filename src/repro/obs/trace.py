@@ -1,0 +1,343 @@
+"""In-loop trace planes: device-resident per-round telemetry for the fused
+engines (DESIGN.md § 7).
+
+The fused megarounds (PRs 3-5) run the whole dequeue → step → publish
+cycle inside a jitted ``lax.while_loop`` with host sync only at
+quiescence — exactly where the host runtime used to observe per-round
+occupancy, claim imbalance, and pop order, it is now blind.  A
+``TracePlane`` restores that visibility without re-introducing per-round
+host syncs: a fixed-capacity ring of per-round records carried as *extra*
+loop state, written by one masked scatter per round (``trace_record``)
+and drained on the host at each sync/heartbeat (``drain_plane``).
+
+Layout (all int32, static shapes, while_loop/shard_map compatible).  The
+plane is physically TWO packed arrays plus the cursor — recording is two
+row scatters per round, and the loop carries three extra leaves, not
+nine (the dominant in-loop cost on dispatch-bound backends is per-op
+overhead and carry count, not bytes — see the overhead budget in
+DESIGN.md § 7.5):
+
+* ``scalars``  (C, 5)    — per-round scalar lanes, columns =
+  ``(round, imbalance, min_key, max_key, overflow)``
+* ``pershard`` (C, S, 3) — per-shard lanes, last axis =
+  ``(pops, pushes, occupancy)``
+* ``count``    ()        — total rounds ever recorded (the write cursor;
+  ``count > C`` means the oldest records were overwritten — wraparound is
+  *flagged at drain*, never an error)
+
+Named accessors (``tp.round``, ``tp.pops``, …) expose the logical
+columns; the logical record is:
+
+* ``round``      (C,)    — global round index occupying each slot
+* ``pops``       (C, S)  — per-shard items claimed this round
+* ``pushes``     (C, S)  — per-shard children published this round
+* ``occupancy``  (C, S)  — per-shard occupancy *after* the round
+* ``imbalance``  (C,)    — max − min of the round's per-shard pops (the
+  claim-schedule imbalance; 0 at one shard)
+* ``min_key`` / ``max_key`` (C,) — extrema of the keys popped this round
+  (priority engines; the rank-error proxy ``obs.analyze`` consumes) or of
+  the payloads claimed (FIFO engines).  ``KEY_SENTINEL``/-``KEY_SENTINEL``
+  when the round popped nothing.
+* ``overflow``   (C,)    — the round flagged capacity overflow
+
+Chip-level engines record with S = 1.  The planes are pure data: recording
+costs a handful of masked ``at[slot].set`` scatters per round and zero
+collectives — per-shard quantities recorded at mesh scope are already
+replicated values (claim schedules, gathered push counts, psum'd meta), so
+every shard writes the identical plane.
+
+``drain_plane`` converts the device arrays into host ``RoundRecord``s
+(newest ``min(count - prev_count, C)`` rounds, in round order) and reports
+how many records the ring dropped since the previous drain.  ``SyncPoint``
+is the unified host-sync heartbeat schema shared by every engine's
+``sync_log`` (satellite: fusedrounds and meshrounds used to record
+different shapes): dataclass fields plus dict-style access for the
+pre-unification callers that indexed ``e["rounds"]``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "KEY_SENTINEL", "RoundRecord", "SyncPoint", "Telemetry", "TracePlane",
+    "drain_plane", "masked_min_max", "trace_init", "trace_record",
+]
+
+# min_key when a round popped nothing (max_key gets -KEY_SENTINEL): an
+# int32 extremum that cannot collide with live keys (heap keys are
+# < KEY_INF = 2^30 - 1 and payloads are < IDX_BOT).
+KEY_SENTINEL = 2 ** 31 - 1
+
+
+class TracePlane(NamedTuple):
+    """Fixed-capacity device ring of per-round records (see module doc).
+    Packed: 3 pytree leaves, 2 row scatters per recorded round."""
+    scalars: jax.Array      # (C, 5): round, imbalance, min_key, max_key,
+    #                                 overflow
+    pershard: jax.Array     # (C, S, 3): pops, pushes, occupancy
+    count: jax.Array        # () int32 — total records ever written
+
+    @property
+    def capacity(self) -> int:
+        return self.scalars.shape[0]
+
+    @property
+    def shards(self) -> int:
+        return self.pershard.shape[1]
+
+    # logical-column accessors (device or host arrays alike)
+    @property
+    def round(self):
+        return self.scalars[:, 0]
+
+    @property
+    def imbalance(self):
+        return self.scalars[:, 1]
+
+    @property
+    def min_key(self):
+        return self.scalars[:, 2]
+
+    @property
+    def max_key(self):
+        return self.scalars[:, 3]
+
+    @property
+    def overflow(self):
+        return self.scalars[:, 4]
+
+    @property
+    def pops(self):
+        return self.pershard[:, :, 0]
+
+    @property
+    def pushes(self):
+        return self.pershard[:, :, 1]
+
+    @property
+    def occupancy(self):
+        return self.pershard[:, :, 2]
+
+
+def trace_init(capacity: int, shards: int = 1) -> TracePlane:
+    """Empty plane for ``capacity`` round records over ``shards`` shards."""
+    c, s = int(capacity), int(shards)
+    if c < 1:
+        raise ValueError(f"trace capacity must be >= 1, got {c}")
+    if s < 1:
+        raise ValueError(f"trace shards must be >= 1, got {s}")
+    empty = jnp.asarray([-1, 0, KEY_SENTINEL, -KEY_SENTINEL, 0], jnp.int32)
+    return TracePlane(
+        scalars=jnp.tile(empty, (c, 1)),
+        pershard=jnp.zeros((c, s, 3), jnp.int32),
+        count=jnp.int32(0),
+    )
+
+
+def trace_record(tp: TracePlane, round_idx, pops, pushes, occupancy,
+                 min_key, max_key, overflow) -> TracePlane:
+    """Write one round record at the ring cursor (``count % C``) and bump
+    the cursor.  Pure function of traced values — callable inside
+    ``lax.while_loop``/``shard_map`` bodies.  ``pops``/``pushes``/
+    ``occupancy`` are (S,) vectors ((,) scalars are promoted for S = 1);
+    the claim imbalance is derived here so every engine records the same
+    definition (max − min per-shard pops)."""
+    s = tp.shards
+    pops = jnp.broadcast_to(jnp.asarray(pops, jnp.int32).reshape(-1), (s,))
+    pushes = jnp.broadcast_to(jnp.asarray(pushes, jnp.int32).reshape(-1),
+                              (s,))
+    occupancy = jnp.broadcast_to(
+        jnp.asarray(occupancy, jnp.int32).reshape(-1), (s,))
+    slot = jnp.remainder(tp.count, jnp.int32(tp.capacity))
+    row = jnp.stack([
+        jnp.asarray(round_idx, jnp.int32).reshape(()),
+        jnp.max(pops) - jnp.min(pops),
+        jnp.asarray(min_key, jnp.int32).reshape(()),
+        jnp.asarray(max_key, jnp.int32).reshape(()),
+        jnp.asarray(overflow, jnp.int32).reshape(()),
+    ])
+    return TracePlane(
+        scalars=tp.scalars.at[slot].set(row),
+        pershard=tp.pershard.at[slot].set(
+            jnp.stack([pops, pushes, occupancy], axis=-1)),
+        count=tp.count + 1,
+    )
+
+
+def masked_min_max(keys, valid) -> Tuple[jax.Array, jax.Array]:
+    """Extrema of ``keys`` where ``valid`` — the per-round min/max popped
+    key (or payload) the plane records; sentinels when nothing popped."""
+    valid = jnp.asarray(valid).astype(bool)
+    keys = jnp.asarray(keys, jnp.int32)
+    mn = jnp.min(jnp.where(valid, keys, KEY_SENTINEL))
+    mx = jnp.max(jnp.where(valid, keys, -KEY_SENTINEL))
+    return mn, mx
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """One drained per-round record — the host-side face of a plane slot,
+    timestamped at drain (in-loop rounds have no host clock: that is the
+    point of the fused engines; ``wall_time`` is when the record became
+    visible)."""
+    engine: str
+    round: int
+    pops: List[int]
+    pushes: List[int]
+    occupancy: List[int]
+    imbalance: int
+    min_key: int
+    max_key: int
+    overflow: bool
+    sync: int            # index of the host sync that drained this record
+    wall_time: float     # drain timestamp (time.time())
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RoundRecord":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+
+
+def drain_plane(tp: TracePlane, prev_count: int, *, engine: str = "fused",
+                sync: int = 0, wall_time: float = None
+                ) -> Tuple[List[RoundRecord], int, int]:
+    """Read the plane back and extract the records written since
+    ``prev_count``, oldest first.  Returns ``(records, new_count,
+    dropped)`` where ``dropped`` counts rounds whose slots were overwritten
+    before this drain (ring capacity < rounds between syncs)."""
+    cap = tp.capacity
+    host = jax.device_get(tp)          # one batched transfer, all leaves
+    count = int(host.count)
+    fresh = count - int(prev_count)
+    if fresh <= 0:
+        return [], count, 0
+    dropped = max(fresh - cap, 0)
+    keep = fresh - dropped
+    wall_time = time.time() if wall_time is None else wall_time
+    slots = np.arange(count - keep, count) % cap
+    sync = int(sync)
+    records = [
+        RoundRecord(engine=engine, round=r, pops=p, pushes=pu, occupancy=o,
+                    imbalance=im, min_key=mn, max_key=mx, overflow=bool(of),
+                    sync=sync, wall_time=wall_time)
+        for r, p, pu, o, im, mn, mx, of in zip(
+            host.round[slots].tolist(), host.pops[slots].tolist(),
+            host.pushes[slots].tolist(), host.occupancy[slots].tolist(),
+            host.imbalance[slots].tolist(), host.min_key[slots].tolist(),
+            host.max_key[slots].tolist(), host.overflow[slots].tolist())]
+    return records, count, dropped
+
+
+@dataclasses.dataclass
+class SyncPoint:
+    """One host-sync heartbeat — the unified ``sync_log`` entry every
+    engine records (fused: one per ``sync_every`` chunk; legacy: one per
+    round).  Dict-style access keeps pre-unification callers working."""
+    rounds: int
+    occupancy: int
+    wall_time: float
+    host_syncs: int = 0
+
+    def __getitem__(self, key: str):
+        return getattr(self, key)
+
+    def get(self, key: str, default=None):
+        return getattr(self, key, default)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class Telemetry:
+    """Host-side telemetry collector for one engine instance.
+
+    Pass ``telemetry=Telemetry(...)`` to any fused round engine: the
+    engine carries a ``TracePlane`` of ``capacity`` records through its
+    megaround loop and drains it here at every host sync.  ``records``
+    accumulates drained ``RoundRecord``s across ``run`` calls until
+    ``reset()``; ``dropped`` counts ring-overwritten rounds (capacity
+    smaller than the rounds between two syncs); ``sync_points`` mirrors
+    the engine's ``sync_log``.  With ``telemetry=None`` (every engine's
+    default) the loop compiles to the exact pre-telemetry carry —
+    bit-identity is asserted by tests on all four fused engines.
+
+    ``registry`` (a ``MetricsRegistry``; one is created when not given)
+    receives the engine's end-of-drive counters under stable
+    ``engine.<stat>`` keys.
+    """
+
+    def __init__(self, capacity: int = 1024, *, engine: str = "fused",
+                 registry=None) -> None:
+        if int(capacity) < 1:
+            raise ValueError(f"telemetry capacity must be >= 1, "
+                             f"got {capacity}")
+        self.capacity = int(capacity)
+        self.engine = engine
+        if registry is None:
+            from .metrics import MetricsRegistry
+            registry = MetricsRegistry()
+        self.registry = registry
+        self.reset()
+
+    def reset(self) -> None:
+        self._records: List[RoundRecord] = []
+        self._pending: List[Tuple[TracePlane, int, int, float]] = []
+        self.sync_points: List[SyncPoint] = []
+        self.dropped = 0
+        self._count = 0
+
+    def begin_run(self) -> None:
+        """Called by the engine at the top of ``run``: a fresh plane means
+        a fresh cursor (records of previous runs are kept)."""
+        self._count = 0
+
+    @property
+    def records(self) -> List[RoundRecord]:
+        """Drained ``RoundRecord``s, oldest first.  Materialized lazily:
+        ``drain`` only pulls the plane to host (the part that must sit at
+        the engine's sync point); formatting rows into records is
+        analysis-time work and happens on first access here."""
+        if self._pending:
+            for host, prev, sync, wall_time in self._pending:
+                recs, _, _ = drain_plane(host, prev, engine=self.engine,
+                                         sync=sync, wall_time=wall_time)
+                self._records.extend(recs)
+            self._pending = []
+        return self._records
+
+    def drain(self, tp: TracePlane, *, sync: int = 0,
+              wall_time: float = None) -> int:
+        """Pull the plane to host and account for it; returns the number
+        of fresh records (the objects materialize on ``.records``)."""
+        host = jax.device_get(tp)
+        count = int(host.count)
+        fresh = count - self._count
+        if fresh <= 0:
+            return 0
+        dropped = max(fresh - host.capacity, 0)
+        self._pending.append(
+            (host, self._count, sync,
+             time.time() if wall_time is None else wall_time))
+        self._count = count
+        self.dropped += dropped
+        if dropped:
+            self.registry.counter(f"{self.engine}.trace_dropped", dropped)
+        return fresh - dropped
+
+    def heartbeat(self, point: SyncPoint) -> None:
+        self.sync_points.append(point)
+
+    def finish(self, stats: Dict[str, int]) -> None:
+        """Absorb the engine's end-of-drive stats into the registry under
+        stable ``engine.<stat>`` gauges."""
+        for k, v in stats.items():
+            self.registry.gauge(f"{self.engine}.{k}", v)

@@ -27,6 +27,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 from ..core import AtomicMemory
 from ..core.sim import Scheduler
+from ..obs.metrics import MetricsRegistry, metric_key
 from .taskpool import TaskFabric, TaskRecord, TaskSpec
 
 # A handler executes a task on the host and returns the children to spawn.
@@ -56,10 +57,12 @@ class TaskRuntime:
     one task-parallel run."""
 
     def __init__(self, fabric: TaskFabric, handler: Handler,
-                 cfg: Optional[ExecutorConfig] = None) -> None:
+                 cfg: Optional[ExecutorConfig] = None,
+                 registry: Optional[MetricsRegistry] = None) -> None:
         self.fabric = fabric
         self.handler = handler
         self.cfg = cfg or ExecutorConfig()
+        self.registry = registry
         self.arrivals: List[Arrival] = []
         self.executed: List[Tuple[int, int]] = []   # (task_id, worker tid)
         self.idle_steps = 0
@@ -162,7 +165,29 @@ class TaskRuntime:
         wait_stats = getattr(self.fabric, "wait_stats", None)
         if wait_stats is not None:
             m.update(wait_stats())
+        if self.registry is not None:
+            self._publish(m)
         return m
+
+    def _publish(self, m: Dict[str, float]) -> None:
+        """Mirror the run's metrics into the shared registry under the
+        stable ``runtime.*`` / ``fabric.*`` key scheme (DESIGN.md § 7.2):
+        the free-form dict stays the return value, the registry is what
+        exporters and benchmarks read."""
+        reg = self.registry
+        for name in ("tasks_executed", "idle_steps", "exec_steps",
+                     "completed"):
+            reg.counter(metric_key("runtime", name), m[name])
+        for name in ("idle_steps_per_task", "steal_rate", "load_imbalance",
+                     "worker_imbalance"):
+            reg.gauge(metric_key("runtime", name), m[name])
+        for tid, n in sorted(self.per_worker_executed.items()):
+            reg.counter(metric_key("runtime", "executed", worker=tid), n)
+        self.fabric.metrics.publish(reg)
+        for prio, waits in sorted(self.fabric.waits.items()):
+            key = metric_key("fabric", "wait", cls=prio)
+            for w in waits:
+                reg.observe(key, w)
 
     @property
     def scheduler(self) -> Scheduler:

@@ -30,7 +30,8 @@ legacy loop (tests assert this on BFS, raytrace, and tree workloads).
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, NamedTuple, Tuple
+import time
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +42,8 @@ from ..kernels.heap_batch import (KEY_INF as HEAP_KEY_INF, OP_DELMIN,
 from ..kernels.pallas_env import resolve_interpret
 from ..kernels.ring_slots import ring_dequeue, ring_enqueue
 from ..kernels.wavefaa import LANES, wavefaa
+from ..obs.trace import (SyncPoint, Telemetry, masked_min_max, trace_init,
+                         trace_record)
 
 IDX_BOT = 2 ** 31 - 1           # ⊥ (⊥_c = IDX_BOT - 1); payloads must be smaller
 
@@ -115,14 +118,46 @@ class _FusedEngine:
     """Shared host-side driver: chunk the megaround by ``sync_every``,
     read back occupancy at each sync, keep stats/sync_log, and raise on
     overflow or truncation.  Subclasses provide the jitted megaround via
-    ``chunk_fn`` and the structure-specific error wording."""
+    ``chunk_fn`` and the structure-specific error wording.
+
+    Telemetry (DESIGN.md § 7): when constructed with a
+    ``repro.obs.Telemetry``, the megaround carries a ``TracePlane`` of
+    per-round records as extra loop state; the driver drains it into the
+    collector at every host sync (the same sync — telemetry adds zero
+    extra syncs).  The plane's ``count`` doubles as the global round
+    index, so ``_tel_plane()`` below is the only contract a subclass
+    adds: return the current plane from the chunk state.  With
+    ``telemetry=None`` the plane never enters the carry and the jitted
+    loop is the exact pre-telemetry graph (bit-identity asserted in
+    tests)."""
 
     sync_every: int
     capacity: int
+    telemetry: Optional[Telemetry]
 
     def _reset(self) -> None:
         self.stats: Dict[str, int] = {}
-        self.sync_log: List[Dict[str, int]] = []
+        self.sync_log: List[SyncPoint] = []
+        if self.telemetry is not None:
+            self.telemetry.begin_run()
+
+    def _tel_init(self, shards: int = 1):
+        """Fresh plane for one run (telemetry on), else None.  The zero
+        plane is immutable (recording is functional), so one instance is
+        memoized and shared across runs — plane init must not show up in
+        the per-run overhead budget (DESIGN.md § 7.5)."""
+        if self.telemetry is None:
+            return None
+        key = (self.telemetry.capacity, shards)
+        if getattr(self, "_tel_zero_key", None) != key:
+            self._tel_zero = trace_init(*key)
+            self._tel_zero_key = key
+        return self._tel_zero
+
+    def _tel_plane(self):
+        """Current TracePlane from the chunk state (subclasses with
+        telemetry enabled override)."""
+        raise NotImplementedError
 
     def _drive(self, chunk_fn, max_rounds: int, what: str) -> None:
         """``chunk_fn(limit)`` advances internal state by up to ``limit``
@@ -135,12 +170,20 @@ class _FusedEngine:
             occ, r, oflow, processed, spawned, max_occ = chunk_fn(limit)
             rounds += r
             host_syncs += 1
-            self.sync_log.append({"rounds": rounds, "occupancy": occ})
+            now = time.time()
+            point = SyncPoint(rounds=rounds, occupancy=occ, wall_time=now,
+                              host_syncs=host_syncs)
+            self.sync_log.append(point)
             self.stats = {
                 "rounds": rounds, "processed": processed, "spawned": spawned,
                 "max_occupancy": max_occ, "drained": int(occ == 0),
                 "host_syncs": host_syncs,
             }
+            if self.telemetry is not None:
+                self.telemetry.drain(self._tel_plane(),
+                                     sync=host_syncs - 1, wall_time=now)
+                self.telemetry.heartbeat(point)
+                self.telemetry.finish(self.stats)
             if oflow:
                 raise RuntimeError(
                     f"{what} overflow: occupancy {occ} + spawned children "
@@ -162,7 +205,8 @@ class FusedRounds(_FusedEngine):
     every ``sync_every`` rounds (0 = quiescence only)."""
 
     def __init__(self, step_fn: StepFn, *, capacity_log2: int = 10,
-                 batch: int = 64, interpret=None, sync_every: int = 0) -> None:
+                 batch: int = 64, interpret=None, sync_every: int = 0,
+                 telemetry: Optional[Telemetry] = None) -> None:
         self.step_fn = jax.jit(step_fn)
         self.capacity_log2 = capacity_log2
         self.nslots_log2 = capacity_log2 + 1
@@ -173,19 +217,28 @@ class FusedRounds(_FusedEngine):
                              f"{self.capacity}")
         self.interpret = resolve_interpret(interpret)
         self.sync_every = sync_every
+        self.telemetry = telemetry
         self._reset()
         self._megaround = jax.jit(self._megaround_impl)
 
     # -- the jitted megaround: up to `limit` rounds entirely on device ------
+    # (tp = the optional TracePlane; None compiles to the exact untraced
+    # loop — the telemetry branches below are python-level)
     def _megaround_impl(self, planes, head, tail, acc, processed, spawned,
-                        max_occ, limit):
+                        max_occ, limit, tp=None):
         batch, capacity = self.batch, self.capacity
         nslots_log2, interp = self.nslots_log2, self.interpret
         lane = jnp.arange(batch, dtype=jnp.int32)
+        tel = tp is not None
 
         def body(carry):
-            (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
-             max_occ, oflow, rounds) = carry
+            if tel:
+                (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
+                 max_occ, oflow, rounds, tp) = carry
+            else:
+                (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
+                 max_occ, oflow, rounds) = carry
+                tp = None
             k = jnp.minimum(jnp.int32(batch), tail - head)
             dtickets = jnp.where(lane < k, head + lane, -1)
             cyc, saf, enq, idx, vals, ok = ring_dequeue(
@@ -207,20 +260,30 @@ class FusedRounds(_FusedEngine):
                 cyc, saf, enq, idx, etickets, cv, head,
                 nslots_log2=nslots_log2, idx_bot=IDX_BOT, interpret=interp)
             tail = jnp.where(over, tail, newctr[0])
-            return (cyc, saf, enq, idx, head, tail, acc,
-                    processed + k, spawned + jnp.where(over, 0, n_child),
-                    jnp.maximum(max_occ, tail - head), oflow | over,
-                    rounds + 1)
+            out = (cyc, saf, enq, idx, head, tail, acc,
+                   processed + k, spawned + jnp.where(over, 0, n_child),
+                   jnp.maximum(max_occ, tail - head), oflow | over,
+                   rounds + 1)
+            if tel:
+                mn, mx = masked_min_max(vals, ok)   # FIFO: payload extrema
+                tp = trace_record(tp, tp.count, k,
+                                  jnp.where(over, 0, n_child), tail - head,
+                                  mn, mx, over)
+                out = out + (tp,)
+            return out
 
         def cond(carry):
-            _, _, _, _, head, tail, _, _, _, _, oflow, rounds = carry
+            head, tail, oflow, rounds = carry[4], carry[5], carry[10], carry[11]
             return (tail - head > 0) & (~oflow) & (rounds < limit)
 
         carry = planes + (head, tail, acc, processed, spawned, max_occ,
                           jnp.bool_(False), jnp.int32(0))
+        if tel:
+            carry = carry + (tp,)
         out = jax.lax.while_loop(cond, body, carry)
-        return (out[:4], out[4], out[5], out[6], out[7], out[8], out[9],
-                out[10], out[11])
+        res = (out[:4], out[4], out[5], out[6], out[7], out[8], out[9],
+               out[10], out[11])
+        return res + (out[12],) if tel else res
 
     def _seed(self, st: RingState, initial: np.ndarray) -> RingState:
         n = len(initial)
@@ -259,10 +322,18 @@ class FusedRounds(_FusedEngine):
                  jnp.int32(st.head), jnp.int32(st.tail), acc,
                  jnp.int32(0), jnp.int32(0),                # processed/spawned
                  jnp.int32(st.tail - st.head)]              # max_occ
+        tel = [self._tel_init()]
+        self._tel_plane = lambda: tel[0]
 
         def chunk_fn(limit):
-            (state[0], state[1], state[2], state[3], state[4], state[5],
-             state[6], oflow, r) = self._megaround(*state, jnp.int32(limit))
+            if tel[0] is None:
+                (state[0], state[1], state[2], state[3], state[4], state[5],
+                 state[6], oflow, r) = self._megaround(*state,
+                                                       jnp.int32(limit))
+            else:
+                (state[0], state[1], state[2], state[3], state[4], state[5],
+                 state[6], oflow, r, tel[0]) = self._megaround(
+                    *state, jnp.int32(limit), tel[0])
             occ = int(state[2] - state[1])              # THE host sync
             return (occ, int(r), bool(oflow), int(state[4]), int(state[5]),
                     int(state[6]))
@@ -281,7 +352,8 @@ class FusedPriorityRounds(_FusedEngine):
 
     def __init__(self, step_fn: PriorityStepFn, *, capacity_log2: int = 10,
                  batch: int = 64, arity_log2: int = 2, interpret=None,
-                 sync_every: int = 0) -> None:
+                 sync_every: int = 0,
+                 telemetry: Optional[Telemetry] = None) -> None:
         self.step_fn = jax.jit(step_fn)
         self.capacity_log2 = capacity_log2
         self.capacity = 1 << capacity_log2
@@ -292,20 +364,27 @@ class FusedPriorityRounds(_FusedEngine):
         self.arity_log2 = arity_log2
         self.interpret = resolve_interpret(interpret)
         self.sync_every = sync_every
+        self.telemetry = telemetry
         self._reset()
         self._megaround = jax.jit(self._megaround_impl)
 
     def _megaround_impl(self, keys, vals, size, acc, processed, spawned,
-                        max_occ, limit):
+                        max_occ, limit, tp=None):
         batch, capacity = self.batch, self.capacity
         cap_log2, arity_log2 = self.capacity_log2, self.arity_log2
         interp = self.interpret
         lane = jnp.arange(batch, dtype=jnp.int32)
         pad = jnp.full((batch,), HEAP_KEY_INF, jnp.int32)   # loop-invariant
+        tel = tp is not None
 
         def body(carry):
-            (keys, vals, size, acc, processed, spawned, max_occ, oflow,
-             rounds) = carry
+            if tel:
+                (keys, vals, size, acc, processed, spawned, max_occ, oflow,
+                 rounds, tp) = carry
+            else:
+                (keys, vals, size, acc, processed, spawned, max_occ, oflow,
+                 rounds) = carry
+                tp = None
             k = jnp.minimum(jnp.int32(batch), size)
             pop_ops = jnp.where(lane < k, OP_DELMIN, OP_NOP)
             keys, vals, size, outk, outv, ok = heap_apply(
@@ -322,16 +401,25 @@ class FusedPriorityRounds(_FusedEngine):
             keys, vals, size, _, _, _ = heap_apply(
                 keys, vals, size, ins_ops, ckf, cvf, cap_log2=cap_log2,
                 arity_log2=arity_log2, interpret=interp)
-            return (keys, vals, size, acc, processed + k,
-                    spawned + jnp.where(over, 0, n_child),
-                    jnp.maximum(max_occ, size), oflow | over, rounds + 1)
+            out = (keys, vals, size, acc, processed + k,
+                   spawned + jnp.where(over, 0, n_child),
+                   jnp.maximum(max_occ, size), oflow | over, rounds + 1)
+            if tel:
+                mn, mx = masked_min_max(outk, ok)    # popped-key extrema
+                tp = trace_record(tp, tp.count, k,
+                                  jnp.where(over, 0, n_child), size,
+                                  mn, mx, over)
+                out = out + (tp,)
+            return out
 
         def cond(carry):
-            _, _, size, _, _, _, _, oflow, rounds = carry
+            size, oflow, rounds = carry[2], carry[7], carry[8]
             return (size > 0) & (~oflow) & (rounds < limit)
 
         carry = (keys, vals, size, acc, processed, spawned, max_occ,
                  jnp.bool_(False), jnp.int32(0))
+        if tel:
+            carry = carry + (tp,)
         return jax.lax.while_loop(cond, body, carry)
 
     def _seed(self, st: HeapState, ik: np.ndarray,
@@ -368,10 +456,18 @@ class FusedPriorityRounds(_FusedEngine):
         state = [st.keys, st.vals, jnp.asarray(st.size, jnp.int32), acc,
                  jnp.int32(0), jnp.int32(0),                # processed/spawned
                  jnp.int32(st.size)]                        # max_occ
+        tel = [self._tel_init()]
+        self._tel_plane = lambda: tel[0]
 
         def chunk_fn(limit):
-            (state[0], state[1], state[2], state[3], state[4], state[5],
-             state[6], oflow, r) = self._megaround(*state, jnp.int32(limit))
+            if tel[0] is None:
+                (state[0], state[1], state[2], state[3], state[4], state[5],
+                 state[6], oflow, r) = self._megaround(*state,
+                                                       jnp.int32(limit))
+            else:
+                (state[0], state[1], state[2], state[3], state[4], state[5],
+                 state[6], oflow, r, tel[0]) = self._megaround(
+                    *state, jnp.int32(limit), tel[0])
             occ = int(state[2])                         # THE host sync
             return (occ, int(r), bool(oflow), int(state[4]), int(state[5]),
                     int(state[6]))

@@ -68,7 +68,8 @@ raise ``RuntimeError`` at the next sync.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+import time
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +84,7 @@ from ..core.distqueue import (DistHeapState, DistQueueState, claim_schedule,
 from ..kernels.heap_batch import (KEY_INF as HEAP_KEY_INF, heap_insert_masked,
                                   heap_pop_count)
 from ..kernels.ring_slots import enq_planes
+from ..obs.trace import (SyncPoint, Telemetry, masked_min_max, trace_record)
 from .fusedrounds import IDX_BOT, PriorityStepFn, StepFn, _FusedEngine
 
 __all__ = ["FusedMeshRounds", "FusedPriorityMeshRounds", "MeshRoundRunner",
@@ -94,7 +96,8 @@ class _MeshEngineBase(_FusedEngine):
 
     def __init__(self, step_fn: StepFn, *, mesh, axis: str = "data",
                  capacity_log2: int = 10, batch: int = 64,
-                 sync_every: int = 0) -> None:
+                 sync_every: int = 0,
+                 telemetry: Optional[Telemetry] = None) -> None:
         self.step_fn = step_fn
         self.mesh = mesh
         self.axis = axis
@@ -108,6 +111,7 @@ class _MeshEngineBase(_FusedEngine):
                 f"mesh batch {batch} x {self.shards} shards exceeds ring "
                 f"capacity {self.capacity}")
         self.sync_every = sync_every
+        self.telemetry = telemetry
         self._reset()
 
     # -- seeding (host-side, before shard_map: planes are plain jnp) --------
@@ -134,15 +138,32 @@ class _MeshEngineBase(_FusedEngine):
                               head=state.head)
 
     # -- one mesh round, shared verbatim by both engines --------------------
-    def _round(self, state: DistQueueState, acc):
+    def _round(self, state: DistQueueState, acc, tel: bool = False):
         """claim (no collective) → step → publish (one psum).  Returns
-        (state, acc, k, total, over)."""
+        (state, acc, k, total, over); with ``tel`` (the telemetry path) an
+        extra ``(shard_pops, shard_pushes, min_val, max_val)`` tuple of
+        replicated per-round record fields rides along — all derived from
+        already-replicated values, zero extra collectives."""
         occ = state.tail - state.head
         k = jnp.minimum(occ, jnp.int32(self.shards * self.batch))
-        state, vals, ok = dist_claim_round(state, k, self.batch, self.axis)
+        if tel:
+            state, vals, ok, (gvals, gok) = dist_claim_round(
+                state, k, self.batch, self.axis, with_grid=True)
+        else:
+            state, vals, ok = dist_claim_round(state, k, self.batch,
+                                               self.axis)
         acc, cvals, cmask = self.step_fn(acc, vals, ok)
         cm = jnp.broadcast_to(cmask.astype(bool), cvals.shape).reshape(-1)
         cv = cvals.reshape(-1).astype(jnp.int32)
+        if tel:
+            state, _, total, over, pushes = dist_publish_round(
+                state, cv, cm.astype(jnp.int32), self.axis,
+                capacity=self.capacity, with_counts=True)
+            cs_active, _ = claim_schedule(k, self.shards, self.batch)
+            pops = cs_active.reshape(self.shards, self.batch).sum(
+                1, dtype=jnp.int32)
+            mn, mx = masked_min_max(gvals, gok)   # FIFO: payload extrema
+            return state, acc, k, total, over, (pops, pushes, mn, mx)
         state, _, total, over = dist_publish_round(
             state, cv, cm.astype(jnp.int32), self.axis,
             capacity=self.capacity)
@@ -164,49 +185,73 @@ class FusedMeshRounds(_MeshEngineBase):
     def __init__(self, step_fn: StepFn, *, mesh, axis: str = "data",
                  capacity_log2: int = 10, batch: int = 64,
                  sync_every: int = 0,
-                 combine: Callable[[Any], Any] = None) -> None:
+                 combine: Callable[[Any], Any] = None,
+                 telemetry: Optional[Telemetry] = None) -> None:
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
-                         sync_every=sync_every)
+                         sync_every=sync_every, telemetry=telemetry)
         self.combine = combine
         # in shard_map, P() = replicated operand, P(axis) = sharded; a bare
         # P serves as a pytree-prefix spec for the whole acc subtree.  acc
         # rides stacked (shards, ...) through P(axis) specs so successive
-        # chunk calls (sync_every heartbeats) compose.
+        # chunk calls (sync_every heartbeats) compose.  The TracePlane (when
+        # telemetry is on) is replicated — every record field is derived
+        # from replicated values, so every shard writes the same plane.
+        tel = telemetry is not None
+        in_specs = (P(), P(), P(), P(), P(), P(), P(self.axis), P(), P(),
+                    P(), P()) + ((P(),) if tel else ())
+        out_specs = (P(), P(), P(), P(), P(), P(), P(self.axis),
+                     P(), P(), P(), P(), P()) + ((P(),) if tel else ())
         self._megaround = jax.jit(shard_map(
             self._megaround_impl, mesh=self.mesh,
-            in_specs=(P(), P(), P(), P(), P(), P(), P(self.axis), P(), P(),
-                      P(), P()),
-            out_specs=(P(), P(), P(), P(), P(), P(), P(self.axis),
-                       P(), P(), P(), P(), P()),
+            in_specs=in_specs, out_specs=out_specs,
             check_rep=False))   # while_loop has no replication rule
 
     # -- the jitted megaround: up to `limit` rounds entirely on device ------
     def _megaround_impl(self, cyc, saf, enq, idx, head, tail, acc,
-                        processed, spawned, max_occ, limit):
+                        processed, spawned, max_occ, limit, tp=None):
         acc = jax.tree_util.tree_map(lambda x: x[0], acc)
+        tel = tp is not None
 
         def body(carry):
-            (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
-             max_occ, oflow, rounds) = carry
+            if tel:
+                (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
+                 max_occ, oflow, rounds, tp) = carry
+            else:
+                (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
+                 max_occ, oflow, rounds) = carry
+                tp = None
             state = DistQueueState(cyc, saf, enq, idx, tail=tail, head=head)
-            state, acc, k, total, over = self._round(state, acc)
-            return (state.cycles, state.safes, state.enqs, state.idxs,
-                    state.head, state.tail, acc, processed + k,
-                    spawned + total,
-                    jnp.maximum(max_occ, state.tail - state.head),
-                    oflow | over, rounds + 1)
+            if tel:
+                state, acc, k, total, over, (pops, pushes, mn, mx) = \
+                    self._round(state, acc, tel=True)
+                occ = state.tail - state.head
+                tp = trace_record(
+                    tp, tp.count, pops, pushes,
+                    jnp.broadcast_to(occ, (self.shards,)),   # replicated ring
+                    mn, mx, over)
+            else:
+                state, acc, k, total, over = self._round(state, acc)
+            out = (state.cycles, state.safes, state.enqs, state.idxs,
+                   state.head, state.tail, acc, processed + k,
+                   spawned + total,
+                   jnp.maximum(max_occ, state.tail - state.head),
+                   oflow | over, rounds + 1)
+            return out + (tp,) if tel else out
 
         def cond(carry):
-            _, _, _, _, head, tail, _, _, _, _, oflow, rounds = carry
+            head, tail, oflow, rounds = carry[4], carry[5], carry[10], carry[11]
             return (tail - head > 0) & (~oflow) & (rounds < limit)
 
         carry = (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
                  max_occ, jnp.bool_(False), jnp.int32(0))
+        if tel:
+            carry = carry + (tp,)
         out = jax.lax.while_loop(cond, body, carry)
         acc_stacked = jax.tree_util.tree_map(lambda x: x[None], out[6])
-        return (out[0], out[1], out[2], out[3], out[4], out[5], acc_stacked,
-                out[7], out[8], out[9], out[10], out[11])
+        res = (out[0], out[1], out[2], out[3], out[4], out[5], acc_stacked,
+               out[7], out[8], out[9], out[10], out[11])
+        return res + (out[12],) if tel else res
 
     def run(self, initial: np.ndarray, acc: Any = None,
             max_rounds: int = 10_000) -> Tuple[Any, DistQueueState]:
@@ -228,11 +273,18 @@ class FusedMeshRounds(_MeshEngineBase):
             acc)
         state = [st.cycles, st.safes, st.enqs, st.idxs, st.head, st.tail,
                  acc, jnp.int32(0), jnp.int32(0), occ0]
+        tel = [self._tel_init(self.shards)]
+        self._tel_plane = lambda: tel[0]
 
         def chunk_fn(limit):
-            (state[0], state[1], state[2], state[3], state[4], state[5],
-             state[6], state[7], state[8], state[9], oflow, r
-             ) = self._megaround(*state, jnp.int32(limit))
+            if tel[0] is None:
+                (state[0], state[1], state[2], state[3], state[4], state[5],
+                 state[6], state[7], state[8], state[9], oflow, r
+                 ) = self._megaround(*state, jnp.int32(limit))
+            else:
+                (state[0], state[1], state[2], state[3], state[4], state[5],
+                 state[6], state[7], state[8], state[9], oflow, r, tel[0]
+                 ) = self._megaround(*state, jnp.int32(limit), tel[0])
             occ = int(np.int32(np.asarray(state[5] - state[4])))  # THE sync
             return (occ, int(r), bool(oflow), int(state[7]), int(state[8]),
                     int(state[9]))
@@ -257,16 +309,18 @@ class MeshRoundRunner(_MeshEngineBase):
     def __init__(self, step_fn: StepFn, *, mesh, axis: str = "data",
                  capacity_log2: int = 10, batch: int = 64,
                  fused: bool = True, sync_every: int = 0,
-                 combine: Callable[[Any], Any] = None) -> None:
+                 combine: Callable[[Any], Any] = None,
+                 telemetry: Optional[Telemetry] = None) -> None:
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
-                         sync_every=sync_every)
+                         sync_every=sync_every, telemetry=telemetry)
         self.fused = fused
         self.combine = combine
         if fused:
             self._engine = FusedMeshRounds(
                 step_fn, mesh=mesh, axis=axis, capacity_log2=capacity_log2,
-                batch=batch, sync_every=sync_every, combine=combine)
+                batch=batch, sync_every=sync_every, combine=combine,
+                telemetry=telemetry)
         else:
             self._engine = None
             # legacy: acc rides stacked (shards, ...) through P(axis) specs
@@ -320,7 +374,9 @@ class MeshRoundRunner(_MeshEngineBase):
             processed += int(k)
             spawned += int(total)
             max_occ = max(max_occ, occ)
-            self.sync_log.append({"rounds": rounds, "occupancy": occ})
+            self.sync_log.append(SyncPoint(
+                rounds=rounds, occupancy=occ, wall_time=time.time(),
+                host_syncs=host_syncs))
             if bool(over):
                 overflow = True
                 break
@@ -358,8 +414,10 @@ class _PriorityMeshBase(_FusedEngine):
     def __init__(self, step_fn: PriorityStepFn, *, mesh, axis: str = "data",
                  capacity_log2: int = 10, batch: int = 64,
                  arity_log2: int = 2, relaxed: bool = True,
-                 sync_every: int = 0) -> None:
+                 sync_every: int = 0,
+                 telemetry: Optional[Telemetry] = None) -> None:
         self.step_fn = step_fn
+        self.telemetry = telemetry
         self.mesh = mesh
         self.axis = axis
         self.shards = int(mesh.shape[axis])
@@ -427,12 +485,16 @@ class _PriorityMeshBase(_FusedEngine):
                 jnp.asarray(sizes, jnp.int32), jnp.asarray(hints, jnp.int32))
 
     # -- one priority mesh round, shared verbatim by both engines -----------
-    def _round_relaxed(self, keys, vals, sizes, hints, acc):
+    def _round_relaxed(self, keys, vals, sizes, hints, acc,
+                       tel: bool = False):
         """claim (no collective: hint-ordered schedule over replicated
         sizes/hints) → masked pop wave on the local heap → step →
         publish (ONE psum) → masked insert of this shard's sprayed share.
         Returns (keys, vals, sizes, hints, acc, popped, total, over,
-        trace)."""
+        trace); with ``tel`` an extra ``(pops, pushes, sizes, mn, mx)``
+        record tuple — the popped-key extrema ride the publish psum as
+        widened meta words (``pop_meta``), so the one-collective-per-round
+        invariant holds with telemetry on."""
         me = jax.lax.axis_index(self.axis)
         counts = priority_claim_schedule(jnp.sum(sizes), self.shards,
                                          self.batch, hints, sizes)
@@ -443,9 +505,16 @@ class _PriorityMeshBase(_FusedEngine):
         cm = jnp.broadcast_to(cmask.astype(bool), ckeys.shape).reshape(-1)
         ckf = ckeys.reshape(-1).astype(jnp.int32)
         cvf = cvals.reshape(-1).astype(jnp.int32)
-        gk, gv, gactive, ranks, total, hints_pop, sizes_pop = \
-            dist_priority_publish_round(ckf, cvf, cm.astype(jnp.int32),
-                                        jnp.min(keys), size, self.axis)
+        if tel:
+            pop_meta = masked_min_max(outk, ok)   # local popped-key extrema
+            (gk, gv, gactive, ranks, total, hints_pop, sizes_pop,
+             pop_mins, pop_maxs) = dist_priority_publish_round(
+                ckf, cvf, cm.astype(jnp.int32), jnp.min(keys), size,
+                self.axis, pop_meta=pop_meta)
+        else:
+            gk, gv, gactive, ranks, total, hints_pop, sizes_pop = \
+                dist_priority_publish_round(ckf, cvf, cm.astype(jnp.int32),
+                                            jnp.min(keys), size, self.axis)
         shard_of = jnp.where(gactive, ranks % self.shards, self.shards)
         assigned = (jnp.zeros((self.shards + 1,), jnp.int32)
                     .at[shard_of].add(1))[:self.shards]
@@ -461,15 +530,22 @@ class _PriorityMeshBase(_FusedEngine):
         sizes = jnp.where(over, sizes_pop, sizes_pop + assigned)
         total = jnp.where(over, 0, total)
         trace = (outk, outv, ok, gk, gv, gactive)
-        return (keys, vals, sizes, hints, acc, jnp.sum(counts), total, over,
-                trace)
+        out = (keys, vals, sizes, hints, acc, jnp.sum(counts), total, over,
+               trace)
+        if tel:
+            telinfo = (counts, jnp.where(over, 0, assigned), sizes,
+                       jnp.min(pop_mins), jnp.max(pop_maxs))
+            out = out + (telinfo,)
+        return out
 
-    def _round_strict(self, keys, vals, size, acc):
+    def _round_strict(self, keys, vals, size, acc, tel: bool = False):
         """Every shard applies the identical full-width pop wave to the
         replicated heap (exact global min-key order), steps only its
         ``claim_schedule`` slice, and installs ALL gathered children —
         the planes stay replicated by construction.  Returns (keys, vals,
-        size, acc, popped, total, over, trace)."""
+        size, acc, popped, total, over, trace); with ``tel`` an extra
+        ``(pops, pushes, occ, mn, mx)`` record tuple (the pop wave is
+        replicated full-width, so extrema are free)."""
         me = jax.lax.axis_index(self.axis)
         sb = self.shards * self.batch
         k = jnp.minimum(size, jnp.int32(sb))
@@ -494,7 +570,18 @@ class _PriorityMeshBase(_FusedEngine):
             cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
         total = jnp.where(over, 0, total)
         trace = (outk_l, outv_l, act_l, gk, gv, gactive)
-        return keys, vals, size, acc, k, total, over, trace
+        out = (keys, vals, size, acc, k, total, over, trace)
+        if tel:
+            pops = active.reshape(self.shards, self.batch).sum(
+                1, dtype=jnp.int32)
+            pushes = (gactive & ~over).reshape(self.shards, -1).sum(
+                1, dtype=jnp.int32)         # children by generating shard
+            lane = jnp.arange(sb, dtype=jnp.int32)
+            mn, mx = masked_min_max(outk, lane < k)
+            telinfo = (pops, pushes, jnp.broadcast_to(size, (self.shards,)),
+                       mn, mx)
+            out = out + (telinfo,)
+        return out
 
     def _broadcast_acc(self, acc):
         acc = jax.tree_util.tree_map(jnp.asarray, acc)
@@ -519,12 +606,14 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
                  capacity_log2: int = 10, batch: int = 64,
                  arity_log2: int = 2, relaxed: bool = True,
                  sync_every: int = 0,
-                 combine: Callable[[Any], Any] = None) -> None:
+                 combine: Callable[[Any], Any] = None,
+                 telemetry: Optional[Telemetry] = None) -> None:
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
                          arity_log2=arity_log2, relaxed=relaxed,
-                         sync_every=sync_every)
+                         sync_every=sync_every, telemetry=telemetry)
         self.combine = combine
+        tel = telemetry is not None   # the TracePlane rides replicated
         if relaxed:
             impl, hp = self._megaround_relaxed, P(self.axis)
             in_specs = (hp, hp, P(), P(), hp, P(), P(), P(), P())
@@ -533,58 +622,95 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
             impl, hp = self._megaround_strict, P()
             in_specs = (hp, hp, P(), P(self.axis), P(), P(), P(), P())
             out_specs = (hp, hp, P(), P(self.axis), P(), P(), P(), P(), P())
+        if tel:
+            in_specs = in_specs + (P(),)
+            out_specs = out_specs + (P(),)
         self._megaround = jax.jit(shard_map(
             impl, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
             check_rep=False))   # while_loop has no replication rule
 
     def _megaround_relaxed(self, keys, vals, sizes, hints, acc,
-                           processed, spawned, max_occ, limit):
+                           processed, spawned, max_occ, limit, tp=None):
         keys, vals = keys[0], vals[0]
         acc = jax.tree_util.tree_map(lambda x: x[0], acc)
+        tel = tp is not None
 
         def body(carry):
-            (keys, vals, sizes, hints, acc, processed, spawned, max_occ,
-             oflow, rounds) = carry
-            keys, vals, sizes, hints, acc, k, total, over, _ = \
-                self._round_relaxed(keys, vals, sizes, hints, acc)
-            return (keys, vals, sizes, hints, acc, processed + k,
-                    spawned + total,
-                    jnp.maximum(max_occ, jnp.sum(sizes)),
-                    oflow | over, rounds + 1)
+            if tel:
+                (keys, vals, sizes, hints, acc, processed, spawned, max_occ,
+                 oflow, rounds, tp) = carry
+            else:
+                (keys, vals, sizes, hints, acc, processed, spawned, max_occ,
+                 oflow, rounds) = carry
+                tp = None
+            if tel:
+                (keys, vals, sizes, hints, acc, k, total, over, _,
+                 (pops, pushes, occs, mn, mx)) = self._round_relaxed(
+                    keys, vals, sizes, hints, acc, tel=True)
+                tp = trace_record(tp, tp.count, pops, pushes, occs,
+                                  mn, mx, over)
+            else:
+                keys, vals, sizes, hints, acc, k, total, over, _ = \
+                    self._round_relaxed(keys, vals, sizes, hints, acc)
+            out = (keys, vals, sizes, hints, acc, processed + k,
+                   spawned + total,
+                   jnp.maximum(max_occ, jnp.sum(sizes)),
+                   oflow | over, rounds + 1)
+            return out + (tp,) if tel else out
 
         def cond(carry):
-            _, _, sizes, _, _, _, _, _, oflow, rounds = carry
+            sizes, oflow, rounds = carry[2], carry[8], carry[9]
             return (jnp.sum(sizes) > 0) & (~oflow) & (rounds < limit)
 
         carry = (keys, vals, sizes, hints, acc, processed, spawned, max_occ,
                  jnp.bool_(False), jnp.int32(0))
+        if tel:
+            carry = carry + (tp,)
         out = jax.lax.while_loop(cond, body, carry)
         acc_stacked = jax.tree_util.tree_map(lambda x: x[None], out[4])
-        return (out[0][None], out[1][None], out[2], out[3], acc_stacked,
-                out[5], out[6], out[7], out[8], out[9])
+        res = (out[0][None], out[1][None], out[2], out[3], acc_stacked,
+               out[5], out[6], out[7], out[8], out[9])
+        return res + (out[10],) if tel else res
 
     def _megaround_strict(self, keys, vals, size, acc,
-                          processed, spawned, max_occ, limit):
+                          processed, spawned, max_occ, limit, tp=None):
         acc = jax.tree_util.tree_map(lambda x: x[0], acc)
+        tel = tp is not None
 
         def body(carry):
-            (keys, vals, size, acc, processed, spawned, max_occ, oflow,
-             rounds) = carry
-            keys, vals, size, acc, k, total, over, _ = \
-                self._round_strict(keys, vals, size, acc)
-            return (keys, vals, size, acc, processed + k, spawned + total,
-                    jnp.maximum(max_occ, size), oflow | over, rounds + 1)
+            if tel:
+                (keys, vals, size, acc, processed, spawned, max_occ, oflow,
+                 rounds, tp) = carry
+            else:
+                (keys, vals, size, acc, processed, spawned, max_occ, oflow,
+                 rounds) = carry
+                tp = None
+            if tel:
+                (keys, vals, size, acc, k, total, over, _,
+                 (pops, pushes, occs, mn, mx)) = self._round_strict(
+                    keys, vals, size, acc, tel=True)
+                tp = trace_record(tp, tp.count, pops, pushes, occs,
+                                  mn, mx, over)
+            else:
+                keys, vals, size, acc, k, total, over, _ = \
+                    self._round_strict(keys, vals, size, acc)
+            out = (keys, vals, size, acc, processed + k, spawned + total,
+                   jnp.maximum(max_occ, size), oflow | over, rounds + 1)
+            return out + (tp,) if tel else out
 
         def cond(carry):
-            _, _, size, _, _, _, _, oflow, rounds = carry
+            size, oflow, rounds = carry[2], carry[7], carry[8]
             return (size > 0) & (~oflow) & (rounds < limit)
 
         carry = (keys, vals, size, acc, processed, spawned, max_occ,
                  jnp.bool_(False), jnp.int32(0))
+        if tel:
+            carry = carry + (tp,)
         out = jax.lax.while_loop(cond, body, carry)
         acc_stacked = jax.tree_util.tree_map(lambda x: x[None], out[3])
-        return (out[0], out[1], out[2], acc_stacked, out[4], out[5], out[6],
-                out[7], out[8])
+        res = (out[0], out[1], out[2], acc_stacked, out[4], out[5], out[6],
+               out[7], out[8])
+        return res + (out[9],) if tel else res
 
     def run(self, initial_keys: np.ndarray, initial_vals: np.ndarray,
             acc: Any = None, max_rounds: int = 10_000
@@ -603,6 +729,8 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
         iv = np.asarray(initial_vals, np.int32).reshape(-1)
         assert ik.shape == iv.shape
         acc = self._broadcast_acc(acc)
+        tel = [self._tel_init(self.shards)]
+        self._tel_plane = lambda: tel[0]
         if self.relaxed:
             keys, vals, sizes, hints = self._seed(ik, iv)
             occ0 = jnp.int32(int(np.asarray(sizes).sum()))
@@ -610,9 +738,14 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
                      jnp.int32(0), jnp.int32(0), occ0]
 
             def chunk_fn(limit):
-                (state[0], state[1], state[2], state[3], state[4], state[5],
-                 state[6], state[7], oflow, r
-                 ) = self._megaround(*state, jnp.int32(limit))
+                if tel[0] is None:
+                    (state[0], state[1], state[2], state[3], state[4],
+                     state[5], state[6], state[7], oflow, r
+                     ) = self._megaround(*state, jnp.int32(limit))
+                else:
+                    (state[0], state[1], state[2], state[3], state[4],
+                     state[5], state[6], state[7], oflow, r, tel[0]
+                     ) = self._megaround(*state, jnp.int32(limit), tel[0])
                 occ = int(np.asarray(state[2]).sum())        # THE sync
                 return (occ, int(r), bool(oflow), int(state[5]),
                         int(state[6]), int(state[7]))
@@ -625,9 +758,14 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
                      jnp.int32(0), jnp.int32(0), jnp.asarray(size, jnp.int32)]
 
             def chunk_fn(limit):
-                (state[0], state[1], state[2], state[3], state[4], state[5],
-                 state[6], oflow, r
-                 ) = self._megaround(*state, jnp.int32(limit))
+                if tel[0] is None:
+                    (state[0], state[1], state[2], state[3], state[4],
+                     state[5], state[6], oflow, r
+                     ) = self._megaround(*state, jnp.int32(limit))
+                else:
+                    (state[0], state[1], state[2], state[3], state[4],
+                     state[5], state[6], oflow, r, tel[0]
+                     ) = self._megaround(*state, jnp.int32(limit), tel[0])
                 occ = int(np.asarray(state[2]))              # THE sync
                 return (occ, int(r), bool(oflow), int(state[4]),
                         int(state[5]), int(state[6]))
@@ -657,11 +795,12 @@ class PriorityMeshRoundRunner(_PriorityMeshBase):
                  arity_log2: int = 2, relaxed: bool = True,
                  fused: bool = True, sync_every: int = 0,
                  combine: Callable[[Any], Any] = None,
-                 trace: bool = False) -> None:
+                 trace: bool = False,
+                 telemetry: Optional[Telemetry] = None) -> None:
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
                          arity_log2=arity_log2, relaxed=relaxed,
-                         sync_every=sync_every)
+                         sync_every=sync_every, telemetry=telemetry)
         self.fused = fused
         self.combine = combine
         if trace and fused:
@@ -673,7 +812,7 @@ class PriorityMeshRoundRunner(_PriorityMeshBase):
             self._engine = FusedPriorityMeshRounds(
                 step_fn, mesh=mesh, axis=axis, capacity_log2=capacity_log2,
                 batch=batch, arity_log2=arity_log2, relaxed=relaxed,
-                sync_every=sync_every, combine=combine)
+                sync_every=sync_every, combine=combine, telemetry=telemetry)
             return
         self._engine = None
         sp = P(self.axis)
@@ -765,7 +904,9 @@ class PriorityMeshRoundRunner(_PriorityMeshBase):
             processed += int(k)
             spawned += int(total)
             max_occ = max(max_occ, occ)
-            self.sync_log.append({"rounds": rounds, "occupancy": occ})
+            self.sync_log.append(SyncPoint(
+                rounds=rounds, occupancy=occ, wall_time=time.time(),
+                host_syncs=host_syncs))
             if self.trace_enabled:
                 outk, outv, ok, gk, gv, gactive = out[nstate + 4:]
                 self.trace.append({

@@ -67,7 +67,7 @@ class RoundRunner:
 
     def __init__(self, step_fn: StepFn, *, capacity_log2: int = 10,
                  batch: int = 64, interpret=None, fused: bool = True,
-                 sync_every: int = 0) -> None:
+                 sync_every: int = 0, telemetry=None) -> None:
         self.step_fn = jax.jit(step_fn)
         self.capacity_log2 = capacity_log2
         self.nslots_log2 = capacity_log2 + 1
@@ -75,12 +75,17 @@ class RoundRunner:
         self.batch = batch
         self.interpret = resolve_interpret(interpret)
         self.fused = fused
+        self.telemetry = telemetry
         self.stats: Dict[str, int] = {}
         self.sync_log: List[Dict[str, int]] = []
+        if telemetry is not None and not fused:
+            raise ValueError("trace planes are in-loop state: telemetry "
+                             "needs the fused engine (fused=True)")
         if fused:
             self._engine = FusedRounds(
                 step_fn, capacity_log2=capacity_log2, batch=batch,
-                interpret=self.interpret, sync_every=sync_every)
+                interpret=self.interpret, sync_every=sync_every,
+                telemetry=telemetry)
         else:
             self._engine = None
             # legacy-path op buffers, reused across rounds (safe because
@@ -183,7 +188,8 @@ class PriorityRoundRunner:
 
     def __init__(self, step_fn: PriorityStepFn, *, capacity_log2: int = 10,
                  batch: int = 64, arity_log2: int = 2, interpret=None,
-                 fused: bool = True, sync_every: int = 0) -> None:
+                 fused: bool = True, sync_every: int = 0,
+                 telemetry=None) -> None:
         self.step_fn = jax.jit(step_fn)
         self.capacity_log2 = capacity_log2
         self.capacity = 1 << capacity_log2
@@ -191,13 +197,17 @@ class PriorityRoundRunner:
         self.arity_log2 = arity_log2
         self.interpret = resolve_interpret(interpret)
         self.fused = fused
+        self.telemetry = telemetry
         self.stats: Dict[str, int] = {}
         self.sync_log: List[Dict[str, int]] = []
+        if telemetry is not None and not fused:
+            raise ValueError("trace planes are in-loop state: telemetry "
+                             "needs the fused engine (fused=True)")
         if fused:
             self._engine = FusedPriorityRounds(
                 step_fn, capacity_log2=capacity_log2, batch=batch,
                 arity_log2=arity_log2, interpret=self.interpret,
-                sync_every=sync_every)
+                sync_every=sync_every, telemetry=telemetry)
         else:
             self._engine = None
             # legacy-path op buffers, reused across rounds (safe because

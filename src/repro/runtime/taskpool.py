@@ -42,6 +42,7 @@ from ..core import QUEUE_CLASSES
 from ..core.base import VAL_MASK
 from ..core.sim import Ctx, DEQ, ENQ, HistoryEvent, Scheduler
 from ..data.pipeline import HostRing
+from ..obs.metrics import MetricsRegistry, metric_key
 from ..sched.gpq import GPQ
 from ..sched.policy import make_policy
 
@@ -88,6 +89,22 @@ class FabricMetrics:
             return 1.0
         mean = sum(counts) / len(counts)
         return max(counts) / mean if mean else 1.0
+
+    def publish(self, registry: MetricsRegistry, *,
+                subsystem: str = "fabric") -> None:
+        """Write this snapshot into ``registry`` under the stable
+        ``fabric.*`` key scheme (DESIGN.md § 7.2): scalar totals as
+        counters, ``load_imbalance`` as a gauge, and the per-(lane, shard)
+        dequeue counts as ``fabric.deq[lane=L,shard=S]`` — replacing the
+        ``(lane, shard)``-tuple-keyed dict consumers used to reach into."""
+        for name in ("enqueues", "dequeues", "steals", "steal_scans",
+                     "empty_scans", "enq_retries"):
+            registry.counter(metric_key(subsystem, name), getattr(self, name))
+        registry.gauge(metric_key(subsystem, "load_imbalance"),
+                       self.load_imbalance())
+        for (lane, shard), n in sorted(self.per_shard_deq.items()):
+            registry.counter(metric_key(subsystem, "deq",
+                                        lane=lane, shard=shard), n)
 
 
 class _FabricBase:

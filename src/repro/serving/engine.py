@@ -40,6 +40,7 @@ import numpy as np
 from ..configs.base import ArchConfig
 from ..data.pipeline import HostRing
 from ..models import decode_step, init_decode_cache
+from ..obs.metrics import MetricsRegistry, metric_key
 from ..runtime import HostTaskPool
 from ..sched import HostPriorityPool
 
@@ -73,8 +74,10 @@ class ServingEngine:
     """Synchronous continuous batching over the reduced configs (CPU) —
     structure identical to the production path."""
 
-    def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig) -> None:
+    def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig,
+                 registry: Optional[MetricsRegistry] = None) -> None:
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        self.registry = registry
         if ecfg.admission == "edf":
             self.requests = HostPriorityPool(ecfg.request_ring_capacity)
         elif ecfg.admission == "lanes":
@@ -98,6 +101,14 @@ class ServingEngine:
                         "page_stalls": 0, "tokens_out": 0}
         self._step = jax.jit(
             lambda p, c, t, cur: decode_step(p, c, t, cur, cfg))
+
+    def _count(self, name: str, delta: int = 1) -> None:
+        """Bump a metric in the legacy dict and, when a registry is wired,
+        mirror it as a ``serving.*`` counter (stable key scheme,
+        DESIGN.md § 7.2) — both surfaces always agree."""
+        self.metrics[name] += delta
+        if self.registry is not None:
+            self.registry.counter(metric_key("serving", name), delta)
 
     # -- client API ------------------------------------------------------------
 
@@ -154,7 +165,7 @@ class ServingEngine:
                 # not enough pages: release and requeue (RETRY path)
                 for p in pages:
                     self.free_pages.enqueue(p, timeout=0.1)
-                self.metrics["page_stalls"] += 1
+                self._count("page_stalls")
                 if self.ecfg.admission == "edf":
                     # re-enter the pool at the *original* deadline: newer
                     # arrivals take later keys, so the stalled request ages
@@ -174,7 +185,7 @@ class ServingEngine:
             req.slot, req.pages = s, pages
             self.slots[s] = req
             self.admission_log.append(req.rid)
-            self.metrics["admitted"] += 1
+            self._count("admitted")
             # prefill (token-by-token through decode_step for simplicity;
             # slot-local so other slots keep decoding)
             self.cur[s] = 0
@@ -188,7 +199,7 @@ class ServingEngine:
         cur = jnp.int32(int(self.cur.max()))
         logits, new_cache = self._step(self.params, self.cache, tok, cur)
         self.cache = new_cache
-        self.metrics["decode_steps"] += 1
+        self._count("decode_steps")
         if active_slot is not None:
             self.cur[active_slot] += 1
         else:
@@ -200,6 +211,15 @@ class ServingEngine:
     def step(self) -> None:
         """One engine tick: admit, decode, complete."""
         self._try_admit()
+        if self.registry is not None:
+            # pressure gauges: free-page ring occupancy (near-empty = the
+            # split-benchmark memory-pressure regime) and busy decode slots
+            self.registry.gauge(metric_key("serving", "free_pages"),
+                                self.ecfg.num_pages
+                                - sum(len(r.pages) for r in self.slots
+                                      if r is not None))
+            self.registry.gauge(metric_key("serving", "active_slots"),
+                                sum(r is not None for r in self.slots))
         if not any(self.slots):
             return
         nxt = self._decode_once()
@@ -207,13 +227,13 @@ class ServingEngine:
             if req is None:
                 continue
             req.out.append(int(nxt[s]))
-            self.metrics["tokens_out"] += 1
+            self._count("tokens_out")
             if len(req.out) >= req.max_new_tokens:
                 req.done = True
                 for p in req.pages:          # release pages (enqueue indices)
                     self.free_pages.enqueue(p, timeout=0.1)
                 self.slots[s] = None
-                self.metrics["completed"] += 1
+                self._count("completed")
 
     def run(self, max_ticks: int = 1000) -> Dict[str, int]:
         for _ in range(max_ticks):

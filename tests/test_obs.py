@@ -1,0 +1,468 @@
+"""Observability layer invariants (DESIGN.md § 7):
+
+* trace-plane ring semantics: one record per round, wraparound overwrites
+  oldest-first and is *reported* at drain (never an error);
+* ``telemetry=None`` compiles each fused engine to the exact
+  pre-telemetry loop — telemetry on vs off is bit-identical on the acc,
+  the queue planes, and every stats counter, for all four fused engines;
+* drained records agree with the engine's own stats (pops sum to
+  ``processed``, rounds are contiguous, occupancy ends at 0);
+* export roundtrip: JSONL write → read reproduces every field; the Chrome
+  trace and JSONL both satisfy ``tools/trace_check.py``;
+* the metrics registry enforces kinds and stable keys; the analyzers
+  measure rank error / inversions the paper's envelope is compared to.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.jaxcompat import make_mesh  # noqa: E402
+from repro.obs import (  # noqa: E402
+    KEY_SENTINEL, MetricsRegistry, RoundRecord, SyncPoint, Telemetry,
+    drain_plane, key_inversions, measured_rank_error, metric_key,
+    rank_error_vs_envelope, read_jsonl, to_chrome_trace, trace_init,
+    trace_record, write_chrome_trace, write_jsonl)
+from repro.runtime import (  # noqa: E402
+    MeshRoundRunner, PriorityMeshRoundRunner, PriorityRoundRunner,
+    RoundRunner)
+
+STAT_KEYS = ("rounds", "processed", "spawned", "max_occupancy", "drained")
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _mesh1():
+    return make_mesh((1,), ("data",))
+
+
+# -- trace plane ring ---------------------------------------------------------
+
+
+def test_trace_plane_wraparound_reports_dropped():
+    tp = trace_init(4, shards=2)
+    for r in range(6):
+        tp = trace_record(tp, r, jnp.array([r, r + 1]), jnp.array([0, 1]),
+                          jnp.array([5, 6]), r * 10, r * 10 + 5, False)
+    recs, count, dropped = drain_plane(tp, 0, engine="t", sync=3,
+                                       wall_time=1.5)
+    assert count == 6 and dropped == 2          # rounds 0-1 overwritten
+    assert [r.round for r in recs] == [2, 3, 4, 5]
+    assert recs[0].pops == [2, 3] and recs[0].imbalance == 1
+    assert recs[-1].min_key == 50 and recs[-1].max_key == 55
+    assert all(r.sync == 3 and r.wall_time == 1.5 for r in recs)
+    # a second drain from the same cursor sees nothing new
+    assert drain_plane(tp, count) == ([], 6, 0)
+
+
+def test_trace_plane_scalar_promotion_and_empty_round():
+    tp = trace_init(2)                           # S = 1, scalars promoted
+    tp = trace_record(tp, 0, 3, 1, 7, KEY_SENTINEL, -KEY_SENTINEL, False)
+    recs, _, dropped = drain_plane(tp, 0)
+    assert dropped == 0
+    assert recs[0].pops == [3] and recs[0].occupancy == [7]
+    assert recs[0].min_key == KEY_SENTINEL      # empty-round sentinels kept
+    assert recs[0].imbalance == 0
+
+
+def test_telemetry_capacity_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        Telemetry(0)
+    with pytest.raises(ValueError, match="capacity"):
+        trace_init(0)
+
+
+def test_sync_point_dict_compat():
+    p = SyncPoint(rounds=4, occupancy=0, wall_time=2.0, host_syncs=1)
+    assert p["rounds"] == 4 and p["occupancy"] == 0
+    assert p.get("host_syncs") == 1 and p.get("missing", -1) == -1
+    assert p.to_dict() == {"rounds": 4, "occupancy": 0, "wall_time": 2.0,
+                           "host_syncs": 1}
+
+
+# -- telemetry-off bit-identity on all four fused engines ---------------------
+
+
+def _tree_step():
+    def step(acc, vals, valid):
+        acc = acc.at[jnp.where(valid, vals, 0)].add(valid.astype(jnp.int32))
+        cv = jnp.stack([vals * 2, vals * 2 + 1], -1).astype(jnp.int32)
+        cm = (valid & (vals < 32))[:, None]
+        return acc, cv, cm
+    return step
+
+
+def _pri_step():
+    def step(acc, keys, vals, valid):
+        acc = acc.at[jnp.where(valid, vals, 0)].add(valid.astype(jnp.int32))
+        ck = jnp.stack([keys + 1, keys + 2], -1).astype(jnp.int32)
+        cv = jnp.stack([vals * 2, vals * 2 + 1], -1).astype(jnp.int32)
+        cm = (valid & (vals < 32))[:, None]
+        return acc, ck, cv, cm
+    return step
+
+
+def _assert_identical(res_off, res_on):
+    (acc0, st0, stats0), (acc1, st1, stats1) = res_off, res_on
+    np.testing.assert_array_equal(np.asarray(acc0), np.asarray(acc1))
+    for a, b in zip(jax.tree.leaves(st0), jax.tree.leaves(st1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert stats0 == stats1
+
+
+def _check_records(tel, stats, shards=1):
+    recs = tel.records
+    assert [r.round for r in recs] == list(range(stats["rounds"]))
+    assert sum(sum(r.pops) for r in recs) == stats["processed"]
+    assert sum(sum(r.pushes) for r in recs) == stats["spawned"]
+    assert all(len(r.pops) == shards for r in recs)
+    assert max(max(r.occupancy) for r in recs) <= stats["max_occupancy"]
+    assert sum(recs[-1].occupancy) == 0          # quiescent final round
+    assert not any(r.overflow for r in recs)
+    assert tel.dropped == 0
+    # finish() published the stats as engine-scoped gauges
+    assert tel.registry.get(f"{tel.engine}.rounds") == stats["rounds"]
+
+
+def test_fused_rounds_telemetry_off_bit_identical():
+    out = []
+    for tel in (None, Telemetry(256, engine="rounds")):
+        r = RoundRunner(_tree_step(), capacity_log2=8, batch=16,
+                        telemetry=tel)
+        acc, st = r.run([1], acc=jnp.zeros(80, jnp.int32))
+        out.append((acc, st, dict(r.stats)))
+    _assert_identical(out[0], out[1])
+    _check_records(r.telemetry, out[1][2])
+
+
+def test_fused_priority_rounds_telemetry_off_bit_identical():
+    out = []
+    for tel in (None, Telemetry(256, engine="prounds")):
+        r = PriorityRoundRunner(_pri_step(), capacity_log2=8, batch=16,
+                                telemetry=tel)
+        acc, st = r.run([5], [1], acc=jnp.zeros(80, jnp.int32))
+        out.append((acc, st, dict(r.stats)))
+    _assert_identical(out[0], out[1])
+    _check_records(r.telemetry, out[1][2])
+    # priority planes record popped-*key* extrema: monotone buckets here
+    keyed = [x for x in r.telemetry.records if x.min_key != KEY_SENTINEL]
+    assert keyed and all(x.min_key <= x.max_key for x in keyed)
+
+
+def test_fused_mesh_rounds_telemetry_off_bit_identical():
+    mesh = _mesh1()
+    out = []
+    for tel in (None, Telemetry(256, engine="mesh")):
+        r = MeshRoundRunner(_tree_step(), mesh=mesh, capacity_log2=8,
+                            batch=16, combine=lambda a: a.sum(0),
+                            telemetry=tel)
+        acc, st = r.run([1], acc=jnp.zeros(80, jnp.int32))
+        out.append((acc, st, dict(r.stats)))
+    _assert_identical(out[0], out[1])
+    _check_records(r.telemetry, out[1][2], shards=1)
+
+
+def _pri_mesh_tree_step():
+    def step(acc, keys, vals, valid):
+        acc = acc.at[jnp.where(valid, vals, 0)].add(valid.astype(jnp.int32))
+        cv = jnp.stack([vals * 2, vals * 2 + 1], -1).astype(jnp.int32)
+        ck = (cv * 7919) % 1000
+        cm = (valid & (vals < 32))[:, None]
+        return acc, ck, cv, cm
+    return step
+
+
+@pytest.mark.parametrize("relaxed", [True, False])
+def test_fused_priority_mesh_telemetry_off_bit_identical(relaxed):
+    mesh = _mesh1()
+    out = []
+    for tel in (None, Telemetry(256, engine="pmesh")):
+        r = PriorityMeshRoundRunner(_pri_mesh_tree_step(), mesh=mesh,
+                                    capacity_log2=8, batch=16,
+                                    relaxed=relaxed,
+                                    combine=lambda a: a.sum(0),
+                                    telemetry=tel)
+        acc, st = r.run([7919 % 1000], [1], acc=jnp.zeros(80, jnp.int32))
+        out.append((acc, st, dict(r.stats)))
+    _assert_identical(out[0], out[1])
+    _check_records(r.telemetry, out[1][2], shards=1)
+
+
+def test_telemetry_tiny_capacity_drops_not_raises():
+    tel = Telemetry(4, engine="rounds")
+    r = RoundRunner(_tree_step(), capacity_log2=8, batch=16, telemetry=tel)
+    r.run([1], acc=jnp.zeros(80, jnp.int32))
+    assert r.stats["rounds"] > 4
+    assert len(tel.records) == 4                 # newest 4 survive
+    assert tel.dropped == r.stats["rounds"] - 4
+    assert [x.round for x in tel.records] == \
+        list(range(r.stats["rounds"] - 4, r.stats["rounds"]))
+    assert tel.registry.get("rounds.trace_dropped") == tel.dropped
+
+
+def test_telemetry_sync_every_heartbeats_and_multi_run():
+    tel = Telemetry(256, engine="rounds")
+    r = RoundRunner(_tree_step(), capacity_log2=8, batch=16, sync_every=2,
+                    telemetry=tel)
+    r.run([1], acc=jnp.zeros(80, jnp.int32))
+    assert len(tel.sync_points) == r.stats["host_syncs"] > 1
+    assert [p.rounds for p in tel.sync_points] == \
+        sorted(p.rounds for p in tel.sync_points)
+    assert tel.sync_points[-1].occupancy == 0
+    syncs = {x.sync for x in tel.records}
+    assert len(syncs) > 1                        # drained across heartbeats
+    n1 = len(tel.records)
+    r.run([1], acc=jnp.zeros(80, jnp.int32))     # records accumulate
+    assert len(tel.records) == 2 * n1
+    assert [x.round for x in tel.records[n1:]] == \
+        [x.round for x in tel.records[:n1]]
+
+
+def test_legacy_engines_reject_telemetry():
+    with pytest.raises(ValueError, match="fused"):
+        RoundRunner(_tree_step(), fused=False, telemetry=Telemetry())
+    with pytest.raises(ValueError, match="fused"):
+        PriorityRoundRunner(_pri_step(), fused=False, telemetry=Telemetry())
+
+
+_TWO_SHARD_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys; sys.path.insert(0, {src!r})
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.jaxcompat import make_mesh
+from repro.obs import Telemetry
+from repro.runtime import MeshRoundRunner, PriorityMeshRoundRunner
+
+mesh = make_mesh((2,), ("data",))
+
+def tree_step(acc, vals, valid):
+    acc = acc.at[jnp.where(valid, vals, 0)].add(valid.astype(jnp.int32))
+    cv = jnp.stack([vals * 2, vals * 2 + 1], -1).astype(jnp.int32)
+    cm = (valid & (vals < 32))[:, None]
+    return acc, cv, cm
+
+def pri_step(acc, keys, vals, valid):
+    acc, cv, cm = tree_step(acc, vals, valid)
+    ck = (cv * 7919) % 1000
+    return acc, ck, cv, cm
+
+out = []
+for tel in (None, Telemetry(256, engine="mesh")):
+    r = MeshRoundRunner(tree_step, mesh=mesh, capacity_log2=8, batch=16,
+                        combine=lambda a: a.sum(0), telemetry=tel)
+    acc, st = r.run([1], acc=jnp.zeros(80, jnp.int32))
+    out.append((np.asarray(acc), jax.tree.leaves(st), dict(r.stats)))
+np.testing.assert_array_equal(out[0][0], out[1][0])
+for a, b in zip(out[0][1], out[1][1]):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+assert out[0][2] == out[1][2]
+recs = r.telemetry.records
+assert all(len(x.pops) == 2 for x in recs)       # per-shard columns
+assert sum(sum(x.pops) for x in recs) == r.stats["processed"]
+assert any(x.imbalance > 0 for x in recs)        # odd claims split unevenly
+
+for relaxed in (True, False):
+    out = []
+    for tel in (None, Telemetry(256, engine="pmesh")):
+        r = PriorityMeshRoundRunner(pri_step, mesh=mesh, capacity_log2=8,
+                                    batch=16, relaxed=relaxed,
+                                    combine=lambda a: a.sum(0),
+                                    telemetry=tel)
+        acc, st = r.run([7919 % 1000], [1], acc=jnp.zeros(80, jnp.int32))
+        out.append((np.asarray(acc), jax.tree.leaves(st), dict(r.stats)))
+    np.testing.assert_array_equal(out[0][0], out[1][0])
+    for a, b in zip(out[0][1], out[1][1]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert out[0][2] == out[1][2]
+    recs = r.telemetry.records
+    assert sum(sum(x.pops) for x in recs) == r.stats["processed"]
+    assert all(len(x.pops) == 2 for x in recs)
+print("TWO_SHARD_TELEMETRY_OK")
+"""
+
+
+def test_two_shard_mesh_telemetry_bit_identical():
+    """Forced-device acceptance: telemetry on vs off is bit-identical on
+    both mesh engines at 2 shards, with real per-shard record columns."""
+    src = os.path.join(REPO, "src")
+    res = subprocess.run(
+        [sys.executable, "-c", _TWO_SHARD_SCRIPT.format(src=src)],
+        capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "TWO_SHARD_TELEMETRY_OK" in res.stdout
+
+
+# -- export / validation ------------------------------------------------------
+
+
+def _demo_telemetry():
+    tel = Telemetry(256, engine="rounds")
+    r = RoundRunner(_tree_step(), capacity_log2=8, batch=16, telemetry=tel)
+    r.run([1], acc=jnp.zeros(80, jnp.int32))
+    return tel
+
+
+def test_jsonl_roundtrip_exact(tmp_path):
+    tel = _demo_telemetry()
+    path = str(tmp_path / "trace.jsonl")
+    n = write_jsonl(path, tel.records, tel.sync_points,
+                    metrics=tel.registry.snapshot(), engine="rounds",
+                    extra_meta={"workload": "tree"})
+    assert n == 1 + len(tel.records) + len(tel.sync_points) + 1
+    back = read_jsonl(path)
+    assert back["meta"]["schema_version"] == 1
+    assert back["meta"]["workload"] == "tree"
+    assert back["records"] == tel.records        # dataclass field equality
+    assert back["syncs"] == tel.sync_points
+    assert back["metrics"] == tel.registry.snapshot()
+
+
+def test_chrome_trace_structure(tmp_path):
+    tel = _demo_telemetry()
+    trace = to_chrome_trace(tel.records, tel.sync_points, engine="rounds")
+    xev = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    cev = [e for e in trace["traceEvents"] if e["ph"] == "C"]
+    iev = [e for e in trace["traceEvents"] if e["ph"] == "i"]
+    assert len(xev) == len(tel.records)
+    assert len(cev) == 2 * len(tel.records)      # occupancy + imbalance
+    assert len(iev) == len(tel.sync_points)
+    assert trace["metadata"]["time_base"] == "round-index"
+    path = str(tmp_path / "trace.json")
+    assert write_chrome_trace(path, tel.records, tel.sync_points) \
+        == len(trace["traceEvents"])
+
+
+def test_trace_check_tool_accepts_and_rejects(tmp_path):
+    tel = _demo_telemetry()
+    good = str(tmp_path / "good.jsonl")
+    chrome = str(tmp_path / "good.json")
+    write_jsonl(good, tel.records, tel.sync_points,
+                metrics=tel.registry.snapshot(), engine="rounds")
+    write_chrome_trace(chrome, tel.records, tel.sync_points)
+    tool = os.path.join(REPO, "tools", "trace_check.py")
+    ok = subprocess.run([sys.executable, tool, good, "--chrome", chrome],
+                        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stderr
+    # corrupt a required field -> nonzero exit naming the line
+    lines = open(good).read().splitlines()
+    bad = str(tmp_path / "bad.jsonl")
+    with open(bad, "w") as f:
+        for ln in lines:
+            f.write(ln.replace('"pops"', '"poops"') + "\n")
+    res = subprocess.run([sys.executable, tool, bad],
+                         capture_output=True, text=True)
+    assert res.returncode == 1 and "pops" in res.stderr
+
+
+# -- metrics registry ---------------------------------------------------------
+
+
+def test_metric_key_stable_scheme():
+    assert metric_key("fabric", "deq", shard=1, lane=0) == \
+        "fabric.deq[lane=0,shard=1]"             # labels sorted
+    assert metric_key("serving", "admitted") == "serving.admitted"
+
+
+def test_registry_kinds_enforced_and_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("a.n", 2)
+    reg.counter("a.n", 3)
+    reg.gauge("a.g", 7)
+    for v in (1, 2, 100):
+        reg.observe("a.h", v)
+    with pytest.raises(ValueError, match="counter"):
+        reg.gauge("a.n", 1)
+    with pytest.raises(ValueError, match="histogram"):
+        reg.counter("a.h")
+    snap = reg.snapshot()
+    assert snap["a.n"] == 5 and snap["a.g"] == 7
+    assert snap["a.h"]["count"] == 3 and snap["a.h"]["max"] == 100
+    assert reg.filtered("a").keys() == snap.keys()
+    other = MetricsRegistry()
+    other.counter("a.n", 10)
+    reg.merge(other)
+    assert reg.get("a.n") == 15
+
+
+def test_executor_publishes_stable_keys():
+    from repro.runtime.executor import ExecutorConfig, TaskRuntime
+    from repro.runtime.taskpool import TaskFabric
+    reg = MetricsRegistry()
+    fab = TaskFabric(shards=2, lanes=2, capacity_per_shard=64,
+                     num_threads=16)
+    rt = TaskRuntime(fab, lambda rec: None, ExecutorConfig(workers=8),
+                     registry=reg)
+    for i in range(12):
+        rt.add_task(i, priority=i % 2)
+    m = rt.run()
+    snap = reg.snapshot()
+    assert snap["runtime.tasks_executed"] == 12 == m["tasks_executed"]
+    deq = reg.filtered("fabric")
+    assert sum(v for k, v in deq.items() if k.startswith("fabric.deq[")) == 12
+    assert snap["fabric.wait[cls=0]"]["count"] > 0
+
+
+# -- analyzers ----------------------------------------------------------------
+
+
+def test_measured_rank_error_exact():
+    assert measured_rank_error([[1], [2], [3]]) == 0
+    # 9 popped in round 0 jumps over 3, 1, 2 popped later -> rank error 3
+    assert measured_rank_error([[5, 9], [3], [1, 2]]) == 3
+    assert measured_rank_error([]) == 0
+
+
+def test_key_inversions_proxy():
+    def rec(rnd, mn, mx):
+        return RoundRecord(engine="e", round=rnd, pops=[1], pushes=[0],
+                           occupancy=[0], imbalance=0, min_key=mn,
+                           max_key=mx, overflow=False, sync=0, wall_time=0.0)
+    ordered = [rec(0, 1, 4), rec(1, 5, 9), rec(2, KEY_SENTINEL,
+                                               -KEY_SENTINEL)]
+    assert key_inversions(ordered) == []         # empty round skipped
+    inv = key_inversions([rec(0, 1, 9), rec(1, 5, 6)])
+    assert inv == [{"round": 0, "later_round": 1, "depth": 4}]
+
+
+def test_rank_error_vs_envelope():
+    out = rank_error_vs_envelope(5, history=[[5, 9], [3], [1, 2]])
+    assert out == {"envelope": 5, "measured_rank_error": 3,
+                   "within_envelope": True, "slack": 2}
+    with pytest.raises(ValueError):
+        rank_error_vs_envelope(5)
+
+
+def test_mesh_relaxed_within_declared_envelope():
+    """Acceptance shape: a relaxed priority-mesh run's measured rank error
+    stays within the declared ``mesh_relaxation_bound`` (at one shard the
+    engine pops global minima, so the exact trace must show error <=
+    envelope)."""
+    from repro.sched.relaxed import mesh_relaxation_bound
+    mesh = _mesh1()
+    r = PriorityMeshRoundRunner(_pri_mesh_tree_step(), mesh=mesh,
+                                capacity_log2=8, batch=16, relaxed=True,
+                                fused=False, trace=True,
+                                combine=lambda a: a.sum(0))
+    r.run([7919 % 1000], [1], acc=jnp.zeros(80, jnp.int32))
+    history, inserts = [], []
+    for rec in r.trace:
+        pk, _, ok = rec["pops"]
+        history.append([int(k) for k, o in
+                        zip(pk.reshape(-1), ok.reshape(-1)) if o])
+        gk, _, ga = rec["pushes"]
+        inserts.append([int(k) for k, a in
+                        zip(gk.reshape(-1), ga.reshape(-1)) if a])
+    env = mesh_relaxation_bound(1, 16, r.stats["max_occupancy"])
+    out = rank_error_vs_envelope(env, history=history, inserts=inserts)
+    assert out == {"envelope": 0, "measured_rank_error": 0,
+                   "within_envelope": True, "slack": 0}

@@ -1,0 +1,164 @@
+"""Telemetry trace validator (CI gate).
+
+Validates the JSONL trace files ``benchmarks/run.py --trace`` emits
+against the schema ``repro.obs.export`` declares (the two share
+``JSONL_SCHEMA``, so the validator cannot drift from the emitter):
+
+1. the file parses line-by-line as JSON, every line is ``kind``-tagged
+   with a known kind, and line 1 is the ``meta`` header carrying a
+   ``schema_version`` the validator understands;
+2. every line carries its kind's required fields with sane types/shapes
+   (per-shard vectors of one consistent width, non-negative counts,
+   ``min_key <= max_key`` on non-empty rounds);
+3. round indices are strictly increasing and sync heartbeats are
+   monotone in ``rounds`` and ``wall_time``.
+
+Also accepts Chrome trace files (``--chrome``): checks the
+``traceEvents`` envelope and the round/counter/sync event phases.
+
+Run: ``python tools/trace_check.py TRACE.jsonl [--chrome TRACE.json]`` —
+exits nonzero with a list of violations on failure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.obs.export import JSONL_SCHEMA, SCHEMA_VERSION  # noqa: E402
+from repro.obs.trace import KEY_SENTINEL  # noqa: E402
+
+
+def check_jsonl(path: str) -> list:
+    """Validate one telemetry JSONL file; returns a list of violations."""
+    errors = []
+    lines = []
+    with open(path) as f:
+        for i, raw in enumerate(f, 1):
+            raw = raw.strip()
+            if not raw:
+                continue
+            try:
+                lines.append((i, json.loads(raw)))
+            except json.JSONDecodeError as e:
+                errors.append(f"{path}:{i}: not JSON: {e}")
+    if not lines:
+        return errors + [f"{path}: empty trace"]
+
+    # 1. meta header first, known schema version
+    _, head = lines[0]
+    if head.get("kind") != "meta":
+        errors.append(f"{path}:1: first line must be the meta header, "
+                      f"got kind={head.get('kind')!r}")
+    elif head.get("schema_version") != SCHEMA_VERSION:
+        errors.append(f"{path}:1: schema_version "
+                      f"{head.get('schema_version')!r} != {SCHEMA_VERSION}")
+
+    # 2. per-kind required fields and shapes
+    shard_width = None
+    prev_round = None
+    prev_sync = None
+    for i, d in lines:
+        kind = d.get("kind")
+        if kind not in JSONL_SCHEMA:
+            errors.append(f"{path}:{i}: unknown kind {kind!r}")
+            continue
+        missing = [k for k in JSONL_SCHEMA[kind] if k not in d]
+        if missing:
+            errors.append(f"{path}:{i}: {kind} line missing {missing}")
+            continue
+        if kind == "round":
+            vecs = {k: d[k] for k in ("pops", "pushes", "occupancy")}
+            for name, v in vecs.items():
+                if (not isinstance(v, list) or not v
+                        or not all(isinstance(x, int) and x >= 0 for x in v)):
+                    errors.append(f"{path}:{i}: {name} must be a non-empty "
+                                  f"list of ints >= 0, got {v!r}")
+            widths = {len(v) for v in vecs.values() if isinstance(v, list)}
+            if len(widths) == 1:
+                w = widths.pop()
+                if shard_width is None:
+                    shard_width = w
+                elif w != shard_width:
+                    errors.append(f"{path}:{i}: shard width {w} != "
+                                  f"{shard_width} seen earlier")
+            if d["imbalance"] < 0:
+                errors.append(f"{path}:{i}: negative imbalance")
+            nonempty = d["min_key"] != KEY_SENTINEL
+            if nonempty and d["min_key"] > d["max_key"]:
+                errors.append(f"{path}:{i}: min_key {d['min_key']} > "
+                              f"max_key {d['max_key']} on non-empty round")
+            if prev_round is not None and d["round"] <= prev_round:
+                errors.append(f"{path}:{i}: round {d['round']} not after "
+                              f"{prev_round}")
+            prev_round = d["round"]
+        elif kind == "sync":
+            if prev_sync is not None:
+                if d["rounds"] < prev_sync["rounds"]:
+                    errors.append(f"{path}:{i}: sync rounds went backwards "
+                                  f"({prev_sync['rounds']} -> {d['rounds']})")
+                if d["wall_time"] < prev_sync["wall_time"]:
+                    errors.append(f"{path}:{i}: sync wall_time went "
+                                  f"backwards")
+            prev_sync = d
+        elif kind == "metrics" and not isinstance(d["metrics"], dict):
+            errors.append(f"{path}:{i}: metrics payload must be a dict")
+    return errors
+
+
+def check_chrome(path: str) -> list:
+    """Validate a Chrome trace-event file's envelope and phases."""
+    errors = []
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        return [f"{path}: unreadable: {e}"]
+    ev = trace.get("traceEvents")
+    if not isinstance(ev, list) or not ev:
+        return [f"{path}: no traceEvents"]
+    meta = trace.get("metadata", {})
+    if meta.get("schema_version") != SCHEMA_VERSION:
+        errors.append(f"{path}: metadata.schema_version "
+                      f"{meta.get('schema_version')!r} != {SCHEMA_VERSION}")
+    phases = {e.get("ph") for e in ev}
+    for need in ("X", "C"):
+        if need not in phases:
+            errors.append(f"{path}: no {need!r}-phase events (rounds / "
+                          f"counters missing)")
+    for i, e in enumerate(ev):
+        if "ph" not in e or "pid" not in e:
+            errors.append(f"{path}: event {i} missing ph/pid")
+        if e.get("ph") in ("X", "C", "i") and "ts" not in e:
+            errors.append(f"{path}: event {i} ({e.get('ph')}) missing ts")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("jsonl", nargs="*", help="telemetry JSONL file(s)")
+    ap.add_argument("--chrome", action="append", default=[],
+                    help="Chrome trace-event file(s)")
+    args = ap.parse_args(argv)
+    if not args.jsonl and not args.chrome:
+        ap.error("nothing to check")
+    errors = []
+    for p in args.jsonl:
+        errors += check_jsonl(p)
+    for p in args.chrome:
+        errors += check_chrome(p)
+    for e in errors:
+        print(e, file=sys.stderr)
+    ok = not errors
+    print(f"trace_check: {'OK' if ok else 'FAIL'} "
+          f"({len(args.jsonl)} jsonl, {len(args.chrome)} chrome)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
