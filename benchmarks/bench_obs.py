@@ -40,38 +40,44 @@ import time
 
 HEADER = ("bench,workload,batch,telemetry,rounds,items,elapsed_s,"
           "rounds_per_s,items_per_s,overhead_pct,records,dropped")
-TRIALS = 15     # interleaved on/off; the estimator is the MIN over trials,
+TRIALS = 30     # interleaved on/off; the estimator is the MIN over trials,
                 # not the median: shared-host interference is one-sided (it
                 # only ever adds time), so the fastest interleaved trial is
                 # the highest-fidelity estimate of intrinsic per-run cost —
-                # medians on this class of box scatter by ±10pp run-to-run
+                # medians on this class of box scatter by ±10pp run-to-run,
+                # and 15 draws left the span-overhead pct with ±5pp scatter
+                # (the <5% gate needs ~1-2pp resolution, hence 30)
 CAPACITY = 1024   # the Telemetry default; covers every workload's round
                   # count here with headroom (in-loop carry cost scales
                   # with plane capacity — benchmark what users get)
 
 
-def _row(workload: str, batch: int, tel_on: bool, stats: dict,
+def _row(workload: str, batch: int, tel_on, stats: dict,
          elapsed: float, *, overhead_pct=None, records=0,
          dropped=0) -> dict:
     rounds, items = stats["rounds"], stats["processed"]
     return {
         "workload": workload, "batch": batch,
-        "telemetry": "on" if tel_on else "off",
+        "telemetry": (tel_on if isinstance(tel_on, str)
+                      else ("on" if tel_on else "off")),
         "rounds": rounds, "items": items,
         "elapsed_s": round(elapsed, 4),
         "rounds_per_s": round(rounds / max(elapsed, 1e-9), 1),
         "items_per_s": round(items / max(elapsed, 1e-9), 1),
-        "overhead_pct": ("" if overhead_pct is None
+        # baseline rows carry no overhead measurement: emit JSON null, not
+        # "" — trace_check/bench_compare reject empty-string numerics
+        "overhead_pct": (None if overhead_pct is None
                          else round(overhead_pct, 2)),
         "records": records, "dropped": dropped,
     }
 
 
 def _emit(out, row: dict) -> None:
+    ov = "" if row["overhead_pct"] is None else row["overhead_pct"]
     print(f"obs,{row['workload']},{row['batch']},{row['telemetry']},"
           f"{row['rounds']},{row['items']},{row['elapsed_s']},"
           f"{row['rounds_per_s']},{row['items_per_s']},"
-          f"{row['overhead_pct']},{row['records']},{row['dropped']}",
+          f"{ov},{row['records']},{row['dropped']}",
           file=out)
 
 
@@ -109,6 +115,65 @@ def _measure_pair(make_runner, run_once, batch: int, workload: str,
             _row(workload, batch, True, stats[True], med[True],
                  overhead_pct=overhead, records=len(tel.records),
                  dropped=tel.dropped))
+
+
+def _measure_span_pair(make_runner, run_once, batch: int, workload: str,
+                       trials: int = TRIALS):
+    """Span-layer twin of :func:`_measure_pair`: spans off vs on with the
+    same min-of-interleaved-trials estimator.  The ``on`` row's
+    ``records`` is the histogram mass (one count per claimed task) and
+    ``dropped`` counts flow-ring overwrites (sampling, never an error)."""
+    from repro.obs.spans import Spans
+
+    sp = Spans(classes=1, engine=workload)
+    runners = {False: make_runner(None), True: make_runner(sp)}
+    for r in runners.values():
+        run_once(r)                               # warmup/compile
+    times = {False: [], True: []}
+    stats = {}
+    for _ in range(trials):
+        for sp_on, runner in runners.items():
+            if sp_on:
+                sp.reset()
+            t0 = time.perf_counter()
+            run_once(runner)
+            times[sp_on].append(time.perf_counter() - t0)
+            stats[sp_on] = dict(runner.stats)
+    assert stats[True] == stats[False], (
+        f"{workload}: spans changed engine stats")
+    best = {k: min(v) for k, v in times.items()}
+    rps = {k: stats[k]["rounds"] / max(best[k], 1e-9) for k in best}
+    overhead = (rps[False] - rps[True]) / max(rps[False], 1e-9) * 100
+    assert sp.total == stats[True]["processed"], (
+        f"{workload}: span histogram lost tasks "
+        f"({sp.total} != {stats[True]['processed']})")
+    return (_row(workload, batch, "span-off", stats[False], best[False]),
+            _row(workload, batch, "span-on", stats[True], best[True],
+                 overhead_pct=overhead, records=sp.total,
+                 dropped=sp.dropped_flows))
+
+
+def run_fanout_span_pair(batch: int, *, depth: int = 10, roots: int = 4,
+                         trials: int = TRIALS):
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.runtime import RoundRunner
+    from .bench_rounds import _fanout_step
+
+    peak = roots * 2 ** depth
+    capacity_log2 = max(int(np.ceil(np.log2(2 * peak))),
+                        int(np.ceil(np.log2(2 * batch))))
+    seeds = np.full(roots, depth, np.int32)
+    acc0 = jnp.zeros(depth + 1, jnp.int32)
+
+    def make(sp):
+        return RoundRunner(_fanout_step(2, depth),
+                           capacity_log2=capacity_log2, batch=batch,
+                           spans=sp)
+
+    return _measure_span_pair(
+        make, lambda r: r.run(seeds, acc=acc0, max_rounds=1_000_000),
+        batch, "fanout_spans", trials)
 
 
 def run_fanout_pair(batch: int, *, depth: int = 10, roots: int = 4,
@@ -190,6 +255,15 @@ def main(out=sys.stdout, batches=(64, 256), fanout_depth: int = 10,
               f"({on['records']} records, {on['dropped']} dropped)",
               file=out)
     for batch in batches:
+        soff, son = run_fanout_span_pair(batch, depth=fanout_depth)
+        _emit(out, soff)
+        _emit(out, son)
+        rows += [soff, son]
+        print(f"# fanout batch={batch}: spans cost "
+              f"{son['overhead_pct']}% rounds/s "
+              f"({son['records']} sojourns, {son['dropped']} flow drops)",
+              file=out)
+    for batch in batches:
         for pair in (run_bfs_pair(batch, n=bfs_n),
                      run_sssp_pair(batch, n=sssp_n)):
             off, on = pair
@@ -207,28 +281,37 @@ def smoke(out=sys.stdout) -> bool:
     from repro.obs import write_chrome_trace, write_jsonl
     from repro.obs.trace import Telemetry
 
-    print("# obs smoke: telemetry parity + export validation", file=out)
+    print("# obs smoke: telemetry + span parity + export validation",
+          file=out)
     print(HEADER, file=out)
     off, on = run_fanout_pair(32, depth=6, trials=3)
     _emit(out, off)
     _emit(out, on)
     ok = on["rounds"] == off["rounds"] and on["records"] == on["rounds"]
-    # re-run one telemetry pass and validate its export end to end
+    soff, son = run_fanout_span_pair(32, depth=6, trials=3)
+    _emit(out, soff)
+    _emit(out, son)
+    ok = ok and son["rounds"] == soff["rounds"]
+    ok = ok and son["records"] == son["items"]   # one sojourn per task
+    # re-run one instrumented pass and validate its export end to end
+    from repro.obs.spans import Spans
     from repro.runtime import RoundRunner
     import jax.numpy as jnp
     import numpy as np
     from .bench_rounds import _fanout_step
     tel = Telemetry(CAPACITY, engine="fanout")
+    sp = Spans(classes=1, engine="fanout")
     r = RoundRunner(_fanout_step(2, 6), capacity_log2=8, batch=32,
-                    telemetry=tel)
+                    telemetry=tel, spans=sp)
     r.run(np.full(2, 6, np.int32), acc=jnp.zeros(7, jnp.int32))
     with tempfile.TemporaryDirectory() as d:
         jl = os.path.join(d, "t.jsonl")
         ch = os.path.join(d, "t.json")
         write_jsonl(jl, tel.records, tel.sync_points,
-                    metrics=tel.registry.snapshot(), engine="fanout")
+                    metrics=tel.registry.snapshot(), engine="fanout",
+                    spans=sp)
         write_chrome_trace(ch, tel.records, tel.sync_points,
-                           engine="fanout")
+                           engine="fanout", flows=sp.flows)
         repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         res = subprocess.run(
             [sys.executable, os.path.join(repo, "tools", "trace_check.py"),

@@ -11,10 +11,16 @@ simulator derives the same normalized quantities:
 
 Also reports the wave-batching ablation: G-LFQ with gang scheduling (high
 ballot occupancy) vs random scheduling (batching collapses to per-thread
-FAA) — the direct measurement of the Fig. 1 claim."""
+FAA) — the direct measurement of the Fig. 1 claim.
+
+The sim is deterministic (seeded scheduler), so every per-op column is
+bit-stable across runs — ``--smoke`` is the CI gate (sanity invariants on
+a tiny sweep) and the full section rides in the ``BENCH_<n>.json``
+trajectory where ``tools/bench_compare.py`` can watch it drift."""
 
 from __future__ import annotations
 
+import argparse
 import sys
 
 from repro.core import QUEUE_CLASSES
@@ -74,5 +80,42 @@ def main(out=sys.stdout, *, threads_list=(8, 32, 128),
               f"{hot / max(m['successful_ops'], 1):.3f}", file=out)
 
 
+def smoke(out=sys.stdout) -> bool:
+    """CI gate: per-op metrics exist and respect their invariants on a
+    tiny deterministic sweep — every step is at least one transition
+    (steps/op ≥ 1), stalled transitions are a subset of all transitions
+    (stall ≤ steps), and committed ops touch the hot words (atomics/op
+    > 0)."""
+    ok = True
+    print("# profiling smoke: per-op metric invariants on a tiny sweep",
+          file=out)
+    print("bench,queue,threads,mode,steps_per_op,stall_steps_per_op,"
+          "atomics_per_op", file=out)
+    for name, qcls in QUEUE_CLASSES.items():
+        m = run_balanced(qcls, 8, 20_000)
+        print(f"fig5,{name},8,balanced,{m['steps_per_op']:.2f},"
+              f"{m['stall_steps_per_op']:.2f},{m['atomics_per_op']:.2f}",
+              file=out)
+        if m["steps_per_op"] < 1.0:
+            print(f"# FAIL: {name} steps/op {m['steps_per_op']} < 1",
+                  file=out)
+            ok = False
+        if m["stall_steps_per_op"] > m["steps_per_op"]:
+            print(f"# FAIL: {name} stall-steps/op exceeds steps/op",
+                  file=out)
+            ok = False
+        if m["atomics_per_op"] <= 0:
+            print(f"# FAIL: {name} atomics/op not positive", file=out)
+            ok = False
+    print(f"# acceptance: {'PASS' if ok else 'FAIL'}", file=out)
+    return ok
+
+
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI acceptance gate (tiny deterministic sweep)")
+    a = ap.parse_args()
+    if a.smoke:
+        sys.exit(0 if smoke() else 1)
     main()

@@ -6,8 +6,10 @@ Sections: Fig. 4 throughput, Fig. 5 per-op profiling (+ Fig. 1 ablation),
 Table IV/Fig. 6 BFS, Fig. 7 ray tracing, kernel micro-benchmarks, the
 task-runtime fabric comparison (bench_runtime), the G-PQ priority policy
 comparison (bench_runtime.priority_main), the round/mesh megaround
-engines (bench_rounds, bench_mesh), priority-mesh SSSP (bench_sssp), and
-the telemetry overhead sweep (bench_obs).
+engines (bench_rounds, bench_mesh), priority-mesh SSSP (bench_sssp), the
+telemetry overhead sweep (bench_obs), and the offered-load latency sweep
+reading per-class sojourn percentiles off the device span planes
+(bench_latency).
 
 ``--trace [DIR]`` emits the observability artifact instead of (or before)
 the sweep: a 2-shard mesh SSSP run's telemetry as ``trace_sssp.jsonl`` +
@@ -66,6 +68,9 @@ def _parse_csv(text: str):
             continue
         row = {}
         for k, v in zip(header, parts):
+            if v == "":
+                row[k] = None     # absent numeric -> JSON null, never ""
+                continue
             try:
                 row[k] = int(v)
             except ValueError:
@@ -82,7 +87,7 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # Trajectory rows keep only scheduling-relevant metrics; everything else in
 # a row (configs, counts) rides along untouched.
 _TRAJECTORY_SECTIONS = ("runtime", "priority", "rounds", "mesh", "sssp",
-                        "obs")
+                        "obs", "latency", "profiling")
 
 
 def _git_rev() -> str:
@@ -133,7 +138,7 @@ def main() -> None:
     ap.add_argument("--section", default=None,
                     help="comma-separated subset of: throughput, profiling, "
                          "bfs, raytrace, kernels, runtime, priority, rounds, "
-                         "mesh, sssp, obs")
+                         "mesh, sssp, obs, latency")
     ap.add_argument("--trace", nargs="?", const=".", default=None,
                     metavar="DIR",
                     help="emit the telemetry artifact into DIR (default .): "
@@ -152,8 +157,8 @@ def main() -> None:
         except ValueError:
             ap.error(f"--emit-trajectory expects an integer, got "
                      f"{args.emit_trajectory!r}")
-    from . import (bench_bfs, bench_kernels, bench_mesh, bench_obs,
-                   bench_profiling, bench_raytrace, bench_rounds,
+    from . import (bench_bfs, bench_kernels, bench_latency, bench_mesh,
+                   bench_obs, bench_profiling, bench_raytrace, bench_rounds,
                    bench_runtime, bench_sssp, bench_throughput)
 
     if args.trace is not None:
@@ -174,6 +179,7 @@ def main() -> None:
     kw_sssp = dict(batches=(64,), n=512) if args.quick else {}
     kw_obs = (dict(batches=(64,), fanout_depth=8, bfs_n=1024, sssp_n=256)
               if args.quick else {})
+    kw_lat = dict(batches=(16, 64), n=256) if args.quick else {}
     sections = {
         "throughput": lambda out: bench_throughput.main(out, **kw_thr),
         "profiling": lambda out: bench_profiling.main(out, **kw_prof),
@@ -186,6 +192,7 @@ def main() -> None:
         "mesh": lambda out: bench_mesh.main(out, **kw_mesh),
         "sssp": lambda out: bench_sssp.main(out, **kw_sssp),
         "obs": lambda out: bench_obs.main(out, **kw_obs),
+        "latency": lambda out: bench_latency.main(out, **kw_lat),
     }
     if args.section:
         todo = [s.strip() for s in args.section.split(",") if s.strip()]

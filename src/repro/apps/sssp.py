@@ -71,7 +71,8 @@ def sssp_mesh_rounds_runner(g: CSRGraph, weights: np.ndarray, *, mesh=None,
                             batch: int = 64, delta: int = 4,
                             relaxed: bool = True, fused: bool = True,
                             sync_every: int = 0, capacity_log2: int = None,
-                            trace: bool = False, telemetry=None):
+                            trace: bool = False, telemetry=None,
+                            spans=None):
     """Build the priority-mesh SSSP runner for ``(g, weights)``.  Returns
     ``(runner, init_fn)`` where ``init_fn(source)`` builds the label
     accumulator and the source's seed is ``(key=0, payload=source)`` —
@@ -163,7 +164,7 @@ def sssp_mesh_rounds_runner(g: CSRGraph, weights: np.ndarray, *, mesh=None,
                                      batch=batch, relaxed=relaxed,
                                      fused=fused, sync_every=sync_every,
                                      combine=combine, trace=trace,
-                                     telemetry=telemetry)
+                                     telemetry=telemetry, spans=spans)
 
     def init_fn(source: int):
         # all labels unvisited (BIG) — the source's 0 arrives via its seed

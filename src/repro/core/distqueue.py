@@ -140,58 +140,80 @@ def _subwaves(total_ops: int, n2: int) -> int:
 
 
 def _apply_enqueue(planes, head, tickets, values, active, ranks, *,
-                   nslots_log2: int, engine: str, max_rank: int = None):
+                   nslots_log2: int, engine: str, max_rank: int = None,
+                   births=None, birth_round=None):
     """Apply one round of gathered enqueue ops to the planes.  ``tickets``
     = tail + rank (wrapping); ``ranks`` ∈ [0, total) for active ops.
     ``max_rank`` is a static upper bound on active ranks (callers that cap
     the round's total, e.g. by capacity, pass it so provably-inert
     sub-waves are never emitted).  Returns (planes, ok) with ok in
-    gathered op order."""
+    gathered op order; a span-layer stamp plane (``births`` +
+    ``birth_round``, see ``ring_slots.enq_planes``) threads through every
+    sub-wave and is appended when given."""
     n2 = 1 << nslots_log2
     nops = tickets.shape[0]
     if engine == "planes":
         ok = jnp.zeros((nops,), jnp.int32)
         for w in range(_subwaves(min(nops, max_rank or nops), n2)):
             wave = active & (ranks >= w * n2) & (ranks < (w + 1) * n2)
-            cyc, saf, enq, idx, okw = enq_planes(
+            out = enq_planes(
                 *planes, tickets, values, head,
-                nslots_log2=nslots_log2, idx_bot=int(IDX_BOT), active=wave)
-            planes = (cyc, saf, enq, idx)
+                nslots_log2=nslots_log2, idx_bot=int(IDX_BOT), active=wave,
+                births=births, birth_round=birth_round)
+            planes, okw = out[:4], out[4]
+            if births is not None:
+                births = out[5]
             ok = ok | okw
+        if births is not None:
+            return planes, ok, births
         return planes, ok
     if engine != "scan":
         raise ValueError(f"unknown engine {engine!r} (planes|scan)")
     order = jnp.argsort(jnp.where(active, ranks, _SENTINEL))
 
-    def body(pl, tva):
+    def body(carry, tva):
+        pl, brt = carry
         t, v, a = tva
-        cyc, saf, enq, idx, okk = enq_planes(
+        out = enq_planes(
             *pl, t[None], v[None], head,
-            nslots_log2=nslots_log2, idx_bot=int(IDX_BOT), active=a[None])
-        return (cyc, saf, enq, idx), okk[0]
+            nslots_log2=nslots_log2, idx_bot=int(IDX_BOT), active=a[None],
+            births=brt, birth_round=birth_round)
+        return ((out[:4], out[5] if brt is not None else None), out[4][0])
 
-    planes, ok_sorted = jax.lax.scan(
-        body, planes, (tickets[order], values[order], active[order]))
-    return planes, ok_sorted[jnp.argsort(order)]
+    (planes, births), ok_sorted = jax.lax.scan(
+        body, (planes, births),
+        (tickets[order], values[order], active[order]))
+    ok = ok_sorted[jnp.argsort(order)]
+    if births is not None:
+        return planes, ok, births
+    return planes, ok
 
 
 def _apply_dequeue(planes, tickets, active, ranks, *,
-                   nslots_log2: int, engine: str):
+                   nslots_log2: int, engine: str, births=None):
     """Apply one round of gathered dequeue ops.  Returns
-    (planes, vals, ok) in gathered op order."""
+    (planes, vals, ok) in gathered op order; with a span-layer stamp plane
+    (``births``) the consumed slots' birth rounds are appended (-1 on
+    missed lanes)."""
     n2 = 1 << nslots_log2
     nops = tickets.shape[0]
     if engine == "planes":
         ok = jnp.zeros((nops,), jnp.int32)
         vals = jnp.full((nops,), -1, jnp.int32)
+        bvals = None if births is None else jnp.full((nops,), -1, jnp.int32)
         for w in range(_subwaves(nops, n2)):
             wave = active & (ranks >= w * n2) & (ranks < (w + 1) * n2)
-            cyc, saf, enq, idx, v, okw = deq_planes(
+            out = deq_planes(
                 *planes, tickets,
-                nslots_log2=nslots_log2, idx_bot=int(IDX_BOT), active=wave)
-            planes = (cyc, saf, enq, idx)
+                nslots_log2=nslots_log2, idx_bot=int(IDX_BOT), active=wave,
+                births=births)
+            planes, v, okw = out[:4], out[4], out[5]
             ok = ok | okw
             vals = jnp.where(wave, v, vals)
+            if births is not None:
+                bvals = jnp.where(wave, out[6], bvals)
+        if births is not None:
+            return planes, vals, ok, bvals
         return planes, vals, ok
     if engine != "scan":
         raise ValueError(f"unknown engine {engine!r} (planes|scan)")
@@ -199,14 +221,21 @@ def _apply_dequeue(planes, tickets, active, ranks, *,
 
     def body(pl, ta):
         t, a = ta
-        cyc, saf, enq, idx, v, okk = deq_planes(
+        out = deq_planes(
             *pl, t[None],
-            nslots_log2=nslots_log2, idx_bot=int(IDX_BOT), active=a[None])
-        return (cyc, saf, enq, idx), (v[0], okk[0])
+            nslots_log2=nslots_log2, idx_bot=int(IDX_BOT), active=a[None],
+            births=births)
+        ys = (out[4][0], out[5][0])
+        if births is not None:
+            ys = ys + (out[6][0],)
+        return out[:4], ys
 
-    planes, (vals_sorted, ok_sorted) = jax.lax.scan(
-        body, planes, (tickets[order], active[order]))
+    planes, ys = jax.lax.scan(body, planes, (tickets[order], active[order]))
     inv = jnp.argsort(order)
+    if births is not None:
+        vals_sorted, ok_sorted, b_sorted = ys
+        return planes, vals_sorted[inv], ok_sorted[inv], b_sorted[inv]
+    vals_sorted, ok_sorted = ys
     return planes, vals_sorted[inv], ok_sorted[inv]
 
 
@@ -265,7 +294,8 @@ def dist_dequeue_round(state: DistQueueState, want: jax.Array, axis: str, *,
 
 def dist_publish_round(state: DistQueueState, values: jax.Array,
                        mask: jax.Array, axis: str, *, capacity: int,
-                       engine: str = "planes", with_counts: bool = False):
+                       engine: str = "planes", with_counts: bool = False,
+                       births=None, birth_round=None):
     """Enqueue round with traced overflow suppression (the fused mesh
     engine's install wave): when the round's total spawn would push
     occupancy past ``capacity``, NOTHING installs, tail stays put, and
@@ -276,7 +306,14 @@ def dist_publish_round(state: DistQueueState, values: jax.Array,
     returns the per-shard publish counts ``(n,) int32`` — each shard's
     contribution to the gathered round, zeroed on suppression.  The counts
     are row sums of the already-gathered mask: replicated for free, no
-    extra collective."""
+    extra collective.
+
+    ``births``/``birth_round`` (the span path, DESIGN.md § 7.6) stamp the
+    installed slots' birth rounds; the updated stamp plane is appended to
+    the return tuple.  ``birth_round`` is a replicated scalar (the mesh
+    round index), so the stamps never ride the psum — the
+    one-collective-per-round invariant holds with spans on.  Suppressed
+    rounds stamp nothing (``active`` is already zeroed)."""
     b = values.shape[0]
     lg = _nslots_log2(state)
     gv, active, ranks, total = _gathered_round(values, mask, axis)
@@ -284,9 +321,11 @@ def dist_publish_round(state: DistQueueState, values: jax.Array,
     active = active & ~over
     tickets = state.tail + ranks
     # suppression bounds active ranks by capacity: at most one live wave
-    planes, ok = _apply_enqueue(_planes(state), state.head, tickets, gv,
-                                active, ranks, nslots_log2=lg, engine=engine,
-                                max_rank=capacity)
+    out = _apply_enqueue(_planes(state), state.head, tickets, gv,
+                         active, ranks, nslots_log2=lg, engine=engine,
+                         max_rank=capacity, births=births,
+                         birth_round=birth_round)
+    planes, ok = out[0], out[1]
     total = jnp.where(over, 0, total)
     new_state = DistQueueState(*planes, tail=state.tail + total,
                                head=state.head)
@@ -294,10 +333,13 @@ def dist_publish_round(state: DistQueueState, values: jax.Array,
     me = jax.lax.axis_index(axis)
     ok_local = _pvary(ok, axis).reshape(n, b)[me]
     granted = (ok_local > 0) & (mask > 0)
+    res = (new_state, granted, total, over)
     if with_counts:
         counts = _pvary(active, axis).reshape(n, b).sum(1, dtype=jnp.int32)
-        return new_state, granted, total, over, counts
-    return new_state, granted, total, over
+        res = res + (counts,)
+    if births is not None:
+        res = res + (out[2],)
+    return res
 
 
 def claim_schedule(k, n: int, batch: int):
@@ -321,7 +363,8 @@ def claim_schedule(k, n: int, batch: int):
 
 
 def dist_claim_round(state: DistQueueState, k, batch: int, axis: str, *,
-                     engine: str = "planes", with_grid: bool = False):
+                     engine: str = "planes", with_grid: bool = False,
+                     births=None):
     """Claim ``k`` items (a replicated scalar, ≤ occupancy) spread evenly
     over the shards — ``claim_schedule`` — with NO collective: every shard
     derives the full mesh's dequeue tickets from the replicated head.
@@ -332,13 +375,19 @@ def dist_claim_round(state: DistQueueState, k, batch: int, axis: str, *,
     returns the full gathered claim grid ``(values (n·batch,), ok
     (n·batch,))`` — computed from replicated planes/tickets, so it is
     already replicated: global per-round extrema come for free, no
-    collective."""
+    collective.
+
+    ``births`` (the span path, DESIGN.md § 7.6) reads the consumed slots'
+    birth stamps; this shard's (batch,) slice of them is appended to the
+    return tuple (-1 on missed lanes).  The stamp plane itself is
+    read-only at claim time."""
     lg = _nslots_log2(state)
     n = _axis_size(axis)
     active, ranks = claim_schedule(k, n, batch)
     tickets = state.head + ranks
-    planes, vals, ok = _apply_dequeue(_planes(state), tickets, active, ranks,
-                                      nslots_log2=lg, engine=engine)
+    out = _apply_dequeue(_planes(state), tickets, active, ranks,
+                         nslots_log2=lg, engine=engine, births=births)
+    planes, vals, ok = out[0], out[1], out[2]
     k = jnp.minimum(jnp.asarray(k, jnp.int32), n * batch)
     new_state = DistQueueState(*planes, tail=state.tail, head=state.head + k)
     me = jax.lax.axis_index(axis)
@@ -346,9 +395,12 @@ def dist_claim_round(state: DistQueueState, k, batch: int, axis: str, *,
     ok_full = _pvary(ok, axis)
     vals_local = vals_full.reshape(n, batch)[me]
     ok_local = ok_full.reshape(n, batch)[me]
+    res = (new_state, vals_local, ok_local > 0)
     if with_grid:
-        return new_state, vals_local, ok_local > 0, (vals_full, ok_full > 0)
-    return new_state, vals_local, ok_local > 0
+        res = res + ((vals_full, ok_full > 0),)
+    if births is not None:
+        res = res + (_pvary(out[3], axis).reshape(n, batch)[me],)
+    return res
 
 
 # ---------------------------------------------------------------------------

@@ -181,7 +181,7 @@ def _heap_apply_jit(keys, vals, size, ops, opkeys, opvals, *, cap_log2: int,
 
 @functools.partial(jax.jit, static_argnames=("cap_log2", "arity_log2"))
 def heap_planes(keys, vals, size, ops, opkeys, opvals, *, cap_log2: int,
-                arity_log2: int = 2):
+                arity_log2: int = 2, rider=None, oprider=None):
     """Apply a batch of heap ops in batch order — pure jnp, no Pallas.
 
     Same contract and bit-identical results as ``heap_apply`` (the batch
@@ -191,47 +191,67 @@ def heap_planes(keys, vals, size, ops, opkeys, opvals, *, cap_log2: int,
     mesh analogue of ``ring_slots.enq_planes``/``deq_planes``.  All inputs
     may be traced (``size`` and the op vectors included); only the shapes
     are static.  Returns ``(keys, vals, new_size, out_keys, out_vals,
-    ok)`` with ``out_*[i]`` carrying delete-min results."""
+    ok)`` with ``out_*[i]`` carrying delete-min results.
+
+    ``rider`` is an optional second (cap,) value plane that moves in
+    lockstep with ``vals`` through every sift — the span layer's
+    birth-stamp plane (DESIGN.md § 7.6).  ``oprider`` supplies the rider
+    value installed by INSERT lanes (scalar or (B,); ignored on pops).
+    With a rider the return tuple grows to ``(..., ok, rider, out_rider)``;
+    without one the op sequence — and therefore the result — is exactly
+    the single-plane version's."""
     cap = 1 << cap_log2
     d = 1 << arity_log2
     max_depth = -(-cap_log2 // arity_log2) + 1
     size = jnp.asarray(size, jnp.int32)
+    ops = ops.astype(jnp.int32)
+    # generalize over a tuple of value planes: the heap's ordering lives
+    # entirely in `keys`; every value plane just mirrors the moves
+    if rider is None:
+        vplanes = (vals,)
+        opvals_t = (opvals.astype(jnp.int32),)
+    else:
+        opr = jnp.zeros_like(ops) if oprider is None else jnp.broadcast_to(
+            jnp.asarray(oprider, jnp.int32), ops.shape)
+        vplanes = (vals, rider)
+        opvals_t = (opvals.astype(jnp.int32), opr)
 
     def one(carry, opkv):
-        keys, vals, size = carry
-        op, key, val = opkv
+        keys, vs, size = carry
+        op, key, ovals = opkv
 
         # ---- INSERT: hole starts at `size`, parents move down ----------
         do_ins = (op == OP_INSERT) & (size < cap)
 
         def up(_, c):
-            keys, vals, j, moving = c
+            keys, vs, j, moving = c
             p = jnp.where(j > 0, (j - 1) >> arity_log2, 0)
             pk = keys[p]
             cond = moving & (j > 0) & (pk > key)
             jc = jnp.where(cond, j, cap)        # failed lanes drop
-            pv = vals[p]
             keys = keys.at[jc].set(pk, mode="drop")
-            vals = vals.at[jc].set(pv, mode="drop")
-            return (keys, vals, jnp.where(cond, p, j), moving & cond)
+            vs = tuple(v.at[jc].set(v[p], mode="drop") for v in vs)
+            return (keys, vs, jnp.where(cond, p, j), moving & cond)
 
         j0 = jnp.where(do_ins, size, 0)
-        keys, vals, jf, _ = jax.lax.fori_loop(
-            0, max_depth, up, (keys, vals, j0, do_ins))
-        keys = keys.at[jnp.where(do_ins, jf, cap)].set(key, mode="drop")
-        vals = vals.at[jnp.where(do_ins, jf, cap)].set(val, mode="drop")
+        keys, vs, jf, _ = jax.lax.fori_loop(
+            0, max_depth, up, (keys, vs, j0, do_ins))
+        ins_at = jnp.where(do_ins, jf, cap)
+        keys = keys.at[ins_at].set(key, mode="drop")
+        vs = tuple(v.at[ins_at].set(ov, mode="drop")
+                   for v, ov in zip(vs, ovals))
 
         # ---- DELETE-MIN: root out, last node sifts down into the hole --
         do_pop = (op == OP_DELMIN) & (size > 0)
         outk = jnp.where(do_pop, keys[0], KEY_INF)
-        outv = jnp.where(do_pop, vals[0], -1)
+        outs = tuple(jnp.where(do_pop, v[0], -1) for v in vs)
         nsize = jnp.where(do_pop, size - 1, size)
         lpos = jnp.where(do_pop & (size > 0), size - 1, 0)
         lk = keys[lpos]
-        lv = vals[lpos]
+        lvs = tuple(v[lpos] for v in vs)
 
         def down(_, c):
-            keys, vals, j, moving = c
+            keys, vs, j, moving = c
             base = (j << arity_log2) + 1
 
             def child(cc, acc):
@@ -246,52 +266,61 @@ def heap_planes(keys, vals, size, ops, opkeys, opvals, *, cap_log2: int,
                 0, d, child, (jnp.int32(KEY_INF), jnp.int32(-1)))
             cond = moving & (bj >= 0) & (bk < lk)
             jc = jnp.where(cond, j, cap)
-            bv = vals[jnp.where(cond, bj, 0)]
+            bsrc = jnp.where(cond, bj, 0)
             keys = keys.at[jc].set(bk, mode="drop")
-            vals = vals.at[jc].set(bv, mode="drop")
-            return (keys, vals, jnp.where(cond, bj, j), moving & cond)
+            vs = tuple(v.at[jc].set(v[bsrc], mode="drop") for v in vs)
+            return (keys, vs, jnp.where(cond, bj, j), moving & cond)
 
         moving0 = do_pop & (nsize > 0)
-        keys, vals, jf2, _ = jax.lax.fori_loop(
-            0, max_depth, down, (keys, vals, jnp.int32(0), moving0))
+        keys, vs, jf2, _ = jax.lax.fori_loop(
+            0, max_depth, down, (keys, vs, jnp.int32(0), moving0))
         place = jnp.where(moving0, jf2, cap)
         keys = keys.at[place].set(lk, mode="drop")
-        vals = vals.at[place].set(lv, mode="drop")
+        vs = tuple(v.at[place].set(lv, mode="drop")
+                   for v, lv in zip(vs, lvs))
         # scrub the vacated tail slot so stale keys can't resurface
         scrub = jnp.where(do_pop, lpos, cap)
         keys = keys.at[scrub].set(KEY_INF, mode="drop")
-        vals = vals.at[scrub].set(-1, mode="drop")
+        vs = tuple(v.at[scrub].set(-1, mode="drop") for v in vs)
 
         ok = (do_ins | do_pop).astype(jnp.int32)
         new_size = jnp.where(do_ins, size + 1, nsize)
-        return (keys, vals, new_size), (outk, outv, ok)
+        return (keys, vs, new_size), (outk, outs, ok)
 
-    (keys, vals, size), (outk, outv, ok) = jax.lax.scan(
-        one, (keys, vals, size),
-        (ops.astype(jnp.int32), opkeys.astype(jnp.int32),
-         opvals.astype(jnp.int32)))
-    return keys, vals, size, outk, outv, ok.astype(bool)
+    (keys, vplanes, size), (outk, outvs, ok) = jax.lax.scan(
+        one, (keys, vplanes, size),
+        (ops, opkeys.astype(jnp.int32), opvals_t))
+    if rider is None:
+        return keys, vplanes[0], size, outk, outvs[0], ok.astype(bool)
+    return (keys, vplanes[0], size, outk, outvs[0], ok.astype(bool),
+            vplanes[1], outvs[1])
 
 
 def heap_pop_count(keys, vals, size, count, *, batch: int, cap_log2: int,
-                   arity_log2: int = 2):
+                   arity_log2: int = 2, rider=None):
     """Pop the ``count`` smallest (key, val) pairs through a fixed-width
     masked wave: lanes ``>= count`` are ``OP_NOP`` padding, so ``count``
     may be traced (the mesh claim schedule's per-shard share).  Returns
-    the ``heap_planes`` tuple; ``ok[i] = i < min(count, size)``."""
+    the ``heap_planes`` tuple; ``ok[i] = i < min(count, size)``.  An
+    optional ``rider`` plane passes through (the popped rider values land
+    in the appended ``out_rider``)."""
     lane = jnp.arange(batch, dtype=jnp.int32)
     ops = jnp.where(lane < jnp.asarray(count, jnp.int32), OP_DELMIN, OP_NOP)
     pad = jnp.full((batch,), KEY_INF, jnp.int32)
     return heap_planes(keys, vals, size, ops, pad, pad,
-                       cap_log2=cap_log2, arity_log2=arity_log2)
+                       cap_log2=cap_log2, arity_log2=arity_log2, rider=rider)
 
 
 def heap_insert_masked(keys, vals, size, inkeys, invals, mask, *,
-                       cap_log2: int, arity_log2: int = 2):
+                       cap_log2: int, arity_log2: int = 2, rider=None,
+                       oprider=None):
     """Install the masked subset of a fixed-width (key, val) wave in lane
     order (masked-out lanes are ``OP_NOP``) — the publish wave of the
     priority mesh rounds, where each shard keeps only its sprayed share of
-    the gathered children.  Returns the ``heap_planes`` tuple."""
+    the gathered children.  Returns the ``heap_planes`` tuple.  An
+    optional ``rider`` plane installs ``oprider`` (scalar or (B,)) on
+    applied lanes — the span layer's birth stamps."""
     ops = jnp.where(mask, OP_INSERT, OP_NOP)
     return heap_planes(keys, vals, size, ops, inkeys, invals,
-                       cap_log2=cap_log2, arity_log2=arity_log2)
+                       cap_log2=cap_log2, arity_log2=arity_log2,
+                       rider=rider, oprider=oprider)

@@ -50,7 +50,8 @@ def cycle_lt(a, b, nslots_log2: int):
 
 
 def enq_planes(cycles, safes, enqs, idxs, tickets, values, head, *,
-               nslots_log2: int, idx_bot: int, active=None):
+               nslots_log2: int, idx_bot: int, active=None,
+               births=None, birth_round=None):
     """Vectorized TRYENQ install wave over the (2n,) field planes.
 
     ``tickets``/``values`` are (B,) int32; active tickets must hit
@@ -62,7 +63,28 @@ def enq_planes(cycles, safes, enqs, idxs, tickets, values, head, *,
     wraparound-difference based, so wrapped (negative) tickets behave
     correctly.  ``head`` is a scalar.  One gather per plane, one masked
     scatter per plane — no serial loop.  Returns
-    (cycles, safes, enqs, idxs, ok)."""
+    (cycles, safes, enqs, idxs, ok).
+
+    ``births``/``birth_round`` enable the span layer's birth stamps
+    (DESIGN.md § 7.6), in one of two layouts:
+
+    * **separate plane** — ``births`` is a (2n,) int32 stamp plane riding
+      alongside the field planes; installing lanes reuse the already-
+      computed scatter index (one extra masked scatter) and ``births`` is
+      appended to the return tuple.
+    * **packed flag** (``births=None``, ``birth_round`` given) — the
+      install writes ``(birth_round << 1) | 1`` into the ``enqs`` flag
+      plane instead of the literal 1.  The flag plane only ever carries
+      0/1 semantics (the dequeue tests the low bit and nothing else reads
+      it), so the stamp rides the *existing* enq scatter: zero extra ops,
+      zero extra loop carry, zero extra plane copies — the layout the
+      dispatch-bound chip engine uses.  Seeds installed by the unpacked
+      kernel path carry ``enqs == 1`` ⇔ birth round 0, exactly the span
+      seed contract; ``enqs & 1`` recovers the unpacked plane bit-exactly.
+      The stamp occupies the upper 31 bits, capping the round clock at
+      2^30 — far beyond any reachable megaround count (the separate
+      plane keeps full int32 range for the mesh engines).  All other
+      plane updates are identical in every mode."""
     nslots = 1 << nslots_log2
     idx_botc = idx_bot - 1
     if active is None:
@@ -76,16 +98,34 @@ def enq_planes(cycles, safes, enqs, idxs, tickets, values, head, *,
     w = jnp.where(can, j, nslots)          # failed lanes scatter out of range
     cycles = cycles.at[w].set(c, mode="drop")
     safes = safes.at[w].set(1, mode="drop")
-    enqs = enqs.at[w].set(1, mode="drop")
+    if births is None and birth_round is not None:
+        flag = (jnp.asarray(birth_round, jnp.int32) << 1) | 1
+    else:
+        flag = jnp.int32(1)
+    enqs = enqs.at[w].set(flag, mode="drop")
     idxs = idxs.at[w].set(values, mode="drop")
-    return cycles, safes, enqs, idxs, can.astype(jnp.int32)
+    if births is None:
+        return cycles, safes, enqs, idxs, can.astype(jnp.int32)
+    births = births.at[w].set(jnp.asarray(birth_round, jnp.int32),
+                              mode="drop")
+    return cycles, safes, enqs, idxs, can.astype(jnp.int32), births
 
 
 def deq_planes(cycles, safes, enqs, idxs, tickets, *,
-               nslots_log2: int, idx_bot: int, active=None):
+               nslots_log2: int, idx_bot: int, active=None, births=None,
+               birth_packed: bool = False):
     """Vectorized TRYDEQ consume wave (same distinct-slot precondition and
     wrap-safe comparisons as ``enq_planes``).
-    Returns (cycles, safes, enqs, idxs, values, ok)."""
+    Returns (cycles, safes, enqs, idxs, values, ok).
+
+    ``births`` (the span layer's (2n,) stamp plane) adds a gather of the
+    consumed slot's birth round, appended to the return tuple as a (B,)
+    vector (-1 on missed lanes).  The stamp plane itself is read-only
+    here — stale stamps are overwritten at the slot's next install, so no
+    scrub is needed.  With the packed-flag layout (``birth_packed=True``,
+    see ``enq_planes``) the birth instead rides the existing enq-flag
+    gather — the hit test reads the low bit, the stamp the high bits —
+    zero extra ops, and the same (B,) vector is appended."""
     nslots = 1 << nslots_log2
     idx_botc = idx_bot - 1
     if active is None:
@@ -94,14 +134,21 @@ def deq_planes(cycles, safes, enqs, idxs, tickets, *,
     c = jnp.where(active, ticket_cycle(tickets, nslots_log2), 0)
     e_c, e_s, e_e, e_i = cycles[j], safes[j], enqs[j], idxs[j]
     empty = (e_i == idx_bot) | (e_i == idx_botc)
-    hit = active & (e_c == c) & (~empty) & (e_e == 1)
+    flag = (e_e & 1) if birth_packed else e_e
+    hit = active & (e_c == c) & (~empty) & (flag == 1)
     idxs = idxs.at[jnp.where(hit, j, nslots)].set(idx_botc, mode="drop")
     adv = active & (~hit) & empty & cycle_lt(e_c, c, nslots_log2)
     cycles = cycles.at[jnp.where(adv, j, nslots)].set(c, mode="drop")
     uns = active & (~hit) & (~empty) & cycle_lt(e_c, c, nslots_log2)
     safes = safes.at[jnp.where(uns, j, nslots)].set(0, mode="drop")
     vals = jnp.where(hit, e_i, -1)
-    return cycles, safes, enqs, idxs, vals, hit.astype(jnp.int32)
+    if birth_packed:
+        bvals = jnp.where(hit, e_e >> 1, -1)
+        return cycles, safes, enqs, idxs, vals, hit.astype(jnp.int32), bvals
+    if births is None:
+        return cycles, safes, enqs, idxs, vals, hit.astype(jnp.int32)
+    bvals = jnp.where(hit, births[j], -1)
+    return cycles, safes, enqs, idxs, vals, hit.astype(jnp.int32), bvals
 
 
 def _enq_kernel(nslots_log2, idx_bot, head_ref, tickets_ref, values_ref,

@@ -7,24 +7,33 @@ the fused engines, a unified host metrics registry, and trace exporters.
   histograms behind stable ``metric_key`` names)
 * :mod:`repro.obs.export` — JSONL + Chrome trace-event emitters
 * :mod:`repro.obs.analyze` — occupancy/imbalance timelines, measured
-  rank error vs the declared ``mesh_relaxation_bound`` envelope
+  rank error vs the declared ``mesh_relaxation_bound`` envelope,
+  sojourn percentiles + starvation flags from span histograms
+* :mod:`repro.obs.spans` — ``SpanPlane`` in-loop sojourn histograms +
+  the ``Spans`` host collector (per-ticket birth→claim wait tracking)
 """
 
 from .analyze import (imbalance_timeline, key_inversions,
-                      measured_rank_error, occupancy_timeline,
-                      rank_error_vs_envelope)
+                      max_wait_highwater, measured_rank_error,
+                      occupancy_timeline, rank_error_vs_envelope,
+                      sojourn_percentiles, starvation_flags)
 from .export import (read_jsonl, to_chrome_trace, write_chrome_trace,
                      write_jsonl)
 from .metrics import Histogram, MetricsRegistry, metric_key
+from .spans import (SpanPlane, Spans, bucket_edges, bucket_of, span_init,
+                    span_record, span_tick)
 from .trace import (KEY_SENTINEL, RoundRecord, SyncPoint, Telemetry,
                     TracePlane, drain_plane, masked_min_max, trace_init,
                     trace_record)
 
 __all__ = [
     "KEY_SENTINEL", "Histogram", "MetricsRegistry", "RoundRecord",
-    "SyncPoint", "Telemetry", "TracePlane", "drain_plane",
-    "imbalance_timeline", "key_inversions", "masked_min_max",
+    "SpanPlane", "Spans", "SyncPoint", "Telemetry", "TracePlane",
+    "bucket_edges", "bucket_of", "drain_plane", "imbalance_timeline",
+    "key_inversions", "masked_min_max", "max_wait_highwater",
     "measured_rank_error", "metric_key", "occupancy_timeline",
-    "rank_error_vs_envelope", "read_jsonl", "to_chrome_trace",
-    "trace_init", "trace_record", "write_chrome_trace", "write_jsonl",
+    "rank_error_vs_envelope", "read_jsonl", "sojourn_percentiles",
+    "span_init", "span_record", "span_tick", "starvation_flags",
+    "to_chrome_trace", "trace_init", "trace_record", "write_chrome_trace",
+    "write_jsonl",
 ]

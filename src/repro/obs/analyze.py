@@ -20,6 +20,13 @@ Two measurement levels:
 
 :func:`rank_error_vs_envelope` packages either measurement against the
 declared bound for export/plotting (the acceptance artifact of PR 6).
+
+The span layer (DESIGN.md § 7.6) adds the *latency* face of the same
+question: :func:`sojourn_percentiles` reads p50/p95/p99 sojourn out of an
+exported ``Spans.summary()`` histogram, :func:`max_wait_highwater` names
+the worst-served class, and :func:`starvation_flags` turns the per-class
+max-wait high-waters into starvation verdicts — cross-checkable against
+the sim fabric's host-side ``wait_stats()`` accounting.
 """
 
 from __future__ import annotations
@@ -31,8 +38,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from .trace import KEY_SENTINEL, RoundRecord
 
 __all__ = [
-    "imbalance_timeline", "key_inversions", "measured_rank_error",
-    "occupancy_timeline", "rank_error_vs_envelope",
+    "imbalance_timeline", "key_inversions", "max_wait_highwater",
+    "measured_rank_error", "occupancy_timeline", "rank_error_vs_envelope",
+    "sojourn_percentiles", "starvation_flags",
 ]
 
 
@@ -156,4 +164,85 @@ def rank_error_vs_envelope(envelope: int, *,
                                          default=0)
     if history is None and records is None:
         raise ValueError("need history and/or records to measure")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# span / sojourn analysis (DESIGN.md § 7.6)
+# ---------------------------------------------------------------------------
+
+
+def sojourn_percentiles(summary: Dict[str, Any],
+                        qs: Sequence[float] = (0.5, 0.95, 0.99),
+                        cls: Optional[int] = None) -> Dict[str, Optional[int]]:
+    """Sojourn percentiles (in rounds) from an exported ``Spans.summary()``
+    dict — the host twin of ``Spans.percentile`` for post-hoc analysis of
+    a jsonl "hist" record.  Log2 buckets resolve to their *upper* edge
+    (pessimistic: the reported pNN never understates the true quantile).
+    ``cls`` restricts to one histogram row; default aggregates all
+    classes.  Empty histograms yield ``None`` per quantile."""
+    hist = summary["hist"]
+    edges = summary["bucket_edges"]
+    rows = [hist[cls]] if cls is not None else list(hist)
+    agg = [sum(col) for col in zip(*rows)] if rows else []
+    total = sum(agg)
+    out: Dict[str, Optional[int]] = {}
+    for q in qs:
+        name = f"p{round(q * 100)}"
+        if total == 0:
+            out[name] = None
+            continue
+        target, c = q * total, 0
+        for b, n in enumerate(agg):
+            c += n
+            if c >= target:
+                out[name] = int(edges[b])
+                break
+    return out
+
+
+def max_wait_highwater(summary: Dict[str, Any]) -> Dict[str, Any]:
+    """Per-class max-wait high-water from ``Spans.summary()``: the device
+    scatter-max kept the worst sojourn each class ever saw; this names the
+    worst-served class (ties → lowest class index)."""
+    mw = [int(w) for w in summary["max_wait"]]
+    worst = max(range(len(mw)), key=lambda c: mw[c]) if mw else None
+    return {"per_class": mw, "worst_class": worst,
+            "high_water": max(mw, default=0)}
+
+
+def starvation_flags(summary: Dict[str, Any], *, factor: float = 8.0,
+                     wait_stats: Optional[Dict[str, float]] = None
+                     ) -> Dict[str, Any]:
+    """Starvation verdicts from the span histograms: a class is flagged
+    when its max-wait high-water exceeds ``factor`` × the all-class median
+    sojourn — some class waits far beyond typical service while the
+    engine keeps processing.  With ``wait_stats`` (a fabric
+    ``wait_stats()`` dict from the sim runtime, DESIGN.md § 5.4) the
+    device-side verdict is cross-checked against the host-side
+    accounting: both sides classify class 0 as urgent and classes ≥ 1 as
+    normal, and ``fabric["agrees"]`` reports whether they point the same
+    way on *which lane waits longer* — the scales differ (scheduler steps
+    vs engine rounds), so only the direction is comparable."""
+    p50 = sojourn_percentiles(summary, qs=(0.5,))["p50"]
+    mw = [int(w) for w in summary["max_wait"]]
+    threshold = factor * max(p50 or 0, 1)
+    flags = [w > threshold for w in mw]
+    out: Dict[str, Any] = {
+        "p50": p50, "factor": factor, "threshold": threshold,
+        "per_class": [{"cls": c, "max_wait": w, "starved": bool(f)}
+                      for c, (w, f) in enumerate(zip(mw, flags))],
+        "starved_classes": [c for c, f in enumerate(flags) if f],
+    }
+    if wait_stats is not None:
+        span_urgent = mw[0] if mw else 0
+        span_normal = max(mw[1:], default=0)
+        fab_urgent = float(wait_stats.get("urgent_max_wait", 0.0))
+        fab_normal = float(wait_stats.get("normal_max_wait", 0.0))
+        out["fabric"] = {
+            "urgent_max_wait": fab_urgent, "normal_max_wait": fab_normal,
+            "span_urgent_max": span_urgent, "span_normal_max": span_normal,
+            "agrees": (span_normal >= span_urgent)
+                      == (fab_normal >= fab_urgent),
+        }
     return out

@@ -1,0 +1,452 @@
+"""Task-lifecycle span planes: device-resident sojourn histograms for the
+fused engines (DESIGN.md § 7.6).
+
+TracePlane (§ 7.1) answers *round-level* questions — pops, pushes,
+occupancy per round.  SpanPlane answers the *task-level* one: how long did
+each item sit in the queue between enqueue and dequeue?  Queue sojourn
+time is the signal that separates a fair scheduler from a starving one,
+and the tail (p99) of its distribution is the serving-facing metric the
+ROADMAP's offered-load curves need.
+
+Mechanism (all device-resident, drained lazily at host syncs exactly like
+the trace planes):
+
+* **birth stamps** — every install stamps the item's *birth round* next
+  to the payload.  On the chip FIFO ring the stamp *packs into the
+  enq-flag plane* (``(birth << 1) | 1`` — the flag only ever carried 0/1,
+  so the stamp rides the flag scatter/gather the round already pays for:
+  zero extra ops, and ``enqs & 1`` recovers the unspanned plane
+  bit-exactly).  The heaps move a rider plane through
+  ``heap_batch.heap_planes``; the mesh queues thread a ``births=`` plane
+  through ``distqueue``.  Seeds keep flag 1 / zero stamps — born at
+  round 0 by construction.
+* **sojourn** — at dequeue the claim reads the stamp back and the round
+  loop computes ``sojourn = claim_round − birth_round``; a child published
+  in round r and claimed in round r' waits r' − r ≥ 1 rounds (the round
+  body is claim → step → publish, so same-round turnaround is impossible);
+  a seed claimed in round r waits exactly r.
+* **log2 histogram** — sojourns accumulate into per-class histogram rows
+  with exponent buckets: bucket 0 holds sojourn 0, bucket b ≥ 1 holds
+  [2^(b-1), 2^b − 1] (the top bucket is clamped and absorbs the tail).
+  The bucket index is exact integer arithmetic — ``32 − clz(s)`` — no
+  float log anywhere.
+* **per-class rows** — the priority engines bucket by a caller-supplied
+  ``class_of`` (key → class); the mesh engines default to one row per
+  shard.  A max-wait high-water per row rides along for starvation flags.
+* **flow ring** — a small ring of sampled ``(birth, claim, cls, ref)``
+  exemplar records — one per recorded round, newest kept — feeds the
+  Chrome-trace flow events that link an item's enqueue to its dequeue
+  (``obs.export``).
+
+Layout (all int32, static shapes, while_loop/shard_map compatible —
+the PR 6 plane discipline: few packed leaves, memoized zero-init,
+``spans=None`` compiles to the exact unspanned loop; all in-loop
+updates are elementwise so they fuse — no per-round scatter or reduce):
+
+* ``hist``   (L, K, NB+1) — *lane-major* accumulator: claim lane b owns
+  slice ``hist[b]``; columns 0..NB−1 are per-class bucket counts and
+  column NB is the per-class max-wait high-water (per-class totals fold
+  across lanes once per host drain, not per round)
+* ``flows``  (F, 4)  — flow ring rows ``(birth, claim, cls, ref)``
+* ``fcount`` ()      — rounds recorded into the ring (cursor; > F means
+  the oldest were overwritten — flagged at drain, never an error)
+* ``round``  ()      — the engine's *persistent* round cursor.  The loop
+  carry's own ``rounds`` counter resets to 0 every megaround chunk, but
+  birth stamps must compare across chunks, so the span plane carries the
+  global round index itself (``span_tick`` bumps it once per round).
+
+On the mesh engines the plane is *sharded* (leading shard axis): the
+relaxed priority mesh pops per-shard local heaps, so sojourn samples are
+shard-local by construction; ``Spans.drain`` merges at the host (hist
+sums, max-wait maxes, flow rings concatenate).  Everything recorded is
+derived from values the round already has — spans add zero collectives.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SpanPlane", "Spans", "bucket_edges", "bucket_of", "span_init",
+    "span_record", "span_tick",
+]
+
+DEFAULT_BUCKETS = 16
+
+
+class SpanPlane(NamedTuple):
+    """Device-resident sojourn accumulator (see module doc).  Packed:
+    4 pytree leaves, *lane-major* — each claim lane accumulates into its
+    own slice of one ``(L, K, NB+1)`` buffer holding both the bucket
+    counts (columns 0..NB−1) and the max-wait high-water (column NB),
+    so the whole histogram update is a single elementwise fusion — no
+    in-loop reduce, no scatter; per-class totals fold at host drain."""
+    hist: jax.Array      # (L, K, NB+1) int32 — buckets + max-wait column
+    flows: jax.Array     # (F, 4) int32 — (birth, claim, cls, ref) ring
+    fcount: jax.Array    # () int32 — flow rows ever written
+    round: jax.Array     # () int32 — persistent global round cursor
+
+    @property
+    def lanes(self) -> int:
+        return self.hist.shape[-3]
+
+    @property
+    def classes(self) -> int:
+        return self.hist.shape[-2]
+
+    @property
+    def buckets(self) -> int:
+        return self.hist.shape[-1] - 1
+
+    @property
+    def flow_capacity(self) -> int:
+        return self.flows.shape[-2]
+
+
+def span_init(classes: int, *, buckets: int = DEFAULT_BUCKETS,
+              flow_capacity: int = 64, lanes: int = 1) -> SpanPlane:
+    """Empty span plane with ``classes`` histogram rows and one
+    accumulator slice per claim lane (``lanes`` = the engine's batch)."""
+    k, nb, f, l = int(classes), int(buckets), int(flow_capacity), int(lanes)
+    if k < 1:
+        raise ValueError(f"span classes must be >= 1, got {k}")
+    if nb < 2:
+        raise ValueError(f"span buckets must be >= 2, got {nb}")
+    if f < 1:
+        raise ValueError(f"span flow_capacity must be >= 1, got {f}")
+    if l < 1:
+        raise ValueError(f"span lanes must be >= 1, got {l}")
+    return SpanPlane(
+        hist=jnp.zeros((l, k, nb + 1), jnp.int32),
+        flows=jnp.full((f, 4), -1, jnp.int32),
+        fcount=jnp.int32(0),
+        round=jnp.int32(0),
+    )
+
+
+def _bucket_ix(sojourn: jax.Array, buckets: int) -> jax.Array:
+    """Exact integer log2 bucket: 0 ⇔ sojourn 0, else 32 − clz(s) clamped
+    to the top bucket (which absorbs the tail)."""
+    s = jnp.maximum(jnp.asarray(sojourn, jnp.int32), 0)
+    bl = jnp.where(s > 0, jnp.int32(32) - jax.lax.clz(s), 0)
+    return jnp.minimum(bl, jnp.int32(buckets - 1))
+
+
+def span_record(sp: SpanPlane, cls, sojourn, valid, ref) -> SpanPlane:
+    """Accumulate one claim wave's sojourns.  Pure function of traced
+    values — callable inside ``lax.while_loop``/``shard_map`` bodies.
+    ``cls``/``sojourn``/``ref`` are (B,) int32 with B == ``sp.lanes``;
+    invalid lanes drop.
+
+    Everything here is deliberately *lane-major and elementwise* — lane
+    b owns slice ``hist[b]`` and folds a one-hot bucket increment plus
+    the max-wait column update into ONE elementwise pass over the
+    (L, K, NB+1) buffer — instead of the obvious scatter-adds or a
+    dense one-hot **sum** over lanes: on dispatch-bound backends every
+    scatter (which also copies its whole plane) and every cross-lane
+    reduce is a fusion-breaking kernel costing microseconds per round,
+    while pure elementwise updates fuse into the round body's existing
+    work (measured ≈ free on the fanout gate workload; per-class totals
+    fold once per drain on the host).  The flow ring keeps one
+    *exemplar* lifecycle per recorded round — lane 0's, when lane 0
+    claimed (the engines' claim masks are dense lane prefixes, so lane 0
+    is the first valid lane whenever the round claimed anything) — at
+    slot ``fcount % F`` (``fcount`` counts recorded rounds; overwrites
+    are sampling, never an error).  The exemplar's claim round is
+    ``sp.round`` and its birth is derived as ``round − sojourn``."""
+    l, k, nbp1 = sp.hist.shape
+    nb = nbp1 - 1
+    f = sp.flows.shape[0]
+    valid = jnp.asarray(valid).astype(bool)
+    if valid.shape[0] != l:
+        raise ValueError(f"span_record wave has {valid.shape[0]} lanes "
+                         f"but the plane was built for {l}")
+    s = jnp.maximum(jnp.asarray(sojourn, jnp.int32), 0)
+    cls = jnp.asarray(cls, jnp.int32)
+    ref = jnp.asarray(ref, jnp.int32)
+    row = jnp.clip(cls, 0, k - 1)
+    bucket = _bucket_ix(s, nb)
+    col = jnp.arange(nbp1, dtype=jnp.int32)[None, None, :]
+    rowm = ((row[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :])
+            & valid[:, None])[:, :, None]
+    # bucket ∈ [0, NB−1] never hits column NB, so the increment leaves
+    # the max-wait column alone and the where() below owns it
+    hist = sp.hist + (rowm & (bucket[:, None, None] == col)).astype(jnp.int32)
+    hist = jnp.where(rowm & (col == nb),
+                     jnp.maximum(sp.hist, s[:, None, None]), hist)
+    # flow exemplar: lane 0's lifecycle, dense row select into slot f%F
+    rec = valid[0]
+    entry = jnp.stack([sp.round - s[0], sp.round, row[0], ref[0]])
+    slotmask = (jnp.arange(f, dtype=jnp.int32) == sp.fcount % f) & rec
+    flows = jnp.where(slotmask[:, None], entry[None, :], sp.flows)
+    return SpanPlane(hist=hist, flows=flows,
+                     fcount=sp.fcount + rec.astype(jnp.int32),
+                     round=sp.round)
+
+
+def span_tick(sp: SpanPlane) -> SpanPlane:
+    """Advance the persistent round cursor — call once per round, after
+    recording and publishing (children stamped this round carry the
+    pre-tick cursor)."""
+    return sp._replace(round=sp.round + 1)
+
+
+def bucket_edges(buckets: int = DEFAULT_BUCKETS) -> np.ndarray:
+    """Inclusive upper edge of each bucket: ``[0, 1, 3, 7, ...,
+    2^(NB-1)−1]``.  The top bucket is clamped, so its edge is a lower
+    bound on the true maximum (pair with ``maxw`` for the exact worst
+    case)."""
+    b = np.arange(int(buckets))
+    return np.where(b == 0, 0, (1 << b) - 1).astype(np.int64)
+
+
+def bucket_of(sojourn: int, buckets: int = DEFAULT_BUCKETS) -> int:
+    """Host twin of the device bucket rule (tests oracle against it)."""
+    s = int(sojourn)
+    if s <= 0:
+        return 0
+    return min(s.bit_length(), int(buckets) - 1)
+
+
+class Spans:
+    """Host-side span collector for one engine instance.
+
+    Pass ``spans=Spans(...)`` to any fused round engine: the engine
+    carries a ``SpanPlane`` (and the matching birth-stamp planes) through
+    its megaround loop and drains it here at every host sync — the same
+    sync telemetry uses, so spans add zero extra syncs.  With
+    ``spans=None`` (every engine's default) the stamp planes never enter
+    the carry and the jitted loop is the exact unspanned graph
+    (bit-identity asserted by tests on all four fused engines).
+
+    ``classes`` sizes the histogram rows when ``class_of`` is given (a
+    traced ``values_or_keys -> class index`` function evaluated inside
+    the loop); without ``class_of`` the chip engines use one row and the
+    mesh engines use one row per shard.  The in-loop histogram is
+    cumulative within a run, so ``drain`` *replaces* the current-run
+    snapshot; ``begin_run`` banks the snapshot into cross-run totals.
+
+    ``registry`` (a ``MetricsRegistry``; one is created when not given)
+    receives ``<engine>.sojourn_p50/p95/p99`` and per-class
+    ``<engine>.max_wait[cls=c]`` gauges at each sync.
+    """
+
+    def __init__(self, *, classes: int = 1,
+                 buckets: int = DEFAULT_BUCKETS, flow_capacity: int = 64,
+                 engine: str = "fused", registry=None,
+                 class_of: Optional[Callable] = None) -> None:
+        if int(classes) < 1:
+            raise ValueError(f"span classes must be >= 1, got {classes}")
+        if int(buckets) < 2:
+            raise ValueError(f"span buckets must be >= 2, got {buckets}")
+        if int(flow_capacity) < 1:
+            raise ValueError(
+                f"span flow_capacity must be >= 1, got {flow_capacity}")
+        self.classes = int(classes)
+        self.buckets = int(buckets)
+        self.flow_capacity = int(flow_capacity)
+        self.engine = engine
+        self.class_of = class_of
+        if registry is None:
+            from .metrics import MetricsRegistry
+            registry = MetricsRegistry()
+        self.registry = registry
+        self.reset()
+
+    def reset(self) -> None:
+        self._hist_total: Optional[np.ndarray] = None
+        self._maxw_total: Optional[np.ndarray] = None
+        self._flows_total: List[Dict[str, int]] = []
+        self._rounds_total = 0
+        self._snap = None          # latest drained host plane (this run)
+        self._snap_dev = None      # latest undrained device plane (lazy)
+        self._gauges_stale = False
+        self._dropped = 0
+
+    # -- engine-facing hooks --------------------------------------------------
+
+    def begin_run(self) -> None:
+        """Called by the engine at the top of ``run``: bank the previous
+        run's snapshot into the cross-run totals (a fresh plane restarts
+        the in-loop accumulation from zero)."""
+        self._bank()
+
+    def drain(self, sp: SpanPlane, *, wall_time: float = None) -> None:
+        """REPLACE the current-run snapshot with ``sp`` (the in-loop
+        histogram is cumulative within a run).  *Lazy*, like the trace
+        planes: the device plane is immutable, so this just holds a
+        reference — the host transfer, lane/shard fold, and flow-ring
+        decode all happen on first host read (``_materialize``), keeping
+        the engine's sync path free of host math."""
+        del wall_time                  # kept for drain-signature symmetry
+        self._snap_dev = sp
+
+    def finish(self, stats: Dict[str, int]) -> None:
+        """Mark the span gauges stale — published (stable keys,
+        DESIGN.md § 7.2) on the next host read, alongside the lazy
+        drain's fold."""
+        del stats                      # engine stats go through Telemetry
+        self._gauges_stale = True
+
+    def _materialize(self) -> None:
+        """Fold the lazily-held device plane into the host snapshot and
+        flush stale gauges.  Idempotent; every host accessor calls it.
+        A stacked plane (leading shard axis — the mesh engines) is
+        merged here: hist rows sum, max-waits max, flow rings
+        concatenate; the packed (L, K, NB+1) buffer splits into bucket
+        counts and the max-wait column."""
+        if self._snap_dev is not None:
+            host = jax.device_get(self._snap_dev)
+            self._snap_dev = None
+            acc = np.asarray(host.hist, np.int64)
+            flows = np.asarray(host.flows, np.int64)
+            fcount = np.asarray(host.fcount, np.int64)
+            rnd = np.asarray(host.round, np.int64)
+            k, nbp1 = acc.shape[-2:]
+            acc = acc.reshape(-1, k, nbp1)
+            hist2 = acc[..., :nbp1 - 1].sum(0)
+            maxw2 = acc[..., nbp1 - 1].max(0)
+            if flows.ndim == 3:        # sharded: (S, F, 4) flow rings
+                rows: List[Dict[str, int]] = []
+                dropped = 0
+                for s in range(flows.shape[0]):
+                    r, d = self._ring_rows(flows[s], int(fcount[s]))
+                    rows.extend(r)
+                    dropped += d
+                self._snap = (hist2, maxw2, rows, int(rnd.reshape(-1)[0]),
+                              dropped)
+            else:
+                rows, dropped = self._ring_rows(flows, int(fcount))
+                self._snap = (hist2, maxw2, rows, int(rnd), dropped)
+            self._dropped = self._snap[4]
+        if self._gauges_stale:
+            self._gauges_stale = False  # before publish: re-entry guard
+            from .metrics import metric_key
+            for q, name in ((0.50, "sojourn_p50"), (0.95, "sojourn_p95"),
+                            (0.99, "sojourn_p99")):
+                p = self.percentile(q)
+                if p is not None:
+                    self.registry.gauge(f"{self.engine}.{name}", int(p))
+            for c, w in enumerate(self.max_wait):
+                self.registry.gauge(
+                    metric_key(self.engine, "max_wait", cls=c), int(w))
+
+    @property
+    def dropped_flows(self) -> int:
+        """Flow-ring overwrites in the current run (sampling, never an
+        error)."""
+        self._materialize()
+        return self._dropped
+
+    # -- host analysis surface ------------------------------------------------
+
+    @staticmethod
+    def _ring_rows(flows: np.ndarray, fcount: int):
+        f = flows.shape[0]
+        keep = min(fcount, f)
+        dropped = max(fcount - f, 0)
+        slots = np.arange(fcount - keep, fcount) % f if keep else []
+        rows = [{"birth": int(b), "claim": int(c), "cls": int(k),
+                 "ref": int(r)} for b, c, k, r in flows[slots]]
+        return rows, dropped
+
+    def _bank(self) -> None:
+        self._materialize()
+        if self._snap is None:
+            return
+        hist, maxw, flows, rounds, _ = self._snap
+        if self._hist_total is None:
+            self._hist_total = hist.copy()
+            self._maxw_total = maxw.copy()
+        else:
+            if hist.shape != self._hist_total.shape:
+                raise ValueError(
+                    f"span plane shape changed across runs: "
+                    f"{hist.shape} vs {self._hist_total.shape}")
+            self._hist_total += hist
+            self._maxw_total = np.maximum(self._maxw_total, maxw)
+        self._flows_total.extend(flows)
+        self._rounds_total += rounds
+        self._snap = None
+
+    @property
+    def hist(self) -> np.ndarray:
+        """Cross-run (K, NB) bucket counts (banked totals + this run)."""
+        self._materialize()
+        parts = [p for p in (self._hist_total,
+                             None if self._snap is None else self._snap[0])
+                 if p is not None]
+        if not parts:
+            return np.zeros((self.classes, self.buckets), np.int64)
+        out = parts[0].copy()
+        for p in parts[1:]:
+            out += p
+        return out
+
+    @property
+    def max_wait(self) -> np.ndarray:
+        """Cross-run (K,) per-class max sojourn high-water."""
+        self._materialize()
+        parts = [p for p in (self._maxw_total,
+                             None if self._snap is None else self._snap[1])
+                 if p is not None]
+        if not parts:
+            return np.zeros((self.classes,), np.int64)
+        out = parts[0].copy()
+        for p in parts[1:]:
+            out = np.maximum(out, p)
+        return out
+
+    @property
+    def flows(self) -> List[Dict[str, int]]:
+        """Sampled flow records ``{birth, claim, cls, ref}`` (newest kept
+        per run, banked runs first)."""
+        self._materialize()
+        out = list(self._flows_total)
+        if self._snap is not None:
+            out.extend(self._snap[2])
+        return out
+
+    @property
+    def total(self) -> int:
+        """Total sojourns observed (histogram mass)."""
+        return int(self.hist.sum())
+
+    def percentile(self, q: float, cls: Optional[int] = None
+                   ) -> Optional[int]:
+        """Sojourn quantile upper bound in rounds: the inclusive upper
+        edge of the smallest bucket whose CDF reaches ``q`` (``None``
+        when nothing was observed).  ``cls`` restricts to one class row;
+        the default aggregates all rows."""
+        h = self.hist
+        row = h.sum(0) if cls is None else h[int(cls)]
+        total = int(row.sum())
+        if total == 0:
+            return None
+        cdf = np.cumsum(row)
+        b = int(np.searchsorted(cdf, q * total, side="left"))
+        b = min(b, len(row) - 1)
+        return int(bucket_edges(len(row))[b])
+
+    def summary(self) -> Dict[str, Any]:
+        """JSON-ready snapshot: per-class histograms, max waits, and the
+        aggregate p50/p95/p99 — the shape ``obs.export`` emits."""
+        edges = bucket_edges(self.buckets).tolist()
+        h = self.hist
+        w = self.max_wait
+        return {
+            "classes": int(h.shape[0]),
+            "buckets": int(h.shape[1]),
+            "bucket_edges": edges,
+            "hist": h.tolist(),
+            "max_wait": w.tolist(),
+            "total": int(h.sum()),
+            "p50": self.percentile(0.50),
+            "p95": self.percentile(0.95),
+            "p99": self.percentile(0.99),
+        }

@@ -38,10 +38,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.heap_batch import (KEY_INF as HEAP_KEY_INF, OP_DELMIN,
-                                  OP_INSERT, OP_NOP, heap_apply)
+                                  OP_INSERT, OP_NOP, heap_apply, heap_planes)
 from ..kernels.pallas_env import resolve_interpret
-from ..kernels.ring_slots import ring_dequeue, ring_enqueue
+from ..kernels.ring_slots import (deq_planes, enq_planes, ring_dequeue,
+                                  ring_enqueue)
 from ..kernels.wavefaa import LANES, wavefaa
+from ..obs.spans import Spans, span_init, span_record, span_tick
 from ..obs.trace import (SyncPoint, Telemetry, masked_min_max, trace_init,
                          trace_record)
 
@@ -134,12 +136,15 @@ class _FusedEngine:
     sync_every: int
     capacity: int
     telemetry: Optional[Telemetry]
+    spans: Optional[Spans] = None
 
     def _reset(self) -> None:
         self.stats: Dict[str, int] = {}
         self.sync_log: List[SyncPoint] = []
         if self.telemetry is not None:
             self.telemetry.begin_run()
+        if self.spans is not None:
+            self.spans.begin_run()
 
     def _tel_init(self, shards: int = 1):
         """Fresh plane for one run (telemetry on), else None.  The zero
@@ -158,6 +163,53 @@ class _FusedEngine:
         """Current TracePlane from the chunk state (subclasses with
         telemetry enabled override)."""
         raise NotImplementedError
+
+    def _span_init(self, shards: int = 1, *, stacked: bool = False):
+        """Fresh SpanPlane for one run (spans on), else None — memoized
+        like ``_tel_init`` (same zero-init budget rule, DESIGN.md § 7.6).
+        ``stacked=True`` (the mesh engines) broadcasts a leading shard
+        axis for ``P(axis)``-sharded planes; with no ``class_of`` the
+        mesh histogram defaults to one row per shard."""
+        if self.spans is None:
+            return None
+        rows = self.spans.classes
+        if stacked and self.spans.class_of is None:
+            rows = shards
+        key = (rows, self.spans.buckets, self.spans.flow_capacity,
+               shards if stacked else 0, self.batch)
+        if getattr(self, "_span_zero_key", None) != key:
+            z = span_init(rows, buckets=self.spans.buckets,
+                          flow_capacity=self.spans.flow_capacity,
+                          lanes=self.batch)
+            if stacked:
+                z = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x[None], (shards,) + x.shape),
+                    z)
+            self._span_zero = z
+            self._span_zero_key = key
+        return self._span_zero
+
+    def _births_init(self, shape):
+        """Fresh zeroed birth-stamp plane (spans on), else None — memoized;
+        zero stamps make seed items born at round 0 by construction."""
+        if self.spans is None:
+            return None
+        if getattr(self, "_births_zero_shape", None) != shape:
+            self._births_zero = jnp.zeros(shape, jnp.int32)
+            self._births_zero_shape = shape
+        return self._births_zero
+
+    def _span_plane(self):
+        """Current SpanPlane from the chunk state (subclasses with spans
+        enabled override)."""
+        raise NotImplementedError
+
+    def _span_cls(self, keys_or_vals, default):
+        """Per-lane class row: the collector's ``class_of`` applied to the
+        popped keys (priority) / payloads (FIFO), else ``default``."""
+        if self.spans is not None and self.spans.class_of is not None:
+            return jnp.asarray(self.spans.class_of(keys_or_vals), jnp.int32)
+        return default
 
     def _drive(self, chunk_fn, max_rounds: int, what: str) -> None:
         """``chunk_fn(limit)`` advances internal state by up to ``limit``
@@ -184,6 +236,9 @@ class _FusedEngine:
                                      sync=host_syncs - 1, wall_time=now)
                 self.telemetry.heartbeat(point)
                 self.telemetry.finish(self.stats)
+            if self.spans is not None:
+                self.spans.drain(self._span_plane(), wall_time=now)
+                self.spans.finish(self.stats)
             if oflow:
                 raise RuntimeError(
                     f"{what} overflow: occupancy {occ} + spawned children "
@@ -206,7 +261,8 @@ class FusedRounds(_FusedEngine):
 
     def __init__(self, step_fn: StepFn, *, capacity_log2: int = 10,
                  batch: int = 64, interpret=None, sync_every: int = 0,
-                 telemetry: Optional[Telemetry] = None) -> None:
+                 telemetry: Optional[Telemetry] = None,
+                 spans: Optional[Spans] = None) -> None:
         self.step_fn = jax.jit(step_fn)
         self.capacity_log2 = capacity_log2
         self.nslots_log2 = capacity_log2 + 1
@@ -218,32 +274,44 @@ class FusedRounds(_FusedEngine):
         self.interpret = resolve_interpret(interpret)
         self.sync_every = sync_every
         self.telemetry = telemetry
+        self.spans = spans
         self._reset()
         self._megaround = jax.jit(self._megaround_impl)
 
     # -- the jitted megaround: up to `limit` rounds entirely on device ------
-    # (tp = the optional TracePlane; None compiles to the exact untraced
-    # loop — the telemetry branches below are python-level)
+    # (tp = the optional TracePlane, sp/births = the optional SpanPlane +
+    # birth-stamp plane; None slots are empty pytrees, so the default call
+    # compiles to the exact untraced loop — all obs branches below are
+    # python-level)
     def _megaround_impl(self, planes, head, tail, acc, processed, spawned,
-                        max_occ, limit, tp=None):
+                        max_occ, limit, tp=None, sp=None, births=None):
         batch, capacity = self.batch, self.capacity
         nslots_log2, interp = self.nslots_log2, self.interpret
         lane = jnp.arange(batch, dtype=jnp.int32)
         tel = tp is not None
+        sps = sp is not None
 
         def body(carry):
-            if tel:
-                (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
-                 max_occ, oflow, rounds, tp) = carry
-            else:
-                (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
-                 max_occ, oflow, rounds) = carry
-                tp = None
+            (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
+             max_occ, oflow, rounds, tp, sp, births) = carry
             k = jnp.minimum(jnp.int32(batch), tail - head)
             dtickets = jnp.where(lane < k, head + lane, -1)
-            cyc, saf, enq, idx, vals, ok = ring_dequeue(
-                cyc, saf, enq, idx, dtickets, nslots_log2=nslots_log2,
-                idx_bot=IDX_BOT, interpret=interp)
+            if sps:
+                # span path inlines the pure-jnp twin of the dequeue kernel
+                # in packed-flag mode: the birth stamp lives in the high
+                # bits of the enq-flag plane, so it rides the flag
+                # gather/scatter the round already pays for — zero extra
+                # ops, zero extra carry (every scatter here copies its
+                # whole plane per round, so a separate stamp plane costs
+                # real microseconds; measured in DESIGN.md § 7.6)
+                cyc, saf, enq, idx, vals, okw, bout = deq_planes(
+                    cyc, saf, enq, idx, dtickets, nslots_log2=nslots_log2,
+                    idx_bot=IDX_BOT, birth_packed=True)
+                ok = okw.astype(bool)
+            else:
+                cyc, saf, enq, idx, vals, ok = ring_dequeue(
+                    cyc, saf, enq, idx, dtickets, nslots_log2=nslots_log2,
+                    idx_bot=IDX_BOT, interpret=interp)
             head = head + k
             acc, cvals, cmask = self.step_fn(acc, vals, ok)
             cm = jnp.broadcast_to(cmask.astype(bool), cvals.shape).reshape(-1)
@@ -256,34 +324,39 @@ class FusedRounds(_FusedEngine):
             n_child = newctr[0] - tail
             over = (tail + n_child - head) > capacity
             etickets = jnp.where(over, -1, etickets)   # suppress the install
-            cyc, saf, enq, idx, _ = ring_enqueue(
-                cyc, saf, enq, idx, etickets, cv, head,
-                nslots_log2=nslots_log2, idx_bot=IDX_BOT, interpret=interp)
+            if sps:
+                cyc, saf, enq, idx, _ = enq_planes(
+                    cyc, saf, enq, idx, etickets, cv, head,
+                    nslots_log2=nslots_log2, idx_bot=IDX_BOT,
+                    birth_round=sp.round)
+            else:
+                cyc, saf, enq, idx, _ = ring_enqueue(
+                    cyc, saf, enq, idx, etickets, cv, head,
+                    nslots_log2=nslots_log2, idx_bot=IDX_BOT, interpret=interp)
             tail = jnp.where(over, tail, newctr[0])
-            out = (cyc, saf, enq, idx, head, tail, acc,
-                   processed + k, spawned + jnp.where(over, 0, n_child),
-                   jnp.maximum(max_occ, tail - head), oflow | over,
-                   rounds + 1)
             if tel:
                 mn, mx = masked_min_max(vals, ok)   # FIFO: payload extrema
                 tp = trace_record(tp, tp.count, k,
                                   jnp.where(over, 0, n_child), tail - head,
                                   mn, mx, over)
-                out = out + (tp,)
-            return out
+            if sps:
+                cls = self._span_cls(vals, jnp.zeros_like(vals))
+                sp = span_record(sp, cls, sp.round - bout, ok, vals)
+                sp = span_tick(sp)
+            return (cyc, saf, enq, idx, head, tail, acc,
+                    processed + k, spawned + jnp.where(over, 0, n_child),
+                    jnp.maximum(max_occ, tail - head), oflow | over,
+                    rounds + 1, tp, sp, births)
 
         def cond(carry):
             head, tail, oflow, rounds = carry[4], carry[5], carry[10], carry[11]
             return (tail - head > 0) & (~oflow) & (rounds < limit)
 
         carry = planes + (head, tail, acc, processed, spawned, max_occ,
-                          jnp.bool_(False), jnp.int32(0))
-        if tel:
-            carry = carry + (tp,)
+                          jnp.bool_(False), jnp.int32(0), tp, sp, births)
         out = jax.lax.while_loop(cond, body, carry)
-        res = (out[:4], out[4], out[5], out[6], out[7], out[8], out[9],
-               out[10], out[11])
-        return res + (out[12],) if tel else res
+        return (out[:4], out[4], out[5], out[6], out[7], out[8], out[9],
+                out[10], out[11], out[12], out[13], out[14])
 
     def _seed(self, st: RingState, initial: np.ndarray) -> RingState:
         n = len(initial)
@@ -322,24 +395,28 @@ class FusedRounds(_FusedEngine):
                  jnp.int32(st.head), jnp.int32(st.tail), acc,
                  jnp.int32(0), jnp.int32(0),                # processed/spawned
                  jnp.int32(st.tail - st.head)]              # max_occ
-        tel = [self._tel_init()]
-        self._tel_plane = lambda: tel[0]
+        # obs state: [TracePlane, SpanPlane, births] — None slots are empty
+        # pytrees, so the all-None call is the exact unspanned graph.  The
+        # FIFO ring keeps births=None: its stamps pack into the enq-flag
+        # plane (seeds installed by the kernel carry flag 1 ⇔ birth 0)
+        ext = [self._tel_init(), self._span_init(), None]
+        self._tel_plane = lambda: ext[0]
+        self._span_plane = lambda: ext[1]
 
         def chunk_fn(limit):
-            if tel[0] is None:
-                (state[0], state[1], state[2], state[3], state[4], state[5],
-                 state[6], oflow, r) = self._megaround(*state,
-                                                       jnp.int32(limit))
-            else:
-                (state[0], state[1], state[2], state[3], state[4], state[5],
-                 state[6], oflow, r, tel[0]) = self._megaround(
-                    *state, jnp.int32(limit), tel[0])
+            (state[0], state[1], state[2], state[3], state[4], state[5],
+             state[6], oflow, r, ext[0], ext[1], ext[2]) = self._megaround(
+                *state, jnp.int32(limit), ext[0], ext[1], ext[2])
             occ = int(state[2] - state[1])              # THE host sync
             return (occ, int(r), bool(oflow), int(state[4]), int(state[5]),
                     int(state[6]))
 
         self._drive(chunk_fn, max_rounds, "ring")
         planes, head, tail, acc = state[0], state[1], state[2], state[3]
+        if self.spans is not None:
+            # strip packed birth stamps: the enq-flag plane is bit-identical
+            # to the unspanned run's once reduced back to its low bit
+            planes = (planes[0], planes[1], planes[2] & 1, planes[3])
         return acc, RingState(*planes, int(head), int(tail))
 
 
@@ -353,7 +430,8 @@ class FusedPriorityRounds(_FusedEngine):
     def __init__(self, step_fn: PriorityStepFn, *, capacity_log2: int = 10,
                  batch: int = 64, arity_log2: int = 2, interpret=None,
                  sync_every: int = 0,
-                 telemetry: Optional[Telemetry] = None) -> None:
+                 telemetry: Optional[Telemetry] = None,
+                 spans: Optional[Spans] = None) -> None:
         self.step_fn = jax.jit(step_fn)
         self.capacity_log2 = capacity_log2
         self.capacity = 1 << capacity_log2
@@ -365,31 +443,37 @@ class FusedPriorityRounds(_FusedEngine):
         self.interpret = resolve_interpret(interpret)
         self.sync_every = sync_every
         self.telemetry = telemetry
+        self.spans = spans
         self._reset()
         self._megaround = jax.jit(self._megaround_impl)
 
     def _megaround_impl(self, keys, vals, size, acc, processed, spawned,
-                        max_occ, limit, tp=None):
+                        max_occ, limit, tp=None, sp=None, births=None):
         batch, capacity = self.batch, self.capacity
         cap_log2, arity_log2 = self.capacity_log2, self.arity_log2
         interp = self.interpret
         lane = jnp.arange(batch, dtype=jnp.int32)
         pad = jnp.full((batch,), HEAP_KEY_INF, jnp.int32)   # loop-invariant
         tel = tp is not None
+        sps = sp is not None
 
         def body(carry):
-            if tel:
-                (keys, vals, size, acc, processed, spawned, max_occ, oflow,
-                 rounds, tp) = carry
-            else:
-                (keys, vals, size, acc, processed, spawned, max_occ, oflow,
-                 rounds) = carry
-                tp = None
+            (keys, vals, size, acc, processed, spawned, max_occ, oflow,
+             rounds, tp, sp, births) = carry
             k = jnp.minimum(jnp.int32(batch), size)
             pop_ops = jnp.where(lane < k, OP_DELMIN, OP_NOP)
-            keys, vals, size, outk, outv, ok = heap_apply(
-                keys, vals, size, pop_ops, pad, pad, cap_log2=cap_log2,
-                arity_log2=arity_log2, interpret=interp)
+            if sps:
+                # span path inlines the rider-capable pure-jnp heap twin
+                # (bit-identical heap evolution to the kernel; the rider
+                # plane carries the birth stamps through every sift)
+                (keys, vals, size, outk, outv, ok, births,
+                 bout) = heap_planes(
+                    keys, vals, size, pop_ops, pad, pad, cap_log2=cap_log2,
+                    arity_log2=arity_log2, rider=births)
+            else:
+                keys, vals, size, outk, outv, ok = heap_apply(
+                    keys, vals, size, pop_ops, pad, pad, cap_log2=cap_log2,
+                    arity_log2=arity_log2, interpret=interp)
             acc, ckeys, cvals, cmask = self.step_fn(acc, outk, outv, ok)
             cm = jnp.broadcast_to(cmask.astype(bool),
                                   ckeys.shape).reshape(-1)
@@ -398,28 +482,34 @@ class FusedPriorityRounds(_FusedEngine):
             n_child = cm.sum(dtype=jnp.int32)
             over = size + n_child > capacity
             ins_ops = jnp.where(cm & ~over, OP_INSERT, OP_NOP)
-            keys, vals, size, _, _, _ = heap_apply(
-                keys, vals, size, ins_ops, ckf, cvf, cap_log2=cap_log2,
-                arity_log2=arity_log2, interpret=interp)
-            out = (keys, vals, size, acc, processed + k,
-                   spawned + jnp.where(over, 0, n_child),
-                   jnp.maximum(max_occ, size), oflow | over, rounds + 1)
+            if sps:
+                keys, vals, size, _, _, _, births, _ = heap_planes(
+                    keys, vals, size, ins_ops, ckf, cvf, cap_log2=cap_log2,
+                    arity_log2=arity_log2, rider=births, oprider=sp.round)
+            else:
+                keys, vals, size, _, _, _ = heap_apply(
+                    keys, vals, size, ins_ops, ckf, cvf, cap_log2=cap_log2,
+                    arity_log2=arity_log2, interpret=interp)
             if tel:
                 mn, mx = masked_min_max(outk, ok)    # popped-key extrema
                 tp = trace_record(tp, tp.count, k,
                                   jnp.where(over, 0, n_child), size,
                                   mn, mx, over)
-                out = out + (tp,)
-            return out
+            if sps:
+                cls = self._span_cls(outk, jnp.zeros_like(outk))
+                sp = span_record(sp, cls, sp.round - bout, ok, outv)
+                sp = span_tick(sp)
+            return (keys, vals, size, acc, processed + k,
+                    spawned + jnp.where(over, 0, n_child),
+                    jnp.maximum(max_occ, size), oflow | over, rounds + 1,
+                    tp, sp, births)
 
         def cond(carry):
             size, oflow, rounds = carry[2], carry[7], carry[8]
             return (size > 0) & (~oflow) & (rounds < limit)
 
         carry = (keys, vals, size, acc, processed, spawned, max_occ,
-                 jnp.bool_(False), jnp.int32(0))
-        if tel:
-            carry = carry + (tp,)
+                 jnp.bool_(False), jnp.int32(0), tp, sp, births)
         return jax.lax.while_loop(cond, body, carry)
 
     def _seed(self, st: HeapState, ik: np.ndarray,
@@ -456,18 +546,15 @@ class FusedPriorityRounds(_FusedEngine):
         state = [st.keys, st.vals, jnp.asarray(st.size, jnp.int32), acc,
                  jnp.int32(0), jnp.int32(0),                # processed/spawned
                  jnp.int32(st.size)]                        # max_occ
-        tel = [self._tel_init()]
-        self._tel_plane = lambda: tel[0]
+        ext = [self._tel_init(), self._span_init(),
+               self._births_init((self.capacity,))]
+        self._tel_plane = lambda: ext[0]
+        self._span_plane = lambda: ext[1]
 
         def chunk_fn(limit):
-            if tel[0] is None:
-                (state[0], state[1], state[2], state[3], state[4], state[5],
-                 state[6], oflow, r) = self._megaround(*state,
-                                                       jnp.int32(limit))
-            else:
-                (state[0], state[1], state[2], state[3], state[4], state[5],
-                 state[6], oflow, r, tel[0]) = self._megaround(
-                    *state, jnp.int32(limit), tel[0])
+            (state[0], state[1], state[2], state[3], state[4], state[5],
+             state[6], oflow, r, ext[0], ext[1], ext[2]) = self._megaround(
+                *state, jnp.int32(limit), ext[0], ext[1], ext[2])
             occ = int(state[2])                         # THE host sync
             return (occ, int(r), bool(oflow), int(state[4]), int(state[5]),
                     int(state[6]))

@@ -84,6 +84,7 @@ from ..core.distqueue import (DistHeapState, DistQueueState, claim_schedule,
 from ..kernels.heap_batch import (KEY_INF as HEAP_KEY_INF, heap_insert_masked,
                                   heap_pop_count)
 from ..kernels.ring_slots import enq_planes
+from ..obs.spans import Spans, span_record, span_tick
 from ..obs.trace import (SyncPoint, Telemetry, masked_min_max, trace_record)
 from .fusedrounds import IDX_BOT, PriorityStepFn, StepFn, _FusedEngine
 
@@ -97,7 +98,8 @@ class _MeshEngineBase(_FusedEngine):
     def __init__(self, step_fn: StepFn, *, mesh, axis: str = "data",
                  capacity_log2: int = 10, batch: int = 64,
                  sync_every: int = 0,
-                 telemetry: Optional[Telemetry] = None) -> None:
+                 telemetry: Optional[Telemetry] = None,
+                 spans: Optional[Spans] = None) -> None:
         self.step_fn = step_fn
         self.mesh = mesh
         self.axis = axis
@@ -112,6 +114,7 @@ class _MeshEngineBase(_FusedEngine):
                 f"capacity {self.capacity}")
         self.sync_every = sync_every
         self.telemetry = telemetry
+        self.spans = spans
         self._reset()
 
     # -- seeding (host-side, before shard_map: planes are plain jnp) --------
@@ -138,36 +141,55 @@ class _MeshEngineBase(_FusedEngine):
                               head=state.head)
 
     # -- one mesh round, shared verbatim by both engines --------------------
-    def _round(self, state: DistQueueState, acc, tel: bool = False):
+    def _round(self, state: DistQueueState, acc, tel: bool = False,
+               sp=None, births=None):
         """claim (no collective) → step → publish (one psum).  Returns
         (state, acc, k, total, over); with ``tel`` (the telemetry path) an
         extra ``(shard_pops, shard_pushes, min_val, max_val)`` tuple of
         replicated per-round record fields rides along — all derived from
-        already-replicated values, zero extra collectives."""
+        already-replicated values, zero extra collectives.  With ``sp``
+        (the span path) the claim reads birth stamps, the publish stamps
+        ``sp.round`` into the replicated births plane, and each shard
+        records its own local claims into its sharded SpanPlane row —
+        ``(sp, births)`` trail the return tuple (DESIGN.md §7.6)."""
+        sps = sp is not None
         occ = state.tail - state.head
         k = jnp.minimum(occ, jnp.int32(self.shards * self.batch))
+        cr = dist_claim_round(state, k, self.batch, self.axis,
+                              with_grid=tel, births=births)
+        state, vals, ok = cr[0], cr[1], cr[2]
+        i = 3
         if tel:
-            state, vals, ok, (gvals, gok) = dist_claim_round(
-                state, k, self.batch, self.axis, with_grid=True)
-        else:
-            state, vals, ok = dist_claim_round(state, k, self.batch,
-                                               self.axis)
+            gvals, gok = cr[i]
+            i += 1
+        if sps:
+            bout = cr[i]
         acc, cvals, cmask = self.step_fn(acc, vals, ok)
         cm = jnp.broadcast_to(cmask.astype(bool), cvals.shape).reshape(-1)
         cv = cvals.reshape(-1).astype(jnp.int32)
+        pr = dist_publish_round(
+            state, cv, cm.astype(jnp.int32), self.axis,
+            capacity=self.capacity, with_counts=tel, births=births,
+            birth_round=sp.round if sps else None)
+        state, _, total, over = pr[0], pr[1], pr[2], pr[3]
+        j = 4
+        out = (state, acc, k, total, over)
         if tel:
-            state, _, total, over, pushes = dist_publish_round(
-                state, cv, cm.astype(jnp.int32), self.axis,
-                capacity=self.capacity, with_counts=True)
+            pushes = pr[j]
+            j += 1
             cs_active, _ = claim_schedule(k, self.shards, self.batch)
             pops = cs_active.reshape(self.shards, self.batch).sum(
                 1, dtype=jnp.int32)
             mn, mx = masked_min_max(gvals, gok)   # FIFO: payload extrema
-            return state, acc, k, total, over, (pops, pushes, mn, mx)
-        state, _, total, over = dist_publish_round(
-            state, cv, cm.astype(jnp.int32), self.axis,
-            capacity=self.capacity)
-        return state, acc, k, total, over
+            out = out + ((pops, pushes, mn, mx),)
+        if sps:
+            births = pr[j]
+            me = jax.lax.axis_index(self.axis)
+            cls = self._span_cls(vals, jnp.full_like(vals, me))
+            sp = span_record(sp, cls, sp.round - bout, ok, vals)
+            sp = span_tick(sp)
+            out = out + (sp, births)
+        return out
 
     def _initial_carry(self, state: DistQueueState, acc):
         acc = jax.tree_util.tree_map(jnp.asarray, acc)
@@ -186,10 +208,12 @@ class FusedMeshRounds(_MeshEngineBase):
                  capacity_log2: int = 10, batch: int = 64,
                  sync_every: int = 0,
                  combine: Callable[[Any], Any] = None,
-                 telemetry: Optional[Telemetry] = None) -> None:
+                 telemetry: Optional[Telemetry] = None,
+                 spans: Optional[Spans] = None) -> None:
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
-                         sync_every=sync_every, telemetry=telemetry)
+                         sync_every=sync_every, telemetry=telemetry,
+                         spans=spans)
         self.combine = combine
         # in shard_map, P() = replicated operand, P(axis) = sharded; a bare
         # P serves as a pytree-prefix spec for the whole acc subtree.  acc
@@ -197,11 +221,15 @@ class FusedMeshRounds(_MeshEngineBase):
         # chunk calls (sync_every heartbeats) compose.  The TracePlane (when
         # telemetry is on) is replicated — every record field is derived
         # from replicated values, so every shard writes the same plane.
-        tel = telemetry is not None
+        # Trailing slots (tp, sp, births) always exist in the specs: None is
+        # a valid pytree leaf-set for any spec, and the all-None call
+        # compiles to the exact unspanned/untraced graph.  The SpanPlane is
+        # sharded (each shard records only its local claims); the births
+        # plane mirrors the ring field planes — replicated.
         in_specs = (P(), P(), P(), P(), P(), P(), P(self.axis), P(), P(),
-                    P(), P()) + ((P(),) if tel else ())
+                    P(), P()) + (P(), P(self.axis), P())
         out_specs = (P(), P(), P(), P(), P(), P(), P(self.axis),
-                     P(), P(), P(), P(), P()) + ((P(),) if tel else ())
+                     P(), P(), P(), P(), P()) + (P(), P(self.axis), P())
         self._megaround = jax.jit(shard_map(
             self._megaround_impl, mesh=self.mesh,
             in_specs=in_specs, out_specs=out_specs,
@@ -209,49 +237,51 @@ class FusedMeshRounds(_MeshEngineBase):
 
     # -- the jitted megaround: up to `limit` rounds entirely on device ------
     def _megaround_impl(self, cyc, saf, enq, idx, head, tail, acc,
-                        processed, spawned, max_occ, limit, tp=None):
+                        processed, spawned, max_occ, limit,
+                        tp=None, sp=None, births=None):
         acc = jax.tree_util.tree_map(lambda x: x[0], acc)
         tel = tp is not None
+        sps = sp is not None
+        if sps:   # sharded SpanPlane arrives stacked (1, ...) per shard
+            sp = jax.tree_util.tree_map(lambda x: x[0], sp)
 
         def body(carry):
-            if tel:
-                (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
-                 max_occ, oflow, rounds, tp) = carry
-            else:
-                (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
-                 max_occ, oflow, rounds) = carry
-                tp = None
+            (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
+             max_occ, oflow, rounds, tp, sp, births) = carry
             state = DistQueueState(cyc, saf, enq, idx, tail=tail, head=head)
+            r = self._round(state, acc, tel=tel, sp=sp, births=births)
+            state, acc, k, total, over = r[:5]
+            i = 5
             if tel:
-                state, acc, k, total, over, (pops, pushes, mn, mx) = \
-                    self._round(state, acc, tel=True)
+                pops, pushes, mn, mx = r[i]
+                i += 1
                 occ = state.tail - state.head
                 tp = trace_record(
                     tp, tp.count, pops, pushes,
                     jnp.broadcast_to(occ, (self.shards,)),   # replicated ring
                     mn, mx, over)
-            else:
-                state, acc, k, total, over = self._round(state, acc)
-            out = (state.cycles, state.safes, state.enqs, state.idxs,
-                   state.head, state.tail, acc, processed + k,
-                   spawned + total,
-                   jnp.maximum(max_occ, state.tail - state.head),
-                   oflow | over, rounds + 1)
-            return out + (tp,) if tel else out
+            if sps:
+                sp, births = r[i], r[i + 1]
+            return (state.cycles, state.safes, state.enqs, state.idxs,
+                    state.head, state.tail, acc, processed + k,
+                    spawned + total,
+                    jnp.maximum(max_occ, state.tail - state.head),
+                    oflow | over, rounds + 1, tp, sp, births)
 
         def cond(carry):
             head, tail, oflow, rounds = carry[4], carry[5], carry[10], carry[11]
             return (tail - head > 0) & (~oflow) & (rounds < limit)
 
         carry = (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
-                 max_occ, jnp.bool_(False), jnp.int32(0))
-        if tel:
-            carry = carry + (tp,)
+                 max_occ, jnp.bool_(False), jnp.int32(0), tp, sp, births)
         out = jax.lax.while_loop(cond, body, carry)
         acc_stacked = jax.tree_util.tree_map(lambda x: x[None], out[6])
-        res = (out[0], out[1], out[2], out[3], out[4], out[5], acc_stacked,
-               out[7], out[8], out[9], out[10], out[11])
-        return res + (out[12],) if tel else res
+        sp_out = out[13]
+        if sps:
+            sp_out = jax.tree_util.tree_map(lambda x: x[None], sp_out)
+        return (out[0], out[1], out[2], out[3], out[4], out[5], acc_stacked,
+                out[7], out[8], out[9], out[10], out[11], out[12], sp_out,
+                out[14])
 
     def run(self, initial: np.ndarray, acc: Any = None,
             max_rounds: int = 10_000) -> Tuple[Any, DistQueueState]:
@@ -273,18 +303,18 @@ class FusedMeshRounds(_MeshEngineBase):
             acc)
         state = [st.cycles, st.safes, st.enqs, st.idxs, st.head, st.tail,
                  acc, jnp.int32(0), jnp.int32(0), occ0]
-        tel = [self._tel_init(self.shards)]
-        self._tel_plane = lambda: tel[0]
+        ext = [self._tel_init(self.shards),
+               self._span_init(self.shards, stacked=True),
+               self._births_init((2 << self.capacity_log2,))]
+        self._tel_plane = lambda: ext[0]
+        self._span_plane = lambda: ext[1]
 
         def chunk_fn(limit):
-            if tel[0] is None:
-                (state[0], state[1], state[2], state[3], state[4], state[5],
-                 state[6], state[7], state[8], state[9], oflow, r
-                 ) = self._megaround(*state, jnp.int32(limit))
-            else:
-                (state[0], state[1], state[2], state[3], state[4], state[5],
-                 state[6], state[7], state[8], state[9], oflow, r, tel[0]
-                 ) = self._megaround(*state, jnp.int32(limit), tel[0])
+            (state[0], state[1], state[2], state[3], state[4], state[5],
+             state[6], state[7], state[8], state[9], oflow, r,
+             ext[0], ext[1], ext[2]
+             ) = self._megaround(*state, jnp.int32(limit),
+                                 ext[0], ext[1], ext[2])
             occ = int(np.int32(np.asarray(state[5] - state[4])))  # THE sync
             return (occ, int(r), bool(oflow), int(state[7]), int(state[8]),
                     int(state[9]))
@@ -310,17 +340,23 @@ class MeshRoundRunner(_MeshEngineBase):
                  capacity_log2: int = 10, batch: int = 64,
                  fused: bool = True, sync_every: int = 0,
                  combine: Callable[[Any], Any] = None,
-                 telemetry: Optional[Telemetry] = None) -> None:
+                 telemetry: Optional[Telemetry] = None,
+                 spans: Optional[Spans] = None) -> None:
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
-                         sync_every=sync_every, telemetry=telemetry)
+                         sync_every=sync_every, telemetry=telemetry,
+                         spans=spans)
         self.fused = fused
         self.combine = combine
+        if spans is not None and not fused:
+            raise ValueError(
+                "span planes are in-loop state: spans needs the fused "
+                "engine (fused=True)")
         if fused:
             self._engine = FusedMeshRounds(
                 step_fn, mesh=mesh, axis=axis, capacity_log2=capacity_log2,
                 batch=batch, sync_every=sync_every, combine=combine,
-                telemetry=telemetry)
+                telemetry=telemetry, spans=spans)
         else:
             self._engine = None
             # legacy: acc rides stacked (shards, ...) through P(axis) specs
@@ -415,9 +451,11 @@ class _PriorityMeshBase(_FusedEngine):
                  capacity_log2: int = 10, batch: int = 64,
                  arity_log2: int = 2, relaxed: bool = True,
                  sync_every: int = 0,
-                 telemetry: Optional[Telemetry] = None) -> None:
+                 telemetry: Optional[Telemetry] = None,
+                 spans: Optional[Spans] = None) -> None:
         self.step_fn = step_fn
         self.telemetry = telemetry
+        self.spans = spans
         self.mesh = mesh
         self.axis = axis
         self.shards = int(mesh.shape[axis])
@@ -486,7 +524,7 @@ class _PriorityMeshBase(_FusedEngine):
 
     # -- one priority mesh round, shared verbatim by both engines -----------
     def _round_relaxed(self, keys, vals, sizes, hints, acc,
-                       tel: bool = False):
+                       tel: bool = False, sp=None, births=None):
         """claim (no collective: hint-ordered schedule over replicated
         sizes/hints) → masked pop wave on the local heap → step →
         publish (ONE psum) → masked insert of this shard's sprayed share.
@@ -494,13 +532,24 @@ class _PriorityMeshBase(_FusedEngine):
         trace); with ``tel`` an extra ``(pops, pushes, sizes, mn, mx)``
         record tuple — the popped-key extrema ride the publish psum as
         widened meta words (``pop_meta``), so the one-collective-per-round
-        invariant holds with telemetry on."""
+        invariant holds with telemetry on.  With ``sp`` the per-shard
+        births plane rides the local heap as a rider value plane: pops
+        surface the birth stamps, the masked insert stamps ``sp.round``
+        on this shard's sprayed share, and each shard records its own
+        pops — ``(sp, births)`` trail the return (DESIGN.md §7.6)."""
+        sps = sp is not None
         me = jax.lax.axis_index(self.axis)
         counts = priority_claim_schedule(jnp.sum(sizes), self.shards,
                                          self.batch, hints, sizes)
-        keys, vals, size, outk, outv, ok = heap_pop_count(
-            keys, vals, sizes[me], counts[me], batch=self.batch,
-            cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
+        if sps:
+            keys, vals, size, outk, outv, ok, births, bout = heap_pop_count(
+                keys, vals, sizes[me], counts[me], batch=self.batch,
+                cap_log2=self.capacity_log2, arity_log2=self.arity_log2,
+                rider=births)
+        else:
+            keys, vals, size, outk, outv, ok = heap_pop_count(
+                keys, vals, sizes[me], counts[me], batch=self.batch,
+                cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
         acc, ckeys, cvals, cmask = self.step_fn(acc, outk, outv, ok)
         cm = jnp.broadcast_to(cmask.astype(bool), ckeys.shape).reshape(-1)
         ckf = ckeys.reshape(-1).astype(jnp.int32)
@@ -520,9 +569,15 @@ class _PriorityMeshBase(_FusedEngine):
                     .at[shard_of].add(1))[:self.shards]
         over = jnp.any(sizes_pop + assigned > self.capacity)
         mine = gactive & (shard_of == me) & ~over
-        keys, vals, size, _, _, _ = heap_insert_masked(
-            keys, vals, size, gk, gv, mine,
-            cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
+        if sps:
+            keys, vals, size, _, _, _, births, _ = heap_insert_masked(
+                keys, vals, size, gk, gv, mine,
+                cap_log2=self.capacity_log2, arity_log2=self.arity_log2,
+                rider=births, oprider=sp.round)
+        else:
+            keys, vals, size, _, _, _ = heap_insert_masked(
+                keys, vals, size, gk, gv, mine,
+                cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
         ckmin = (jnp.full((self.shards + 1,), HEAP_KEY_INF, jnp.int32)
                  .at[shard_of].min(jnp.where(gactive, gk, HEAP_KEY_INF))
                  )[:self.shards]
@@ -536,22 +591,39 @@ class _PriorityMeshBase(_FusedEngine):
             telinfo = (counts, jnp.where(over, 0, assigned), sizes,
                        jnp.min(pop_mins), jnp.max(pop_maxs))
             out = out + (telinfo,)
+        if sps:
+            cls = self._span_cls(outk, jnp.full_like(outk, me))
+            sp = span_record(sp, cls, sp.round - bout, ok, outv)
+            sp = span_tick(sp)
+            out = out + (sp, births)
         return out
 
-    def _round_strict(self, keys, vals, size, acc, tel: bool = False):
+    def _round_strict(self, keys, vals, size, acc, tel: bool = False,
+                      sp=None, births=None):
         """Every shard applies the identical full-width pop wave to the
         replicated heap (exact global min-key order), steps only its
         ``claim_schedule`` slice, and installs ALL gathered children —
         the planes stay replicated by construction.  Returns (keys, vals,
         size, acc, popped, total, over, trace); with ``tel`` an extra
         ``(pops, pushes, occ, mn, mx)`` record tuple (the pop wave is
-        replicated full-width, so extrema are free)."""
+        replicated full-width, so extrema are free).  With ``sp`` the
+        replicated births plane rides the replicated heap as a rider —
+        every shard computes identical pops/inserts but records only its
+        own ``claim_schedule`` slice into its sharded SpanPlane, so the
+        host-side shard merge counts each task once (DESIGN.md §7.6)."""
+        sps = sp is not None
         me = jax.lax.axis_index(self.axis)
         sb = self.shards * self.batch
         k = jnp.minimum(size, jnp.int32(sb))
-        keys, vals, size, outk, outv, _ = heap_pop_count(
-            keys, vals, size, k, batch=sb,
-            cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
+        if sps:
+            keys, vals, size, outk, outv, _, births, outb = heap_pop_count(
+                keys, vals, size, k, batch=sb,
+                cap_log2=self.capacity_log2, arity_log2=self.arity_log2,
+                rider=births)
+        else:
+            keys, vals, size, outk, outv, _ = heap_pop_count(
+                keys, vals, size, k, batch=sb,
+                cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
         active, ranks = claim_schedule(k, self.shards, self.batch)
         act_l = active.reshape(self.shards, self.batch)[me]
         rk_l = ranks.reshape(self.shards, self.batch)[me]
@@ -565,9 +637,15 @@ class _PriorityMeshBase(_FusedEngine):
             ckf, cvf, cm.astype(jnp.int32), jnp.min(keys), size, self.axis)
         over = (size + total) > jnp.int32(self.capacity)
         ins = gactive & ~over
-        keys, vals, size, _, _, _ = heap_insert_masked(
-            keys, vals, size, gk, gv, ins,
-            cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
+        if sps:
+            keys, vals, size, _, _, _, births, _ = heap_insert_masked(
+                keys, vals, size, gk, gv, ins,
+                cap_log2=self.capacity_log2, arity_log2=self.arity_log2,
+                rider=births, oprider=sp.round)
+        else:
+            keys, vals, size, _, _, _ = heap_insert_masked(
+                keys, vals, size, gk, gv, ins,
+                cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
         total = jnp.where(over, 0, total)
         trace = (outk_l, outv_l, act_l, gk, gv, gactive)
         out = (keys, vals, size, acc, k, total, over, trace)
@@ -581,6 +659,12 @@ class _PriorityMeshBase(_FusedEngine):
             telinfo = (pops, pushes, jnp.broadcast_to(size, (self.shards,)),
                        mn, mx)
             out = out + (telinfo,)
+        if sps:
+            outb_l = jnp.where(act_l, outb[rk_l], 0)
+            cls = self._span_cls(outk_l, jnp.full_like(outk_l, me))
+            sp = span_record(sp, cls, sp.round - outb_l, act_l, outv_l)
+            sp = span_tick(sp)
+            out = out + (sp, births)
         return out
 
     def _broadcast_acc(self, acc):
@@ -607,110 +691,121 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
                  arity_log2: int = 2, relaxed: bool = True,
                  sync_every: int = 0,
                  combine: Callable[[Any], Any] = None,
-                 telemetry: Optional[Telemetry] = None) -> None:
+                 telemetry: Optional[Telemetry] = None,
+                 spans: Optional[Spans] = None) -> None:
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
                          arity_log2=arity_log2, relaxed=relaxed,
-                         sync_every=sync_every, telemetry=telemetry)
+                         sync_every=sync_every, telemetry=telemetry,
+                         spans=spans)
         self.combine = combine
-        tel = telemetry is not None   # the TracePlane rides replicated
+        # trailing (tp, sp, births) slots always exist — None compiles to
+        # the exact unspanned/untraced graph.  TracePlane rides replicated;
+        # the SpanPlane is sharded (each shard records its own pops); the
+        # births plane matches its heap — per-shard (sharded) in relaxed
+        # mode, replicated in strict mode.
         if relaxed:
             impl, hp = self._megaround_relaxed, P(self.axis)
             in_specs = (hp, hp, P(), P(), hp, P(), P(), P(), P())
             out_specs = (hp, hp, P(), P(), hp, P(), P(), P(), P(), P())
+            ext = (P(), P(self.axis), P(self.axis))
         else:
             impl, hp = self._megaround_strict, P()
             in_specs = (hp, hp, P(), P(self.axis), P(), P(), P(), P())
             out_specs = (hp, hp, P(), P(self.axis), P(), P(), P(), P(), P())
-        if tel:
-            in_specs = in_specs + (P(),)
-            out_specs = out_specs + (P(),)
+            ext = (P(), P(self.axis), P())
+        in_specs = in_specs + ext
+        out_specs = out_specs + ext
         self._megaround = jax.jit(shard_map(
             impl, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
             check_rep=False))   # while_loop has no replication rule
 
     def _megaround_relaxed(self, keys, vals, sizes, hints, acc,
-                           processed, spawned, max_occ, limit, tp=None):
+                           processed, spawned, max_occ, limit,
+                           tp=None, sp=None, births=None):
         keys, vals = keys[0], vals[0]
         acc = jax.tree_util.tree_map(lambda x: x[0], acc)
         tel = tp is not None
+        sps = sp is not None
+        if sps:   # sharded SpanPlane + per-shard births arrive stacked
+            sp = jax.tree_util.tree_map(lambda x: x[0], sp)
+            births = births[0]
 
         def body(carry):
+            (keys, vals, sizes, hints, acc, processed, spawned, max_occ,
+             oflow, rounds, tp, sp, births) = carry
+            r = self._round_relaxed(keys, vals, sizes, hints, acc,
+                                    tel=tel, sp=sp, births=births)
+            keys, vals, sizes, hints, acc, k, total, over = r[:8]
+            i = 9   # r[8] is the per-round trace tuple (unused fused)
             if tel:
-                (keys, vals, sizes, hints, acc, processed, spawned, max_occ,
-                 oflow, rounds, tp) = carry
-            else:
-                (keys, vals, sizes, hints, acc, processed, spawned, max_occ,
-                 oflow, rounds) = carry
-                tp = None
-            if tel:
-                (keys, vals, sizes, hints, acc, k, total, over, _,
-                 (pops, pushes, occs, mn, mx)) = self._round_relaxed(
-                    keys, vals, sizes, hints, acc, tel=True)
+                pops, pushes, occs, mn, mx = r[i]
+                i += 1
                 tp = trace_record(tp, tp.count, pops, pushes, occs,
                                   mn, mx, over)
-            else:
-                keys, vals, sizes, hints, acc, k, total, over, _ = \
-                    self._round_relaxed(keys, vals, sizes, hints, acc)
-            out = (keys, vals, sizes, hints, acc, processed + k,
-                   spawned + total,
-                   jnp.maximum(max_occ, jnp.sum(sizes)),
-                   oflow | over, rounds + 1)
-            return out + (tp,) if tel else out
+            if sps:
+                sp, births = r[i], r[i + 1]
+            return (keys, vals, sizes, hints, acc, processed + k,
+                    spawned + total,
+                    jnp.maximum(max_occ, jnp.sum(sizes)),
+                    oflow | over, rounds + 1, tp, sp, births)
 
         def cond(carry):
             sizes, oflow, rounds = carry[2], carry[8], carry[9]
             return (jnp.sum(sizes) > 0) & (~oflow) & (rounds < limit)
 
         carry = (keys, vals, sizes, hints, acc, processed, spawned, max_occ,
-                 jnp.bool_(False), jnp.int32(0))
-        if tel:
-            carry = carry + (tp,)
+                 jnp.bool_(False), jnp.int32(0), tp, sp, births)
         out = jax.lax.while_loop(cond, body, carry)
         acc_stacked = jax.tree_util.tree_map(lambda x: x[None], out[4])
-        res = (out[0][None], out[1][None], out[2], out[3], acc_stacked,
-               out[5], out[6], out[7], out[8], out[9])
-        return res + (out[10],) if tel else res
+        sp_out, births_out = out[11], out[12]
+        if sps:
+            sp_out = jax.tree_util.tree_map(lambda x: x[None], sp_out)
+            births_out = births_out[None]
+        return (out[0][None], out[1][None], out[2], out[3], acc_stacked,
+                out[5], out[6], out[7], out[8], out[9], out[10], sp_out,
+                births_out)
 
     def _megaround_strict(self, keys, vals, size, acc,
-                          processed, spawned, max_occ, limit, tp=None):
+                          processed, spawned, max_occ, limit,
+                          tp=None, sp=None, births=None):
         acc = jax.tree_util.tree_map(lambda x: x[0], acc)
         tel = tp is not None
+        sps = sp is not None
+        if sps:   # sharded SpanPlane arrives stacked; births is replicated
+            sp = jax.tree_util.tree_map(lambda x: x[0], sp)
 
         def body(carry):
+            (keys, vals, size, acc, processed, spawned, max_occ, oflow,
+             rounds, tp, sp, births) = carry
+            r = self._round_strict(keys, vals, size, acc,
+                                   tel=tel, sp=sp, births=births)
+            keys, vals, size, acc, k, total, over = r[:7]
+            i = 8   # r[7] is the per-round trace tuple (unused fused)
             if tel:
-                (keys, vals, size, acc, processed, spawned, max_occ, oflow,
-                 rounds, tp) = carry
-            else:
-                (keys, vals, size, acc, processed, spawned, max_occ, oflow,
-                 rounds) = carry
-                tp = None
-            if tel:
-                (keys, vals, size, acc, k, total, over, _,
-                 (pops, pushes, occs, mn, mx)) = self._round_strict(
-                    keys, vals, size, acc, tel=True)
+                pops, pushes, occs, mn, mx = r[i]
+                i += 1
                 tp = trace_record(tp, tp.count, pops, pushes, occs,
                                   mn, mx, over)
-            else:
-                keys, vals, size, acc, k, total, over, _ = \
-                    self._round_strict(keys, vals, size, acc)
-            out = (keys, vals, size, acc, processed + k, spawned + total,
-                   jnp.maximum(max_occ, size), oflow | over, rounds + 1)
-            return out + (tp,) if tel else out
+            if sps:
+                sp, births = r[i], r[i + 1]
+            return (keys, vals, size, acc, processed + k, spawned + total,
+                    jnp.maximum(max_occ, size), oflow | over, rounds + 1,
+                    tp, sp, births)
 
         def cond(carry):
             size, oflow, rounds = carry[2], carry[7], carry[8]
             return (size > 0) & (~oflow) & (rounds < limit)
 
         carry = (keys, vals, size, acc, processed, spawned, max_occ,
-                 jnp.bool_(False), jnp.int32(0))
-        if tel:
-            carry = carry + (tp,)
+                 jnp.bool_(False), jnp.int32(0), tp, sp, births)
         out = jax.lax.while_loop(cond, body, carry)
         acc_stacked = jax.tree_util.tree_map(lambda x: x[None], out[3])
-        res = (out[0], out[1], out[2], acc_stacked, out[4], out[5], out[6],
-               out[7], out[8])
-        return res + (out[9],) if tel else res
+        sp_out = out[10]
+        if sps:
+            sp_out = jax.tree_util.tree_map(lambda x: x[None], sp_out)
+        return (out[0], out[1], out[2], acc_stacked, out[4], out[5], out[6],
+                out[7], out[8], out[9], sp_out, out[11])
 
     def run(self, initial_keys: np.ndarray, initial_vals: np.ndarray,
             acc: Any = None, max_rounds: int = 10_000
@@ -729,23 +824,23 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
         iv = np.asarray(initial_vals, np.int32).reshape(-1)
         assert ik.shape == iv.shape
         acc = self._broadcast_acc(acc)
-        tel = [self._tel_init(self.shards)]
-        self._tel_plane = lambda: tel[0]
         if self.relaxed:
             keys, vals, sizes, hints = self._seed(ik, iv)
             occ0 = jnp.int32(int(np.asarray(sizes).sum()))
             state = [keys, vals, sizes, hints, acc,
                      jnp.int32(0), jnp.int32(0), occ0]
+            ext = [self._tel_init(self.shards),
+                   self._span_init(self.shards, stacked=True),
+                   self._births_init((self.shards, self.capacity))]
+            self._tel_plane = lambda: ext[0]
+            self._span_plane = lambda: ext[1]
 
             def chunk_fn(limit):
-                if tel[0] is None:
-                    (state[0], state[1], state[2], state[3], state[4],
-                     state[5], state[6], state[7], oflow, r
-                     ) = self._megaround(*state, jnp.int32(limit))
-                else:
-                    (state[0], state[1], state[2], state[3], state[4],
-                     state[5], state[6], state[7], oflow, r, tel[0]
-                     ) = self._megaround(*state, jnp.int32(limit), tel[0])
+                (state[0], state[1], state[2], state[3], state[4],
+                 state[5], state[6], state[7], oflow, r,
+                 ext[0], ext[1], ext[2]
+                 ) = self._megaround(*state, jnp.int32(limit),
+                                     ext[0], ext[1], ext[2])
                 occ = int(np.asarray(state[2]).sum())        # THE sync
                 return (occ, int(r), bool(oflow), int(state[5]),
                         int(state[6]), int(state[7]))
@@ -756,16 +851,17 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
             keys, vals, size = self._seed(ik, iv)
             state = [keys, vals, size, acc,
                      jnp.int32(0), jnp.int32(0), jnp.asarray(size, jnp.int32)]
+            ext = [self._tel_init(self.shards),
+                   self._span_init(self.shards, stacked=True),
+                   self._births_init((self.capacity,))]
+            self._tel_plane = lambda: ext[0]
+            self._span_plane = lambda: ext[1]
 
             def chunk_fn(limit):
-                if tel[0] is None:
-                    (state[0], state[1], state[2], state[3], state[4],
-                     state[5], state[6], oflow, r
-                     ) = self._megaround(*state, jnp.int32(limit))
-                else:
-                    (state[0], state[1], state[2], state[3], state[4],
-                     state[5], state[6], oflow, r, tel[0]
-                     ) = self._megaround(*state, jnp.int32(limit), tel[0])
+                (state[0], state[1], state[2], state[3], state[4],
+                 state[5], state[6], oflow, r, ext[0], ext[1], ext[2]
+                 ) = self._megaround(*state, jnp.int32(limit),
+                                     ext[0], ext[1], ext[2])
                 occ = int(np.asarray(state[2]))              # THE sync
                 return (occ, int(r), bool(oflow), int(state[4]),
                         int(state[5]), int(state[6]))
@@ -796,23 +892,30 @@ class PriorityMeshRoundRunner(_PriorityMeshBase):
                  fused: bool = True, sync_every: int = 0,
                  combine: Callable[[Any], Any] = None,
                  trace: bool = False,
-                 telemetry: Optional[Telemetry] = None) -> None:
+                 telemetry: Optional[Telemetry] = None,
+                 spans: Optional[Spans] = None) -> None:
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
                          arity_log2=arity_log2, relaxed=relaxed,
-                         sync_every=sync_every, telemetry=telemetry)
+                         sync_every=sync_every, telemetry=telemetry,
+                         spans=spans)
         self.fused = fused
         self.combine = combine
         if trace and fused:
             raise ValueError("trace recording needs the per-round host "
                              "boundary: use fused=False")
+        if spans is not None and not fused:
+            raise ValueError(
+                "span planes are in-loop state: spans needs the fused "
+                "engine (fused=True)")
         self.trace_enabled = trace
         self.trace = []
         if fused:
             self._engine = FusedPriorityMeshRounds(
                 step_fn, mesh=mesh, axis=axis, capacity_log2=capacity_log2,
                 batch=batch, arity_log2=arity_log2, relaxed=relaxed,
-                sync_every=sync_every, combine=combine, telemetry=telemetry)
+                sync_every=sync_every, combine=combine, telemetry=telemetry,
+                spans=spans)
             return
         self._engine = None
         sp = P(self.axis)

@@ -67,7 +67,7 @@ class RoundRunner:
 
     def __init__(self, step_fn: StepFn, *, capacity_log2: int = 10,
                  batch: int = 64, interpret=None, fused: bool = True,
-                 sync_every: int = 0, telemetry=None) -> None:
+                 sync_every: int = 0, telemetry=None, spans=None) -> None:
         self.step_fn = jax.jit(step_fn)
         self.capacity_log2 = capacity_log2
         self.nslots_log2 = capacity_log2 + 1
@@ -76,16 +76,20 @@ class RoundRunner:
         self.interpret = resolve_interpret(interpret)
         self.fused = fused
         self.telemetry = telemetry
+        self.spans = spans
         self.stats: Dict[str, int] = {}
         self.sync_log: List[Dict[str, int]] = []
         if telemetry is not None and not fused:
             raise ValueError("trace planes are in-loop state: telemetry "
                              "needs the fused engine (fused=True)")
+        if spans is not None and not fused:
+            raise ValueError("span planes are in-loop state: spans needs "
+                             "the fused engine (fused=True)")
         if fused:
             self._engine = FusedRounds(
                 step_fn, capacity_log2=capacity_log2, batch=batch,
                 interpret=self.interpret, sync_every=sync_every,
-                telemetry=telemetry)
+                telemetry=telemetry, spans=spans)
         else:
             self._engine = None
             # legacy-path op buffers, reused across rounds (safe because
@@ -189,7 +193,7 @@ class PriorityRoundRunner:
     def __init__(self, step_fn: PriorityStepFn, *, capacity_log2: int = 10,
                  batch: int = 64, arity_log2: int = 2, interpret=None,
                  fused: bool = True, sync_every: int = 0,
-                 telemetry=None) -> None:
+                 telemetry=None, spans=None) -> None:
         self.step_fn = jax.jit(step_fn)
         self.capacity_log2 = capacity_log2
         self.capacity = 1 << capacity_log2
@@ -198,16 +202,20 @@ class PriorityRoundRunner:
         self.interpret = resolve_interpret(interpret)
         self.fused = fused
         self.telemetry = telemetry
+        self.spans = spans
         self.stats: Dict[str, int] = {}
         self.sync_log: List[Dict[str, int]] = []
         if telemetry is not None and not fused:
             raise ValueError("trace planes are in-loop state: telemetry "
                              "needs the fused engine (fused=True)")
+        if spans is not None and not fused:
+            raise ValueError("span planes are in-loop state: spans needs "
+                             "the fused engine (fused=True)")
         if fused:
             self._engine = FusedPriorityRounds(
                 step_fn, capacity_log2=capacity_log2, batch=batch,
                 arity_log2=arity_log2, interpret=self.interpret,
-                sync_every=sync_every, telemetry=telemetry)
+                sync_every=sync_every, telemetry=telemetry, spans=spans)
         else:
             self._engine = None
             # legacy-path op buffers, reused across rounds (safe because

@@ -56,6 +56,7 @@ class Request:
     slot: int = -1
     pages: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    submit_tick: int = -1        # engine tick at submit; -1 = pre-engine
 
 
 @dataclasses.dataclass
@@ -99,6 +100,7 @@ class ServingEngine:
         self.tokens = np.zeros((ecfg.max_slots, 1), np.int32)
         self.metrics = {"admitted": 0, "completed": 0, "decode_steps": 0,
                         "page_stalls": 0, "tokens_out": 0}
+        self.tick = 0                      # engine ticks; the wait clock
         self._step = jax.jit(
             lambda p, c, t, cur: decode_step(p, c, t, cur, cfg))
 
@@ -113,6 +115,8 @@ class ServingEngine:
     # -- client API ------------------------------------------------------------
 
     def submit(self, req: Request, timeout: float = 1.0) -> bool:
+        if req.submit_tick < 0:
+            req.submit_tick = self.tick    # racy int read is fine: ±1 tick
         if self.ecfg.admission == "lanes":
             return self.requests.enqueue(req, timeout=timeout,
                                          priority=req.priority)
@@ -186,6 +190,13 @@ class ServingEngine:
             self.slots[s] = req
             self.admission_log.append(req.rid)
             self._count("admitted")
+            if self.registry is not None and req.submit_tick >= 0:
+                # request-level sojourn: ticks from submit to admission,
+                # per admission class — the serving-layer twin of the
+                # engines' device span histograms (DESIGN.md § 7.6)
+                self.registry.observe(
+                    metric_key("serving", "wait", cls=req.priority),
+                    self.tick - req.submit_tick)
             # prefill (token-by-token through decode_step for simplicity;
             # slot-local so other slots keep decoding)
             self.cur[s] = 0
@@ -208,8 +219,25 @@ class ServingEngine:
                     self.cur[s] += 1
         return np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
 
+    def wait_percentiles(self) -> Dict[int, Dict[str, Optional[float]]]:
+        """Per-class request wait percentiles ``{cls: {p50, p99, max,
+        count}}`` read back from the registry's ``serving.wait[cls=...]``
+        histograms (empty without a registry)."""
+        out: Dict[int, Dict[str, Optional[float]]] = {}
+        if self.registry is None:
+            return out
+        for key in self.registry.keys():
+            if not key.startswith("serving.wait["):
+                continue
+            h = self.registry.get(key)
+            cls = int(key[key.index("cls=") + 4:-1])
+            out[cls] = {"p50": h.quantile(0.50), "p99": h.quantile(0.99),
+                        "max": h.max, "count": h.count}
+        return out
+
     def step(self) -> None:
         """One engine tick: admit, decode, complete."""
+        self.tick += 1
         self._try_admit()
         if self.registry is not None:
             # pressure gauges: free-page ring occupancy (near-empty = the

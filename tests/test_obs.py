@@ -320,7 +320,7 @@ def test_jsonl_roundtrip_exact(tmp_path):
                     extra_meta={"workload": "tree"})
     assert n == 1 + len(tel.records) + len(tel.sync_points) + 1
     back = read_jsonl(path)
-    assert back["meta"]["schema_version"] == 1
+    assert back["meta"]["schema_version"] == 2
     assert back["meta"]["workload"] == "tree"
     assert back["records"] == tel.records        # dataclass field equality
     assert back["syncs"] == tel.sync_points

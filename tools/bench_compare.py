@@ -1,0 +1,157 @@
+"""Bench-trajectory regression sentinel (non-blocking CI report).
+
+Diffs the newest ``BENCH_<n>.json`` at the repo root against its
+predecessor (or any two snapshots given explicitly): rows are matched per
+section on their *identity* fields (workload, mode, batch, shards, … —
+everything that names a configuration rather than measures it) and each
+shared throughput metric (``*_per_s``) is compared.
+
+Noise discipline: single-snapshot timings on shared CI hosts scatter by
+about ±10 percentage points even though each row is already a
+min/median of interleaved trials, and consecutive snapshots cannot be
+interleaved with each other at all.  So the sentinel only *flags* drops
+beyond ``--tolerance`` (default 25%, comfortably past the observed
+scatter) and stays **non-blocking** by default — it prints a report and
+exits 0 so CI surfaces the warning without failing the build; a drop
+that persists across several snapshots is the actionable signal.
+``--strict`` turns flagged regressions into a nonzero exit for local
+bisection.
+
+Run: ``python tools/bench_compare.py [OLD.json NEW.json]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# structural numerics that name a configuration (everything str-valued is
+# identity automatically; numbers default to "measurement")
+_IDENTITY_NUMERIC = {
+    "batch", "shards", "delta", "threads", "capacity", "capacity_log2",
+    "lanes", "n", "classes", "depth", "roots", "bursts", "steps",
+    "workers", "tasks", "n_tasks",
+}
+# measured-but-not-throughput fields: never part of identity, never gated
+_INFORMATIONAL = {
+    "elapsed_s", "overhead_pct", "rounds", "items", "records", "dropped",
+    "dropped_flows", "host_syncs", "drained", "offered_load", "p50_wait",
+    "p95_wait", "p99_wait", "max_wait", "worst_class", "starved",
+}
+
+
+def _identity(row: dict):
+    return tuple(sorted(
+        (k, v) for k, v in row.items()
+        if isinstance(v, str) or k in _IDENTITY_NUMERIC))
+
+
+def _metrics(row: dict) -> dict:
+    """Higher-is-better throughput metrics of a row (the gated subset)."""
+    return {k: v for k, v in row.items()
+            if (k.endswith("_per_s") or k.endswith("_per_kstep"))
+            and isinstance(v, (int, float))}
+
+
+def latest_pair():
+    """The two newest BENCH_<n>.json paths (old, new); None when fewer
+    than two exist."""
+    snaps = []
+    for p in glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json")):
+        m = re.match(r"BENCH_(\d+)\.json$", os.path.basename(p))
+        if m:
+            snaps.append((int(m.group(1)), p))
+    snaps.sort()
+    return (snaps[-2][1], snaps[-1][1]) if len(snaps) >= 2 else None
+
+
+def compare(old_path: str, new_path: str, *, tolerance: float = 0.25):
+    """Compare two trajectory snapshots.  Returns ``(report_lines,
+    regressions)`` where ``regressions`` is the flagged subset."""
+    with open(old_path) as f:
+        old = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    lines = [f"bench_compare: {os.path.basename(old_path)} "
+             f"(rev {old.get('git_rev', '?')}) -> "
+             f"{os.path.basename(new_path)} (rev {new.get('git_rev', '?')}), "
+             f"tolerance {tolerance:.0%}"]
+    regressions = []
+    shared = sorted(set(old["sections"]) & set(new["sections"]))
+    skipped = sorted(set(old["sections"]) ^ set(new["sections"]))
+    if skipped:
+        lines.append(f"  sections only in one snapshot (skipped): "
+                     f"{', '.join(skipped)}")
+    if old.get("config", {}).get("quick") != new.get("config", {}).get("quick"):
+        lines.append("  WARNING: quick-mode mismatch between snapshots — "
+                     "sweep sizes differ, deltas are not comparable")
+    for sec in shared:
+        old_rows = {_identity(r): r for r in old["sections"][sec]}
+        matched = flagged = 0
+        for r in new["sections"][sec]:
+            o = old_rows.get(_identity(r))
+            if o is None:
+                continue
+            for metric, nv in _metrics(r).items():
+                ov = o.get(metric)
+                if not isinstance(ov, (int, float)) or ov <= 0:
+                    continue
+                matched += 1
+                delta = nv / ov - 1.0
+                if delta < -tolerance:
+                    flagged += 1
+                    ident = {k: v for k, v in r.items()
+                             if isinstance(v, str) or k in _IDENTITY_NUMERIC}
+                    reg = {"section": sec, "metric": metric, "old": ov,
+                           "new": nv, "delta_pct": round(delta * 100, 1),
+                           "row": ident}
+                    regressions.append(reg)
+                    lines.append(
+                        f"  REGRESSION {sec}: {metric} {ov} -> {nv} "
+                        f"({reg['delta_pct']:+.1f}%) at {ident}")
+        lines.append(f"  {sec}: {matched} metric(s) compared, "
+                     f"{flagged} flagged")
+    if not shared:
+        lines.append("  no shared sections — nothing compared")
+    lines.append(f"bench_compare: {'REGRESSIONS FLAGGED' if regressions else 'OK'} "
+                 f"({len(regressions)} flagged)")
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("snapshots", nargs="*", metavar="JSON",
+                    help="OLD.json NEW.json (default: two newest "
+                         "BENCH_<n>.json at the repo root)")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="fractional drop beyond which a metric is "
+                         "flagged (default 0.25 — past CI timing noise)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero when regressions are flagged "
+                         "(default: non-blocking report)")
+    args = ap.parse_args(argv)
+    if len(args.snapshots) == 2:
+        pair = tuple(args.snapshots)
+    elif not args.snapshots:
+        pair = latest_pair()
+        if pair is None:
+            print("bench_compare: fewer than two BENCH_<n>.json snapshots "
+                  "— nothing to compare")
+            return 0
+    else:
+        ap.error("give exactly two snapshot paths, or none for the two "
+                 "newest BENCH_<n>.json")
+    lines, regressions = compare(pair[0], pair[1],
+                                 tolerance=args.tolerance)
+    print("\n".join(lines))
+    return 1 if (args.strict and regressions) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,9 +9,14 @@ against the schema ``repro.obs.export`` declares (the two share
    ``schema_version`` the validator understands;
 2. every line carries its kind's required fields with sane types/shapes
    (per-shard vectors of one consistent width, non-negative counts,
-   ``min_key <= max_key`` on non-empty rounds);
+   ``min_key <= max_key`` on non-empty rounds, and **no empty-string
+   stand-ins for numeric fields** — absent numbers must be ``null``);
 3. round indices are strictly increasing and sync heartbeats are
-   monotone in ``rounds`` and ``wall_time``.
+   monotone in ``rounds`` and ``wall_time``;
+4. span-layer lines (schema v2): ``hist`` histograms are ``classes`` ×
+   ``buckets`` grids of non-negative ints whose grand total matches
+   ``total`` with ordered percentiles, and ``flow`` lifecycles satisfy
+   ``birth <= claim``.
 
 Also accepts Chrome trace files (``--chrome``): checks the
 ``traceEvents`` envelope and the round/counter/sync event phases.
@@ -32,6 +37,26 @@ sys.path.insert(0, os.path.join(
 
 from repro.obs.export import JSONL_SCHEMA, SCHEMA_VERSION  # noqa: E402
 from repro.obs.trace import KEY_SENTINEL  # noqa: E402
+
+# fields that are never strings: bench emitters once wrote "" where a
+# number was unknown, which silently poisons downstream arithmetic —
+# absent numerics must be JSON null (None), so "" is a hard violation
+_NUMERIC_FIELDS = {
+    "round", "imbalance", "min_key", "max_key", "overflow", "sync",
+    "wall_time", "rounds", "host_syncs", "schema_version", "classes",
+    "buckets", "total", "p50", "p95", "p99", "birth", "claim", "cls",
+    "ref",
+}
+
+
+def _is_count_grid(hist, classes, buckets) -> bool:
+    """True when ``hist`` is a ``classes`` × ``buckets`` grid of
+    non-negative ints."""
+    return (isinstance(hist, list) and len(hist) == classes
+            and all(isinstance(row, list) and len(row) == buckets
+                    and all(isinstance(x, int) and not isinstance(x, bool)
+                            and x >= 0 for x in row)
+                    for row in hist))
 
 
 def check_jsonl(path: str) -> list:
@@ -72,6 +97,13 @@ def check_jsonl(path: str) -> list:
         if missing:
             errors.append(f"{path}:{i}: {kind} line missing {missing}")
             continue
+        empty = [k for k in JSONL_SCHEMA[kind]
+                 if k in _NUMERIC_FIELDS and d[k] == ""]
+        if empty:
+            errors.append(f"{path}:{i}: {kind} line has empty-string "
+                          f"stand-ins for numeric fields {empty} "
+                          f"(use null)")
+            continue
         if kind == "round":
             vecs = {k: d[k] for k in ("pops", "pushes", "occupancy")}
             for name, v in vecs.items():
@@ -108,6 +140,48 @@ def check_jsonl(path: str) -> list:
             prev_sync = d
         elif kind == "metrics" and not isinstance(d["metrics"], dict):
             errors.append(f"{path}:{i}: metrics payload must be a dict")
+        elif kind == "hist":
+            classes, buckets = d["classes"], d["buckets"]
+            if not (isinstance(classes, int) and classes > 0
+                    and isinstance(buckets, int) and buckets > 0):
+                errors.append(f"{path}:{i}: hist classes/buckets must be "
+                              f"positive ints, got {classes!r}/{buckets!r}")
+                continue
+            if (not isinstance(d["bucket_edges"], list)
+                    or len(d["bucket_edges"]) != buckets):
+                errors.append(f"{path}:{i}: bucket_edges must list "
+                              f"{buckets} upper edges")
+            if not _is_count_grid(d["hist"], classes, buckets):
+                errors.append(f"{path}:{i}: hist must be a {classes}x"
+                              f"{buckets} grid of ints >= 0")
+                continue
+            if not (isinstance(d["max_wait"], list)
+                    and len(d["max_wait"]) == classes
+                    and all(isinstance(x, int) and x >= 0
+                            for x in d["max_wait"])):
+                errors.append(f"{path}:{i}: max_wait must be {classes} "
+                              f"ints >= 0")
+            if d["total"] != sum(sum(row) for row in d["hist"]):
+                errors.append(f"{path}:{i}: total {d['total']!r} != sum of "
+                              f"hist counts")
+            ps = [d[k] for k in ("p50", "p95", "p99")]
+            if any(p is not None and not isinstance(p, int) for p in ps):
+                errors.append(f"{path}:{i}: percentiles must be ints or "
+                              f"null, got {ps!r}")
+            else:
+                known = [p for p in ps if p is not None]
+                if known != sorted(known):
+                    errors.append(f"{path}:{i}: percentiles not ordered "
+                                  f"(p50 <= p95 <= p99): {ps!r}")
+        elif kind == "flow":
+            bad = [k for k in ("birth", "claim", "cls", "ref")
+                   if not isinstance(d[k], int) or d[k] < 0]
+            if bad:
+                errors.append(f"{path}:{i}: flow fields {bad} must be "
+                              f"ints >= 0")
+            elif d["birth"] > d["claim"]:
+                errors.append(f"{path}:{i}: flow birth {d['birth']} > "
+                              f"claim {d['claim']}")
     return errors
 
 
@@ -131,11 +205,25 @@ def check_chrome(path: str) -> list:
         if need not in phases:
             errors.append(f"{path}: no {need!r}-phase events (rounds / "
                           f"counters missing)")
+    flow_ids = {"s": set(), "f": set()}
     for i, e in enumerate(ev):
         if "ph" not in e or "pid" not in e:
             errors.append(f"{path}: event {i} missing ph/pid")
-        if e.get("ph") in ("X", "C", "i") and "ts" not in e:
+        if e.get("ph") in ("X", "C", "i", "s", "f") and "ts" not in e:
             errors.append(f"{path}: event {i} ({e.get('ph')}) missing ts")
+        ph = e.get("ph")
+        if ph in ("s", "f"):
+            if "id" not in e:
+                errors.append(f"{path}: event {i} ({ph}) missing flow id")
+            else:
+                flow_ids[ph].add(e["id"])
+            if ph == "f" and e.get("bp") != "e":
+                errors.append(f"{path}: event {i} (f) missing bp='e' "
+                              f"(flow end must bind to enclosing slice)")
+    if flow_ids["s"] != flow_ids["f"]:
+        errors.append(f"{path}: unpaired flow ids "
+                      f"(s-only {sorted(flow_ids['s'] - flow_ids['f'])}, "
+                      f"f-only {sorted(flow_ids['f'] - flow_ids['s'])})")
     return errors
 
 
