@@ -54,6 +54,20 @@ def main(out=sys.stdout) -> None:
     print(f"kernels,expert_tickets,512x16,{t*1e6:.1f},pairs/s={512/t:.2e}",
           file=out)
 
+    # dense-wave compaction (DESIGN.md § 4.4): Pallas segmented-scan kernel
+    # vs its bit-identical pure-jnp associative_scan twin, sparse-to-dense
+    # on a ~10%-occupied child block (the kron wide-wave shape)
+    from repro.kernels import compact_planes, wave_compact
+    for n, width in ((8192, 1024), (65536, 8192)):
+        mask = jnp.asarray((rng.random(n) < 0.1).astype(np.int32))
+        plane = jnp.asarray(rng.integers(0, 1 << 20, n).astype(np.int32))
+        t = _time_call(wave_compact, mask, (plane,), width=width)
+        print(f"kernels,wave_compact,{n}to{width},{t*1e6:.1f},"
+              f"lanes/s={n/t:.2e}", file=out)
+        t = _time_call(compact_planes, mask, (plane,), width=width)
+        print(f"kernels,compact_planes,{n}to{width},{t*1e6:.1f},"
+              f"lanes/s={n/t:.2e}", file=out)
+
 
 if __name__ == "__main__":
     main()

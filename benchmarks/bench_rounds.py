@@ -11,13 +11,19 @@ Workloads:
   kron-like power-law graph (wide frontier: big enqueue waves).
 
 Rows report rounds/sec, items/sec, and host syncs per run for each engine
-at batch ∈ {64, 256, 1024}.  Timings exclude compilation (one warmup run
-per config).
+at batch ∈ {64, 256, 1024} — kron@1024 included: the one regime where the
+sparse fused wave lost to legacy (BENCH_3) is covered again now that the
+dense-wave rule (DESIGN.md § 4.4) compacts the child block on device.
+Timings exclude compilation (one warmup run per config) and use the
+min-of-interleaved-trials estimator: legacy and fused alternate inside
+one trial loop and each mode reports its minimum, so drift on a shared
+runner hits both sides equally and the min discards one-sided stalls.
 
 ``--smoke`` is the CI acceptance gate: it asserts fused/legacy parity
-(bit-identical acc + final ring state) on both workloads and records
-timings — it does NOT require a speedup (interpret-mode timings on shared
-CI runners are too noisy to gate on).
+(bit-identical acc + final ring state) on both workloads — including the
+forced-compaction fused path (``compact=True``) against both — and
+records timings; it does NOT require a speedup (interpret-mode timings
+on shared CI runners are too noisy to gate on).
 """
 
 from __future__ import annotations
@@ -31,6 +37,8 @@ import numpy as np
 
 HEADER = ("bench,workload,batch,mode,rounds,items,elapsed_s,rounds_per_s,"
           "items_per_s,host_syncs,drained")
+
+TRIALS = 5      # interleaved legacy/fused; min over trials (see module doc)
 
 
 def _fanout_step(fanout: int, depth: int):
@@ -50,9 +58,9 @@ def _expected_fanout_acc(fanout: int, depth: int, roots: int) -> np.ndarray:
     return counts.astype(np.int32)
 
 
-def run_fanout(batch: int, *, fused: bool, fanout: int = 2, depth: int = 10,
-               roots: int = 4, sync_every: int = 0):
-    """One timed fanout run (post-warmup).  Returns (row dict, acc, state)."""
+def _fanout_runner(batch: int, *, fused: bool, fanout: int = 2,
+                   depth: int = 10, roots: int = 4, sync_every: int = 0,
+                   compact=None):
     from repro.runtime import RoundRunner
 
     peak = roots * fanout ** depth
@@ -62,32 +70,106 @@ def run_fanout(batch: int, *, fused: bool, fanout: int = 2, depth: int = 10,
     acc0 = jnp.zeros(depth + 1, jnp.int32)
     runner = RoundRunner(_fanout_step(fanout, depth),
                          capacity_log2=capacity_log2, batch=batch,
-                         fused=fused, sync_every=sync_every)
+                         fused=fused, sync_every=sync_every, compact=compact)
+    return runner, seeds, acc0
+
+
+def _interleaved_min(run_fns, trials: int):
+    """Time each thunk ``trials`` times, round-robin (legacy and fused
+    alternate inside one loop), and return per-thunk (min_elapsed,
+    last_result) — the min estimator discards one-sided scheduler noise."""
+    best = [None] * len(run_fns)
+    last = [None] * len(run_fns)
+    for _ in range(max(trials, 1)):
+        for i, fn in enumerate(run_fns):
+            t0 = time.perf_counter()
+            last[i] = fn()
+            el = time.perf_counter() - t0
+            best[i] = el if best[i] is None else min(best[i], el)
+    return list(zip(best, last))
+
+
+def run_fanout(batch: int, *, fused: bool, fanout: int = 2, depth: int = 10,
+               roots: int = 4, sync_every: int = 0, compact=None,
+               trials: int = 1):
+    """Best-of-``trials`` timed fanout run (post-warmup).  Returns
+    (row dict, acc, state)."""
+    runner, seeds, acc0 = _fanout_runner(batch, fused=fused, fanout=fanout,
+                                         depth=depth, roots=roots,
+                                         sync_every=sync_every,
+                                         compact=compact)
     runner.run(seeds, acc=acc0, max_rounds=1_000_000)        # warmup/compile
-    t0 = time.perf_counter()
-    acc, st = runner.run(seeds, acc=acc0, max_rounds=1_000_000)
-    elapsed = time.perf_counter() - t0
-    stats = runner.stats
-    row = _row("fanout", batch, fused, stats, elapsed)
+    (elapsed, (acc, st)), = _interleaved_min(
+        [lambda: runner.run(seeds, acc=acc0, max_rounds=1_000_000)], trials)
+    row = _row("fanout", batch, fused, runner.stats, elapsed)
     return row, np.asarray(acc), st
 
 
+def run_fanout_pair(batch: int, *, fanout: int = 2, depth: int = 10,
+                    roots: int = 4, trials: int = TRIALS):
+    """Legacy and fused fanout interleaved trial-by-trial; returns
+    ``{mode: row}`` plus the two (acc, state) results for parity checks."""
+    built = {}
+    for fused in (False, True):
+        runner, seeds, acc0 = _fanout_runner(batch, fused=fused,
+                                             fanout=fanout, depth=depth,
+                                             roots=roots)
+        runner.run(seeds, acc=acc0, max_rounds=1_000_000)    # warmup/compile
+        built[fused] = (runner, seeds, acc0)
+    timed = _interleaved_min(
+        [lambda f=f: built[f][0].run(built[f][1], acc=built[f][2],
+                                     max_rounds=1_000_000)
+         for f in (False, True)], trials)
+    rows = {}
+    for fused, (elapsed, _) in zip((False, True), timed):
+        row = _row("fanout", batch, fused, built[fused][0].stats, elapsed)
+        rows[row["mode"]] = row
+    return rows
+
+
 def run_bfs(batch: int, *, fused: bool, graph: str = "road", n: int = 4096,
-            sync_every: int = 0):
-    """One timed BFS run (post-warmup, runner reused so the timed run pays
-    no megaround compilation).  Returns (row dict, dist)."""
+            sync_every: int = 0, compact=None, trials: int = 1):
+    """Best-of-``trials`` timed BFS run (post-warmup, runner reused so the
+    timed runs pay no megaround compilation).  Returns (row dict, dist)."""
     from repro.apps import bfs
 
     g = (bfs.road_like(n) if graph == "road"
          else bfs.kron_like(n, avg_deg=4, seed=1))
     runner, init_fn = bfs.bfs_rounds_runner(g, batch=batch, fused=fused,
-                                            sync_every=sync_every)
+                                            sync_every=sync_every,
+                                            compact=compact)
     runner.run([0], acc=init_fn(0), max_rounds=1_000_000)    # warmup/compile
-    t0 = time.perf_counter()
-    dist, _ = runner.run([0], acc=init_fn(0), max_rounds=1_000_000)
-    elapsed = time.perf_counter() - t0
+    (elapsed, (dist, _)), = _interleaved_min(
+        [lambda: runner.run([0], acc=init_fn(0), max_rounds=1_000_000)],
+        trials)
     row = _row(f"bfs_{graph}", batch, fused, runner.stats, elapsed)
     return row, np.asarray(dist)
+
+
+def run_bfs_pair(batch: int, *, graph: str = "road", n: int = 4096,
+                 trials: int = TRIALS):
+    """Legacy and fused BFS interleaved trial-by-trial on one shared graph;
+    returns ``{mode: row}``.  The fused side keeps the default dense-wave
+    auto rule, so kron at large batch exercises the compaction kernel."""
+    from repro.apps import bfs
+
+    g = (bfs.road_like(n) if graph == "road"
+         else bfs.kron_like(n, avg_deg=4, seed=1))
+    built = {}
+    for fused in (False, True):
+        runner, init_fn = bfs.bfs_rounds_runner(g, batch=batch, fused=fused)
+        runner.run([0], acc=init_fn(0), max_rounds=1_000_000)    # warmup
+        built[fused] = (runner, init_fn)
+    timed = _interleaved_min(
+        [lambda f=f: built[f][0].run([0], acc=built[f][1](0),
+                                     max_rounds=1_000_000)
+         for f in (False, True)], trials)
+    rows = {}
+    for fused, (elapsed, _) in zip((False, True), timed):
+        row = _row(f"bfs_{graph}", batch, fused, built[fused][0].stats,
+                   elapsed)
+        rows[row["mode"]] = row
+    return rows
 
 
 def _row(workload: str, batch: int, fused: bool, stats: dict,
@@ -113,19 +195,19 @@ def _emit(out, row: dict) -> None:
 
 
 def main(out=sys.stdout, batches=(64, 256, 1024), fanout_depth: int = 10,
-         bfs_n: int = 4096, graphs=("road", "kron")) -> list:
-    """Full sweep: fanout + BFS, legacy vs fused, across batches."""
-    print("# round engine: legacy host-driven vs fused device-resident",
-          file=out)
+         bfs_n: int = 4096, graphs=("road", "kron"),
+         trials: int = TRIALS) -> list:
+    """Full sweep: fanout + BFS, legacy vs fused interleaved, across
+    batches (kron@1024 included — the dense-wave regime)."""
+    print("# round engine: legacy host-driven vs fused device-resident "
+          f"(min of {trials} interleaved trials)", file=out)
     print(f"bench,{HEADER.split(',', 1)[1]}", file=out)
     rows = []
     for batch in batches:
-        by_mode = {}
-        for fused in (False, True):
-            row, acc, _ = run_fanout(batch, fused=fused, depth=fanout_depth)
-            _emit(out, row)
-            rows.append(row)
-            by_mode[row["mode"]] = row
+        by_mode = run_fanout_pair(batch, depth=fanout_depth, trials=trials)
+        for mode in ("legacy", "fused"):
+            _emit(out, by_mode[mode])
+            rows.append(by_mode[mode])
         speedup = (by_mode["fused"]["rounds_per_s"]
                    / max(by_mode["legacy"]["rounds_per_s"], 1e-9))
         print(f"# fanout batch={batch}: fused {speedup:.1f}x rounds/s, "
@@ -133,10 +215,15 @@ def main(out=sys.stdout, batches=(64, 256, 1024), fanout_depth: int = 10,
               f"{by_mode['fused']['host_syncs']}", file=out)
     for graph in graphs:
         for batch in batches:
-            for fused in (False, True):
-                row, _ = run_bfs(batch, fused=fused, graph=graph, n=bfs_n)
-                _emit(out, row)
-                rows.append(row)
+            by_mode = run_bfs_pair(batch, graph=graph, n=bfs_n,
+                                   trials=trials)
+            for mode in ("legacy", "fused"):
+                _emit(out, by_mode[mode])
+                rows.append(by_mode[mode])
+            speedup = (by_mode["fused"]["rounds_per_s"]
+                       / max(by_mode["legacy"]["rounds_per_s"], 1e-9))
+            print(f"# bfs_{graph} batch={batch}: fused {speedup:.1f}x "
+                  f"rounds/s", file=out)
     return rows
 
 
@@ -163,19 +250,36 @@ def smoke(out=sys.stdout) -> bool:
         print("# FAIL: fanout ring state mismatch", file=out)
         ok = False
 
+    # compaction parity gate: the forced dense-wave fused path must match
+    # the sparse fused path and legacy bit-for-bit (acc + ring state)
+    row_c, acc_c, st_c = run_fanout(32, fused=True, depth=6, roots=2,
+                                    compact=True)
+    if not np.array_equal(acc_c, acc_f):
+        print("# FAIL: compaction fanout acc mismatch", file=out)
+        ok = False
+    planes_eq_c = all(np.array_equal(np.asarray(a), np.asarray(b))
+                      for a, b in zip(st_c[:4], st_f[:4]))
+    if not (planes_eq_c
+            and (st_c.head, st_c.tail) == (st_f.head, st_f.tail)):
+        print("# FAIL: compaction fanout ring state mismatch", file=out)
+        ok = False
+
     g = bfs.road_like(256)
     ref = bfs.bfs_reference(g, 0)
     bfs_stats = {}
-    for fused in (False, True):
-        runner, init_fn = bfs.bfs_rounds_runner(g, batch=32, fused=fused)
+    for fused, compact in ((False, None), (True, None), (True, True)):
+        runner, init_fn = bfs.bfs_rounds_runner(g, batch=32, fused=fused,
+                                                compact=compact)
         runner.run([0], acc=init_fn(0))                      # warmup
         t0 = time.perf_counter()
         dist, _ = runner.run([0], acc=init_fn(0))
-        bfs_stats[fused] = runner.stats
-        _emit(out, _row("bfs_road", 32, fused, runner.stats,
-                        time.perf_counter() - t0))
+        if compact is None:
+            bfs_stats[fused] = runner.stats
+            _emit(out, _row("bfs_road", 32, fused, runner.stats,
+                            time.perf_counter() - t0))
         if not np.array_equal(np.asarray(dist), ref):
-            print(f"# FAIL: bfs fused={fused} distances wrong", file=out)
+            print(f"# FAIL: bfs fused={fused} compact={compact} "
+                  f"distances wrong", file=out)
             ok = False
     if not (bfs_stats[True]["host_syncs"] < bfs_stats[False]["host_syncs"]
             and row_f["host_syncs"] < row_l["host_syncs"]):

@@ -1,5 +1,5 @@
 """Task-runtime benchmark: single shared queue vs. sharded fabric vs.
-sharded fabric + work stealing, across arrival scenarios (DESIGN.md § 4.6),
+sharded fabric + work stealing, across arrival scenarios (DESIGN.md § 4.7),
 plus the priority-policy comparison on the G-PQ fabric (DESIGN.md § 5.7).
 
 Three open-loop scenarios, each executed by ≥32 persistent sim workers:

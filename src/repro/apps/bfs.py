@@ -155,7 +155,7 @@ def bfs_runtime(g: CSRGraph, source: int = 0, *, algo: str = "glfq",
                 policy: str = "gang", seed: int = 0
                 ) -> Tuple[np.ndarray, Dict]:
     """Task-runtime BFS: frontier expansion as dynamically spawned tasks on
-    the sharded fabric (DESIGN.md § 4.5).
+    the sharded fabric (DESIGN.md § 4.6).
 
     One task = relax one vertex; its handler scans the adjacency list
     (simulated cost = degree, so power-law graphs yield power-law task
@@ -208,7 +208,8 @@ def bfs_runtime(g: CSRGraph, source: int = 0, *, algo: str = "glfq",
 
 
 def bfs_rounds_runner(g: CSRGraph, *, batch: int = 64, fused: bool = True,
-                      interpret=None, sync_every: int = 0, telemetry=None):
+                      interpret=None, sync_every: int = 0, telemetry=None,
+                      compact=None):
     """Build the round-engine BFS runner for ``g`` (see ``bfs_rounds``).
     Returns ``(runner, init_fn)`` where ``init_fn(source)`` produces the
     distance accumulator — callers that run BFS repeatedly (benchmarks)
@@ -245,7 +246,8 @@ def bfs_rounds_runner(g: CSRGraph, *, batch: int = 64, fused: bool = True,
     capacity_log2 = max(int(np.ceil(np.log2(max(n + 1, 2 * batch)))), 4)
     runner = RoundRunner(step, capacity_log2=capacity_log2, batch=batch,
                          fused=fused, interpret=interpret,
-                         sync_every=sync_every, telemetry=telemetry)
+                         sync_every=sync_every, telemetry=telemetry,
+                         compact=compact)
 
     def init_fn(source: int):
         return jnp.full((n,), -1, jnp.int32).at[source].set(0)
@@ -277,7 +279,8 @@ def bfs_rounds(g: CSRGraph, source: int = 0, *, batch: int = 64,
 def bfs_mesh_rounds_runner(g: CSRGraph, *, mesh=None, shards: int = None,
                            axis: str = "data", batch: int = 64,
                            fused: bool = True, sync_every: int = 0,
-                           capacity_log2: int = None, telemetry=None):
+                           capacity_log2: int = None, telemetry=None,
+                           compact=None):
     """Build the *mesh*-scope BFS runner (DESIGN.md § 2.3): frontier
     vertices flow through the replicated distqueue, each shard steps its
     claimed slice of the round, and children publish back with one psum
@@ -356,7 +359,8 @@ def bfs_mesh_rounds_runner(g: CSRGraph, *, mesh=None, shards: int = None,
     runner = MeshRoundRunner(step, mesh=mesh, axis=axis,
                              capacity_log2=capacity_log2, batch=batch,
                              fused=fused, sync_every=sync_every,
-                             combine=combine, telemetry=telemetry)
+                             combine=combine, telemetry=telemetry,
+                             compact=compact)
 
     def init_fn(source: int):
         # all labels unvisited (BIG) — the source's 0 arrives via its seed

@@ -152,7 +152,7 @@ def render_runtime(scene: Scene, w: int = 64, h: int = 64, tx: int = 4,
                    shards: int = 4, workers: int = 8, steal: bool = True,
                    policy: str = "gang", seed: int = 0
                    ) -> Tuple[np.ndarray, Dict]:
-    """Tile scheduling through the task fabric (DESIGN.md § 4.5): one task =
+    """Tile scheduling through the task fabric (DESIGN.md § 4.6): one task =
     one ≤``wave``-ray batch of one tile.  The handler traces the batch
     (jitted ``_trace_once``) and spawns a continuation task for the rays
     that bounced — wave-affinity keeps a tile's continuations on its home

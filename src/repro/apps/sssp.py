@@ -72,7 +72,8 @@ def sssp_mesh_rounds_runner(g: CSRGraph, weights: np.ndarray, *, mesh=None,
                             relaxed: bool = True, fused: bool = True,
                             sync_every: int = 0, capacity_log2: int = None,
                             trace: bool = False, telemetry=None,
-                            spans=None):
+                            spans=None, compact=None,
+                            split_payload: bool = False):
     """Build the priority-mesh SSSP runner for ``(g, weights)``.  Returns
     ``(runner, init_fn)`` where ``init_fn(source)`` builds the label
     accumulator and the source's seed is ``(key=0, payload=source)`` —
@@ -83,7 +84,17 @@ def sssp_mesh_rounds_runner(g: CSRGraph, weights: np.ndarray, *, mesh=None,
     claim schedule (k-relaxed, ``sched.relaxed.mesh_relaxation_bound``);
     ``relaxed=False`` pops exact global bucket order from the replicated
     heap.  Both are exact at quiescence; ``fused`` picks host sync at
-    quiescence vs per round (bit-identical engines)."""
+    quiescence vs per round (bit-identical engines).
+
+    ``split_payload=True`` switches the queue to the two-plane
+    ``(key, payload)`` layout: the payload carries the bare vertex id and
+    the exact tentative distance rides the heap's aux rider plane, so
+    nothing packs into ``d·n + v`` and the ``(max_d + max_w)·n < 2^31``
+    packed cap disappears — only the distances themselves must stay below
+    ``2^31``.  Seed with ``runner.run([0], [source], ...,
+    initial_aux=[0])``.  Mutually exclusive with ``spans``;
+    ``trace``/legacy still work (the aux plane threads the per-round
+    state)."""
     from ..jaxcompat import make_mesh
     from ..runtime import PriorityMeshRoundRunner
 
@@ -96,10 +107,17 @@ def sssp_mesh_rounds_runner(g: CSRGraph, weights: np.ndarray, *, mesh=None,
     max_w = int(weights.max()) if g.m else 1
     # any finite tentative distance is a real path length ≤ (n-1)·max_w
     max_d = (n - 1) * max_w
-    if (max_d + max_w) * n + (n - 1) >= 2 ** 31:
+    if split_payload:
+        # two-plane layout: only the raw distances must fit in int32
+        if max_d + max_w >= 2 ** 31:
+            raise ValueError(
+                f"graph too large even for split payloads: n={n}, "
+                f"max_w={max_w} needs (n-1)*max_w + max_w < 2^31")
+    elif (max_d + max_w) * n + (n - 1) >= 2 ** 31:
         raise ValueError(
             f"graph too large for packed (d, v) payloads: n={n}, "
-            f"max_w={max_w} needs ((n-1)*max_w + max_w)*n + n < 2^31")
+            f"max_w={max_w} needs ((n-1)*max_w + max_w)*n + n < 2^31 "
+            f"(use split_payload=True for the two-plane layout)")
     if delta < 1:
         raise ValueError(f"delta must be >= 1, got {delta}")
     deg = np.diff(g.row_ptr).astype(np.int64)
@@ -113,12 +131,10 @@ def sssp_mesh_rounds_runner(g: CSRGraph, weights: np.ndarray, *, mesh=None,
     nbr_j = jnp.asarray(nbr)
     wgt_j = jnp.asarray(wgt)
 
-    def step(dist, keys, payloads, valid):
-        del keys                                  # bucket only orders pops
-        b = payloads.shape[0]
-        p = jnp.where(valid, payloads, 0)
-        v = p % n
-        d = p // n
+    def _relax(dist, v, d, valid):
+        """Shared label-correcting core: claim (v, d) pairs in, winning
+        child relaxations ``(dist, ck, wf, ndf, win, shape)`` out."""
+        b = v.shape[0]
         # expand unless the local label already beats the claim (labels are
         # real path lengths ≥ the true distance, so a true-distance claim
         # is never stale; ``==`` claims re-expand but spawn only improving
@@ -144,9 +160,25 @@ def sssp_mesh_rounds_runner(g: CSRGraph, weights: np.ndarray, *, mesh=None,
         win = tie & (claim_ord[tgt] == order)
         dist = dist.at[jnp.where(win, wf, n)].min(ndf, mode="drop")
         ck = jnp.where(win, ndf // delta, 0)
+        return dist, ck, wf, ndf, win, w.shape
+
+    def step(dist, keys, payloads, valid):
+        del keys                                  # bucket only orders pops
+        p = jnp.where(valid, payloads, 0)
+        dist, ck, wf, ndf, win, shape = _relax(dist, p % n, p // n, valid)
         cv = jnp.where(win, ndf * n + jnp.clip(wf, 0, n - 1), 0)
-        return (dist, ck.reshape(w.shape), cv.reshape(w.shape),
-                win.reshape(w.shape))
+        return (dist, ck.reshape(shape), cv.reshape(shape),
+                win.reshape(shape))
+
+    def step_split(dist, keys, payloads, aux, valid):
+        del keys                                  # bucket only orders pops
+        v = jnp.where(valid, payloads, 0)         # bare vertex plane
+        d = jnp.where(valid, aux, 0)              # exact distance rider
+        dist, ck, wf, ndf, win, shape = _relax(dist, v, d, valid)
+        cv = jnp.where(win, jnp.clip(wf, 0, n - 1), 0)
+        ca = jnp.where(win, ndf, 0)
+        return (dist, ck.reshape(shape), cv.reshape(shape),
+                ca.reshape(shape), win.reshape(shape))
 
     def combine(stacked):                        # (shards, n) labels
         m = stacked.min(0)
@@ -159,12 +191,14 @@ def sssp_mesh_rounds_runner(g: CSRGraph, weights: np.ndarray, *, mesh=None,
         if not relaxed:
             capacity_log2 = int(np.ceil(np.log2(
                 max(4 * n, 4 * batch * nshards, 16))))
-    runner = PriorityMeshRoundRunner(step, mesh=mesh, axis=axis,
+    runner = PriorityMeshRoundRunner(step_split if split_payload else step,
+                                     mesh=mesh, axis=axis,
                                      capacity_log2=capacity_log2,
                                      batch=batch, relaxed=relaxed,
                                      fused=fused, sync_every=sync_every,
                                      combine=combine, trace=trace,
-                                     telemetry=telemetry, spans=spans)
+                                     telemetry=telemetry, spans=spans,
+                                     compact=compact, split=split_payload)
 
     def init_fn(source: int):
         # all labels unvisited (BIG) — the source's 0 arrives via its seed
@@ -180,13 +214,16 @@ def sssp_mesh_rounds(g: CSRGraph, weights: np.ndarray, source: int = 0, *,
                      mesh=None, shards: int = None, batch: int = 64,
                      delta: int = 4, relaxed: bool = True,
                      fused: bool = True, sync_every: int = 0,
+                     compact=None, split_payload: bool = False,
                      max_rounds: int = 100_000) -> Tuple[np.ndarray, Dict]:
     """Delta-stepping SSSP on the priority mesh engine across ≥1 shards:
     exact Dijkstra distances at quiescence, host sync only at quiescence
     when ``fused=True``.  Returns ``(dist, stats)``."""
     runner, init_fn = sssp_mesh_rounds_runner(
         g, weights, mesh=mesh, shards=shards, batch=batch, delta=delta,
-        relaxed=relaxed, fused=fused, sync_every=sync_every)
+        relaxed=relaxed, fused=fused, sync_every=sync_every,
+        compact=compact, split_payload=split_payload)
+    kw = {"initial_aux": [0]} if split_payload else {}
     dist, _ = runner.run([0], [source], acc=init_fn(source),
-                         max_rounds=max_rounds)
+                         max_rounds=max_rounds, **kw)
     return np.asarray(dist), dict(runner.stats)

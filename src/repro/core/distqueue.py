@@ -68,6 +68,7 @@ import jax.numpy as jnp
 
 from ..distributed.collectives import mesh_round_gather, mesh_ticket_base  # noqa: F401  (ticket base re-exported for callers)
 from ..jaxcompat import axis_size as _axis_size, pvary as _pvary
+from ..kernels.compact import compact_planes
 from ..kernels.heap_batch import KEY_INF
 from ..kernels.ring_slots import deq_planes, enq_planes
 
@@ -342,6 +343,68 @@ def dist_publish_round(state: DistQueueState, values: jax.Array,
     return res
 
 
+def _compact_grid(counts, width: int):
+    """Reconstruct the gathered op grid from per-shard compact counts (the
+    dense-wave rule, DESIGN.md § 4.4).  Each shard's dense block holds its
+    active lanes in local rank order, so the global ranks are the local
+    lane offset by the exclusive prefix sum of counts — the identical
+    shard-major, in-shard row-major order the sparse gather's cumsum
+    yields.  Returns flattened (n·width,) (active, ranks)."""
+    counts = jnp.asarray(counts, jnp.int32)
+    base = jnp.cumsum(counts) - counts
+    lane = jnp.arange(width, dtype=jnp.int32)[None, :]
+    act2 = lane < jnp.minimum(counts, width)[:, None]
+    ranks = jnp.where(act2, base[:, None] + lane, 0)
+    return act2.reshape(-1), ranks.reshape(-1)
+
+
+def dist_publish_compact_round(state: DistQueueState, values: jax.Array,
+                               mask: jax.Array, axis: str, *, capacity: int,
+                               width: int, with_counts: bool = False,
+                               births=None, birth_round=None):
+    """``dist_publish_round`` under the dense-wave rule (DESIGN.md § 4.4):
+    each shard ballot-compacts its (B,) sparse child block down to a
+    (width,) dense prefix wave *before* the exchange, so the one psum
+    carries O(width) words per shard instead of O(B) — same single
+    collective, smaller payload, and the downstream scatter is
+    width-bounded.  The per-shard true popcount rides a meta word; the
+    global ranks are rebuilt from the exclusive prefix sum of the counts,
+    which is exactly the sparse gather's cumsum order, so the installed
+    (ticket, value) pairs — and hence the planes — are bit-identical to
+    the sparse round's.  A shard whose spawn count exceeds ``width`` can
+    only occur when the round's total exceeds ``capacity`` (width is the
+    engine's capacity bound), i.e. when ``over`` suppresses the entire
+    install in both paths — lane drops are unobservable.  Returns
+    ``(new_state, None, total, over)`` — the per-lane granted mask does
+    not survive compaction; the fused engines never read it."""
+    lg = _nslots_log2(state)
+    mask_i = (mask > 0).astype(jnp.int32)
+    (dv,), count = compact_planes(mask_i, (values.astype(jnp.int32),),
+                                  width=width)
+    gv, gmeta = mesh_round_gather(
+        (dv, jnp.reshape(count.astype(jnp.int32), (1,))), axis)
+    counts = gmeta[:, 0]
+    total = jnp.sum(counts)
+    active, ranks = _compact_grid(counts, width)
+    over = (state.occupancy + total) > capacity
+    active = active & ~over
+    tickets = state.tail + ranks
+    # suppression bounds active ranks by capacity: at most one live wave
+    out = _apply_enqueue(_planes(state), state.head, tickets,
+                         gv.reshape(-1), active, ranks, nslots_log2=lg,
+                         engine="planes", max_rank=capacity, births=births,
+                         birth_round=birth_round)
+    total = jnp.where(over, 0, total)
+    new_state = DistQueueState(*out[0], tail=state.tail + total,
+                               head=state.head)
+    res = (new_state, None, total, over)
+    if with_counts:
+        res = res + (jnp.where(over, 0, counts),)
+    if births is not None:
+        res = res + (out[2],)
+    return res
+
+
 def claim_schedule(k, n: int, batch: int):
     """The round's cross-shard rebalancing policy: split a claim budget of
     ``k`` items evenly over ``n`` shards (remainder to the lowest shard
@@ -460,7 +523,7 @@ def priority_claim_schedule(k, n: int, batch: int, hints, sizes):
 def dist_priority_publish_round(ckeys: jax.Array, cvals: jax.Array,
                                 mask: jax.Array, local_hint: jax.Array,
                                 local_size: jax.Array, axis: str,
-                                pop_meta=None):
+                                pop_meta=None, aux=None):
     """The priority mesh round's ONE collective: every shard contributes
     its compact child block as packed ``(key | payload)`` words — the key
     and payload planes are concatenated into the shard's single
@@ -478,7 +541,12 @@ def dist_priority_publish_round(ckeys: jax.Array, cvals: jax.Array,
     § 7) widens the meta block to 4 words so each shard's popped-key
     extrema ride the SAME psum — the one-collective-per-round invariant
     holds with telemetry on — and appends ``(pop_mins (n,), pop_maxs
-    (n,))`` to the return tuple."""
+    (n,))`` to the return tuple.
+
+    ``aux`` (the split-payload path, DESIGN.md § 6) is a third child
+    plane carrying per-child auxiliary words (e.g. exact distances too
+    wide to pack into the payload); it rides the same psum row and the
+    gathered ``gaux`` is inserted right after ``gvals``."""
     mask_i = (mask > 0).astype(jnp.int32)
     meta_words = [jnp.asarray(local_hint, jnp.int32),
                   jnp.asarray(local_size, jnp.int32)]
@@ -486,13 +554,54 @@ def dist_priority_publish_round(ckeys: jax.Array, cvals: jax.Array,
         meta_words += [jnp.asarray(pop_meta[0], jnp.int32),
                        jnp.asarray(pop_meta[1], jnp.int32)]
     meta = jnp.stack(meta_words)
-    gk, gv, gm, gmeta = mesh_round_gather(
-        (ckeys.astype(jnp.int32), cvals.astype(jnp.int32), mask_i, meta),
-        axis)
-    gk, gv, gm = gk.reshape(-1), gv.reshape(-1), gm.reshape(-1)
+    blocks = [ckeys.astype(jnp.int32), cvals.astype(jnp.int32)]
+    if aux is not None:
+        blocks.append(aux.astype(jnp.int32))
+    g = mesh_round_gather(tuple(blocks) + (mask_i, meta), axis)
+    gm, gmeta = g[-2].reshape(-1), g[-1]
     active = gm > 0
     ranks = jnp.cumsum(gm) - gm
-    out = (gk, gv, active, ranks, jnp.sum(gm), gmeta[:, 0], gmeta[:, 1])
+    out = tuple(b.reshape(-1) for b in g[:-2])
+    out = out + (active, ranks, jnp.sum(gm), gmeta[:, 0], gmeta[:, 1])
     if pop_meta is not None:
         out = out + (gmeta[:, 2], gmeta[:, 3])
+    return out
+
+
+def dist_priority_publish_compact_round(ckeys: jax.Array, cvals: jax.Array,
+                                        mask: jax.Array,
+                                        local_hint: jax.Array,
+                                        local_size: jax.Array, axis: str, *,
+                                        width: int, pop_meta=None, aux=None):
+    """``dist_priority_publish_round`` under the dense-wave rule
+    (DESIGN.md § 4.4): each shard ballot-compacts its child block (key,
+    payload[, aux] planes under one mask) to ``width`` dense lanes before
+    the exchange, shrinking the psum row from O(B) to O(width) words per
+    plane.  The true per-shard popcount rides a third meta word and the
+    global ranks are rebuilt from its exclusive prefix sum — the sparse
+    gather's exact cumsum order, so child → shard assignment (``rank %
+    n``) and the resulting heap evolutions are bit-identical.  A count
+    above ``width`` forces the engine's overflow check (width is the
+    engine's install bound), where nothing installs in either path.
+    Return layout matches the sparse publish with the same ``pop_meta``
+    / ``aux`` options (no per-lane granted exists in either)."""
+    mask_i = (mask > 0).astype(jnp.int32)
+    planes_in = [ckeys.astype(jnp.int32), cvals.astype(jnp.int32)]
+    if aux is not None:
+        planes_in.append(aux.astype(jnp.int32))
+    dense, count = compact_planes(mask_i, tuple(planes_in), width=width)
+    meta_words = [jnp.asarray(local_hint, jnp.int32),
+                  jnp.asarray(local_size, jnp.int32),
+                  count.astype(jnp.int32)]
+    if pop_meta is not None:
+        meta_words += [jnp.asarray(pop_meta[0], jnp.int32),
+                       jnp.asarray(pop_meta[1], jnp.int32)]
+    g = mesh_round_gather(dense + (jnp.stack(meta_words),), axis)
+    gmeta = g[-1]
+    counts = gmeta[:, 2]
+    active, ranks = _compact_grid(counts, width)
+    out = tuple(b.reshape(-1) for b in g[:-1])
+    out = out + (active, ranks, jnp.sum(counts), gmeta[:, 0], gmeta[:, 1])
+    if pop_meta is not None:
+        out = out + (gmeta[:, 3], gmeta[:, 4])
     return out

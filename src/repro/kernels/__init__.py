@@ -5,6 +5,7 @@ jit'd public API with a kernel/oracle switch.  Kernels run compiled on TPU
 and in interpret mode on CPU (how the test suite validates them)."""
 
 from . import ops, ref
+from .compact import compact_planes, compact_width, wave_compact
 from .frontier import frontier_expand
 from .heap_batch import heap_apply
 from .moe_route import expert_tickets, moe_route
@@ -15,4 +16,5 @@ from .wavefaa import LANES, wavefaa
 __all__ = ["ops", "ref", "wavefaa", "LANES", "ring_enqueue", "ring_dequeue",
            "enq_planes", "deq_planes", "frontier_expand", "expert_tickets",
            "heap_apply", "moe_route", "resolve_interpret",
-           "PALLAS_INTERPRET_ENV"]
+           "PALLAS_INTERPRET_ENV", "wave_compact", "compact_planes",
+           "compact_width"]

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.compact import compact_width, wave_compact
 from ..kernels.heap_batch import (KEY_INF as HEAP_KEY_INF, OP_DELMIN,
                                   OP_INSERT, OP_NOP, heap_apply, heap_planes)
 from ..kernels.pallas_env import resolve_interpret
@@ -262,7 +263,7 @@ class FusedRounds(_FusedEngine):
     def __init__(self, step_fn: StepFn, *, capacity_log2: int = 10,
                  batch: int = 64, interpret=None, sync_every: int = 0,
                  telemetry: Optional[Telemetry] = None,
-                 spans: Optional[Spans] = None) -> None:
+                 spans: Optional[Spans] = None, compact=None) -> None:
         self.step_fn = jax.jit(step_fn)
         self.capacity_log2 = capacity_log2
         self.nslots_log2 = capacity_log2 + 1
@@ -275,6 +276,7 @@ class FusedRounds(_FusedEngine):
         self.sync_every = sync_every
         self.telemetry = telemetry
         self.spans = spans
+        self.compact = compact
         self._reset()
         self._megaround = jax.jit(self._megaround_impl)
 
@@ -316,14 +318,31 @@ class FusedRounds(_FusedEngine):
             acc, cvals, cmask = self.step_fn(acc, vals, ok)
             cm = jnp.broadcast_to(cmask.astype(bool), cvals.shape).reshape(-1)
             cv = cvals.reshape(-1).astype(jnp.int32)
-            # in-loop leader FAA: child tickets from the spawn-mask ballot
-            etickets, newctr = wavefaa(_pad_lanes(cm.astype(jnp.int32)),
-                                       jnp.reshape(tail, (1,)),
-                                       interpret=interp)
-            etickets = etickets[:cv.shape[0]]
-            n_child = newctr[0] - tail
-            over = (tail + n_child - head) > capacity
-            etickets = jnp.where(over, -1, etickets)   # suppress the install
+            # dense-wave rule (DESIGN.md § 4.4): compact the sparse child
+            # wave down to the capacity bound before installing — the
+            # decision is static (trace-time) so exactly one path compiles
+            wdth = compact_width(cv.shape[0], capacity, self.compact)
+            if wdth is None:
+                # in-loop leader FAA: child tickets from the spawn-mask
+                # ballot
+                etickets, newctr = wavefaa(_pad_lanes(cm.astype(jnp.int32)),
+                                           jnp.reshape(tail, (1,)),
+                                           interpret=interp)
+                etickets = etickets[:cv.shape[0]]
+                n_child = newctr[0] - tail
+                over = (tail + n_child - head) > capacity
+                etickets = jnp.where(over, -1, etickets)  # suppress install
+            else:
+                # compaction subsumes the ballot: the dense wave IS the
+                # children in wavefaa rank order, so tickets are the
+                # contiguous run tail + [0, n_child) — bit-identical
+                # (ticket, value) scatters to the sparse install
+                (cv,), n_child = wave_compact(cm.astype(jnp.int32), (cv,),
+                                              width=wdth, interpret=interp)
+                over = (tail + n_child - head) > capacity
+                lane_w = jnp.arange(wdth, dtype=jnp.int32)
+                etickets = jnp.where((lane_w < n_child) & ~over,
+                                     tail + lane_w, -1)
             if sps:
                 cyc, saf, enq, idx, _ = enq_planes(
                     cyc, saf, enq, idx, etickets, cv, head,
@@ -333,7 +352,7 @@ class FusedRounds(_FusedEngine):
                 cyc, saf, enq, idx, _ = ring_enqueue(
                     cyc, saf, enq, idx, etickets, cv, head,
                     nslots_log2=nslots_log2, idx_bot=IDX_BOT, interpret=interp)
-            tail = jnp.where(over, tail, newctr[0])
+            tail = jnp.where(over, tail, tail + n_child)
             if tel:
                 mn, mx = masked_min_max(vals, ok)   # FIFO: payload extrema
                 tp = trace_record(tp, tp.count, k,
@@ -431,7 +450,7 @@ class FusedPriorityRounds(_FusedEngine):
                  batch: int = 64, arity_log2: int = 2, interpret=None,
                  sync_every: int = 0,
                  telemetry: Optional[Telemetry] = None,
-                 spans: Optional[Spans] = None) -> None:
+                 spans: Optional[Spans] = None, compact=None) -> None:
         self.step_fn = jax.jit(step_fn)
         self.capacity_log2 = capacity_log2
         self.capacity = 1 << capacity_log2
@@ -444,6 +463,7 @@ class FusedPriorityRounds(_FusedEngine):
         self.sync_every = sync_every
         self.telemetry = telemetry
         self.spans = spans
+        self.compact = compact
         self._reset()
         self._megaround = jax.jit(self._megaround_impl)
 
@@ -479,9 +499,23 @@ class FusedPriorityRounds(_FusedEngine):
                                   ckeys.shape).reshape(-1)
             ckf = ckeys.reshape(-1).astype(jnp.int32)
             cvf = cvals.reshape(-1).astype(jnp.int32)
-            n_child = cm.sum(dtype=jnp.int32)
-            over = size + n_child > capacity
-            ins_ops = jnp.where(cm & ~over, OP_INSERT, OP_NOP)
+            # dense-wave rule (DESIGN.md § 4.4): compact before the insert
+            # batch — the dense wave preserves row-major lane order, so the
+            # masked insert sequence (hence the heap evolution) is
+            # bit-identical to the sparse one
+            wdth = compact_width(ckf.shape[0], capacity, self.compact)
+            if wdth is None:
+                n_child = cm.sum(dtype=jnp.int32)
+                over = size + n_child > capacity
+                ins_ops = jnp.where(cm & ~over, OP_INSERT, OP_NOP)
+            else:
+                (ckf, cvf), n_child = wave_compact(
+                    cm.astype(jnp.int32), (ckf, cvf), width=wdth,
+                    interpret=interp)
+                over = size + n_child > capacity
+                lane_w = jnp.arange(wdth, dtype=jnp.int32)
+                ins_ops = jnp.where((lane_w < n_child) & ~over,
+                                    OP_INSERT, OP_NOP)
             if sps:
                 keys, vals, size, _, _, _, births, _ = heap_planes(
                     keys, vals, size, ins_ops, ckf, cvf, cap_log2=cap_log2,

@@ -79,8 +79,11 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.distqueue import (DistHeapState, DistQueueState, claim_schedule,
                               dist_claim_round, dist_heap_init,
-                              dist_priority_publish_round, dist_publish_round,
+                              dist_priority_publish_compact_round,
+                              dist_priority_publish_round,
+                              dist_publish_compact_round, dist_publish_round,
                               dist_queue_init, priority_claim_schedule)
+from ..kernels.compact import compact_width
 from ..kernels.heap_batch import (KEY_INF as HEAP_KEY_INF, heap_insert_masked,
                                   heap_pop_count)
 from ..kernels.ring_slots import enq_planes
@@ -99,7 +102,7 @@ class _MeshEngineBase(_FusedEngine):
                  capacity_log2: int = 10, batch: int = 64,
                  sync_every: int = 0,
                  telemetry: Optional[Telemetry] = None,
-                 spans: Optional[Spans] = None) -> None:
+                 spans: Optional[Spans] = None, compact=None) -> None:
         self.step_fn = step_fn
         self.mesh = mesh
         self.axis = axis
@@ -115,6 +118,7 @@ class _MeshEngineBase(_FusedEngine):
         self.sync_every = sync_every
         self.telemetry = telemetry
         self.spans = spans
+        self.compact = compact
         self._reset()
 
     # -- seeding (host-side, before shard_map: planes are plain jnp) --------
@@ -167,10 +171,21 @@ class _MeshEngineBase(_FusedEngine):
         acc, cvals, cmask = self.step_fn(acc, vals, ok)
         cm = jnp.broadcast_to(cmask.astype(bool), cvals.shape).reshape(-1)
         cv = cvals.reshape(-1).astype(jnp.int32)
-        pr = dist_publish_round(
-            state, cv, cm.astype(jnp.int32), self.axis,
-            capacity=self.capacity, with_counts=tel, births=births,
-            birth_round=sp.round if sps else None)
+        # dense-wave rule (DESIGN.md § 4.4): each shard compacts its child
+        # block to the capacity bound before the exchange — same single
+        # psum, O(width) instead of O(B·F) payload, bit-identical planes.
+        # The decision is static (trace-time): exactly one path compiles.
+        wdth = compact_width(cv.shape[0], self.capacity, self.compact)
+        if wdth is None:
+            pr = dist_publish_round(
+                state, cv, cm.astype(jnp.int32), self.axis,
+                capacity=self.capacity, with_counts=tel, births=births,
+                birth_round=sp.round if sps else None)
+        else:
+            pr = dist_publish_compact_round(
+                state, cv, cm.astype(jnp.int32), self.axis,
+                capacity=self.capacity, width=wdth, with_counts=tel,
+                births=births, birth_round=sp.round if sps else None)
         state, _, total, over = pr[0], pr[1], pr[2], pr[3]
         j = 4
         out = (state, acc, k, total, over)
@@ -209,11 +224,11 @@ class FusedMeshRounds(_MeshEngineBase):
                  sync_every: int = 0,
                  combine: Callable[[Any], Any] = None,
                  telemetry: Optional[Telemetry] = None,
-                 spans: Optional[Spans] = None) -> None:
+                 spans: Optional[Spans] = None, compact=None) -> None:
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
                          sync_every=sync_every, telemetry=telemetry,
-                         spans=spans)
+                         spans=spans, compact=compact)
         self.combine = combine
         # in shard_map, P() = replicated operand, P(axis) = sharded; a bare
         # P serves as a pytree-prefix spec for the whole acc subtree.  acc
@@ -341,11 +356,11 @@ class MeshRoundRunner(_MeshEngineBase):
                  fused: bool = True, sync_every: int = 0,
                  combine: Callable[[Any], Any] = None,
                  telemetry: Optional[Telemetry] = None,
-                 spans: Optional[Spans] = None) -> None:
+                 spans: Optional[Spans] = None, compact=None) -> None:
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
                          sync_every=sync_every, telemetry=telemetry,
-                         spans=spans)
+                         spans=spans, compact=compact)
         self.fused = fused
         self.combine = combine
         if spans is not None and not fused:
@@ -356,7 +371,7 @@ class MeshRoundRunner(_MeshEngineBase):
             self._engine = FusedMeshRounds(
                 step_fn, mesh=mesh, axis=axis, capacity_log2=capacity_log2,
                 batch=batch, sync_every=sync_every, combine=combine,
-                telemetry=telemetry, spans=spans)
+                telemetry=telemetry, spans=spans, compact=compact)
         else:
             self._engine = None
             # legacy: acc rides stacked (shards, ...) through P(axis) specs
@@ -452,10 +467,16 @@ class _PriorityMeshBase(_FusedEngine):
                  arity_log2: int = 2, relaxed: bool = True,
                  sync_every: int = 0,
                  telemetry: Optional[Telemetry] = None,
-                 spans: Optional[Spans] = None) -> None:
+                 spans: Optional[Spans] = None, compact=None,
+                 split: bool = False) -> None:
         self.step_fn = step_fn
         self.telemetry = telemetry
         self.spans = spans
+        if split and spans is not None:
+            raise ValueError(
+                "split payloads ride the heap's rider plane, which spans "
+                "already uses for birth stamps: spans and split are "
+                "mutually exclusive")
         self.mesh = mesh
         self.axis = axis
         self.shards = int(mesh.shape[axis])
@@ -464,6 +485,8 @@ class _PriorityMeshBase(_FusedEngine):
         self.batch = batch
         self.arity_log2 = arity_log2
         self.relaxed = relaxed
+        self.compact = compact
+        self.split = split
         if relaxed and batch > self.capacity:
             raise ValueError(
                 f"batch {batch} exceeds per-shard heap capacity "
@@ -476,27 +499,34 @@ class _PriorityMeshBase(_FusedEngine):
         self._reset()
 
     # -- seeding (host-side, before shard_map) ------------------------------
-    def _seed(self, ik: np.ndarray, iv: np.ndarray):
+    def _seed(self, ik: np.ndarray, iv: np.ndarray, ia=None):
         """Install the seed (key, val) pairs.  Relaxed mode sprays them
         round-robin by seed rank (``rank % shards``) into the per-shard
         heaps and returns stacked ``(keys (S,cap), vals (S,cap),
         sizes (S,), hints (S,))``; strict mode installs everything into
-        the one replicated heap and returns ``(keys, vals, size)``."""
+        the one replicated heap and returns ``(keys, vals, size)``.  In
+        split mode ``ia`` carries per-seed aux words installed through
+        the rider plane; it trails the return tuple."""
         k = len(ik)
+        spl = ia is not None
         if not self.relaxed:
             if k > self.capacity:
                 raise RuntimeError(
                     f"mesh heap overflow: {k} seed values exceed capacity "
                     f"{self.capacity} (raise capacity_log2)")
             st = dist_heap_init(self.capacity)
+            aux = jnp.zeros((self.capacity,), jnp.int32) if spl else None
             if k == 0:
-                return st.keys, st.vals, st.size
-            keys, vals, size, _, _, ok = heap_insert_masked(
+                return ((st.keys, st.vals, st.size)
+                        + ((aux,) if spl else ()))
+            out = heap_insert_masked(
                 st.keys, st.vals, st.size, jnp.asarray(ik), jnp.asarray(iv),
                 jnp.ones((k,), bool), cap_log2=self.capacity_log2,
-                arity_log2=self.arity_log2)
+                arity_log2=self.arity_log2, rider=aux,
+                oprider=jnp.asarray(ia) if spl else None)
+            keys, vals, size, ok = out[0], out[1], out[2], out[5]
             assert bool(np.asarray(ok).all()), "capacity checked: cannot miss"
-            return keys, vals, size
+            return (keys, vals, size) + ((out[6],) if spl else ())
         shard_of = np.arange(k) % self.shards
         per = [np.flatnonzero(shard_of == s) for s in range(self.shards)]
         worst = max((len(p) for p in per), default=0)
@@ -505,22 +535,29 @@ class _PriorityMeshBase(_FusedEngine):
                 f"mesh heap overflow: {worst} seed values land on one shard, "
                 f"exceeding per-shard capacity {self.capacity} (raise "
                 f"capacity_log2)")
-        keys_l, vals_l, sizes, hints = [], [], [], []
+        keys_l, vals_l, sizes, hints, aux_l = [], [], [], [], []
         for idx in per:
             st = dist_heap_init(self.capacity)
             kk, vv, sz = st.keys, st.vals, st.size
+            aa = jnp.zeros((self.capacity,), jnp.int32) if spl else None
             if len(idx):
-                kk, vv, sz, _, _, ok = heap_insert_masked(
+                out = heap_insert_masked(
                     kk, vv, sz, jnp.asarray(ik[idx]), jnp.asarray(iv[idx]),
                     jnp.ones((len(idx),), bool),
-                    cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
+                    cap_log2=self.capacity_log2, arity_log2=self.arity_log2,
+                    rider=aa, oprider=jnp.asarray(ia[idx]) if spl else None)
+                kk, vv, sz, ok = out[0], out[1], out[2], out[5]
+                if spl:
+                    aa = out[6]
                 assert bool(np.asarray(ok).all())
             keys_l.append(kk)
             vals_l.append(vv)
             sizes.append(int(sz))
             hints.append(int(jnp.min(kk)))
-        return (jnp.stack(keys_l), jnp.stack(vals_l),
-                jnp.asarray(sizes, jnp.int32), jnp.asarray(hints, jnp.int32))
+            aux_l.append(aa)
+        res = (jnp.stack(keys_l), jnp.stack(vals_l),
+               jnp.asarray(sizes, jnp.int32), jnp.asarray(hints, jnp.int32))
+        return res + ((jnp.stack(aux_l),) if spl else ())
 
     # -- one priority mesh round, shared verbatim by both engines -----------
     def _round_relaxed(self, keys, vals, sizes, hints, acc,
@@ -538,10 +575,13 @@ class _PriorityMeshBase(_FusedEngine):
         on this shard's sprayed share, and each shard records its own
         pops — ``(sp, births)`` trail the return (DESIGN.md §7.6)."""
         sps = sp is not None
+        spl = self.split
         me = jax.lax.axis_index(self.axis)
         counts = priority_claim_schedule(jnp.sum(sizes), self.shards,
                                          self.batch, hints, sizes)
-        if sps:
+        if sps or spl:
+            # the rider plane carries birth stamps (spans) or the split
+            # aux words — mutually exclusive by construction
             keys, vals, size, outk, outv, ok, births, bout = heap_pop_count(
                 keys, vals, sizes[me], counts[me], batch=self.batch,
                 cap_log2=self.capacity_log2, arity_log2=self.arity_log2,
@@ -550,30 +590,59 @@ class _PriorityMeshBase(_FusedEngine):
             keys, vals, size, outk, outv, ok = heap_pop_count(
                 keys, vals, sizes[me], counts[me], batch=self.batch,
                 cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
-        acc, ckeys, cvals, cmask = self.step_fn(acc, outk, outv, ok)
+        if spl:
+            acc, ckeys, cvals, caux, cmask = self.step_fn(
+                acc, outk, outv, bout, ok)
+            caf = caux.reshape(-1).astype(jnp.int32)
+        else:
+            acc, ckeys, cvals, cmask = self.step_fn(acc, outk, outv, ok)
+            caf = None
         cm = jnp.broadcast_to(cmask.astype(bool), ckeys.shape).reshape(-1)
         ckf = ckeys.reshape(-1).astype(jnp.int32)
         cvf = cvals.reshape(-1).astype(jnp.int32)
-        if tel:
-            pop_meta = masked_min_max(outk, ok)   # local popped-key extrema
-            (gk, gv, gactive, ranks, total, hints_pop, sizes_pop,
-             pop_mins, pop_maxs) = dist_priority_publish_round(
+        # local popped-key extrema (telemetry rides the publish psum)
+        pop_meta = masked_min_max(outk, ok) if tel else None
+        # dense-wave rule (DESIGN.md § 4.4): the relaxed install bound is
+        # shards·capacity — any round spawning more must overflow some
+        # shard's heap, where both paths install nothing
+        wdth = compact_width(ckf.shape[0], self.shards * self.capacity,
+                             self.compact)
+        if wdth is None:
+            res = dist_priority_publish_round(
                 ckf, cvf, cm.astype(jnp.int32), jnp.min(keys), size,
-                self.axis, pop_meta=pop_meta)
+                self.axis, pop_meta=pop_meta, aux=caf)
         else:
-            gk, gv, gactive, ranks, total, hints_pop, sizes_pop = \
-                dist_priority_publish_round(ckf, cvf, cm.astype(jnp.int32),
-                                            jnp.min(keys), size, self.axis)
+            res = dist_priority_publish_compact_round(
+                ckf, cvf, cm.astype(jnp.int32), jnp.min(keys), size,
+                self.axis, width=wdth, pop_meta=pop_meta, aux=caf)
+        gk, gv = res[0], res[1]
+        i = 2
+        if spl:
+            gaux = res[i]
+            i += 1
+        gactive, ranks, total, hints_pop, sizes_pop = res[i:i + 5]
+        i += 5
+        if tel:
+            pop_mins, pop_maxs = res[i], res[i + 1]
         shard_of = jnp.where(gactive, ranks % self.shards, self.shards)
-        assigned = (jnp.zeros((self.shards + 1,), jnp.int32)
-                    .at[shard_of].add(1))[:self.shards]
+        if wdth is None:
+            assigned = (jnp.zeros((self.shards + 1,), jnp.int32)
+                        .at[shard_of].add(1))[:self.shards]
+        else:
+            # ranks are the round-robin prefix 0..total-1, so the
+            # scatter-add has the closed form total//n + (s < total%n) —
+            # computed from the TRUE total, it stays exact even when a
+            # compact block clamped lanes (only possible when over)
+            s_ix = jnp.arange(self.shards, dtype=jnp.int32)
+            assigned = (total // self.shards
+                        + (s_ix < total % self.shards).astype(jnp.int32))
         over = jnp.any(sizes_pop + assigned > self.capacity)
         mine = gactive & (shard_of == me) & ~over
-        if sps:
+        if sps or spl:
             keys, vals, size, _, _, _, births, _ = heap_insert_masked(
                 keys, vals, size, gk, gv, mine,
                 cap_log2=self.capacity_log2, arity_log2=self.arity_log2,
-                rider=births, oprider=sp.round)
+                rider=births, oprider=gaux if spl else sp.round)
         else:
             keys, vals, size, _, _, _ = heap_insert_masked(
                 keys, vals, size, gk, gv, mine,
@@ -596,6 +665,8 @@ class _PriorityMeshBase(_FusedEngine):
             sp = span_record(sp, cls, sp.round - bout, ok, outv)
             sp = span_tick(sp)
             out = out + (sp, births)
+        elif spl:
+            out = out + (births,)
         return out
 
     def _round_strict(self, keys, vals, size, acc, tel: bool = False,
@@ -612,10 +683,11 @@ class _PriorityMeshBase(_FusedEngine):
         own ``claim_schedule`` slice into its sharded SpanPlane, so the
         host-side shard merge counts each task once (DESIGN.md §7.6)."""
         sps = sp is not None
+        spl = self.split
         me = jax.lax.axis_index(self.axis)
         sb = self.shards * self.batch
         k = jnp.minimum(size, jnp.int32(sb))
-        if sps:
+        if sps or spl:
             keys, vals, size, outk, outv, _, births, outb = heap_pop_count(
                 keys, vals, size, k, batch=sb,
                 cap_log2=self.capacity_log2, arity_log2=self.arity_log2,
@@ -629,19 +701,42 @@ class _PriorityMeshBase(_FusedEngine):
         rk_l = ranks.reshape(self.shards, self.batch)[me]
         outk_l = jnp.where(act_l, outk[rk_l], HEAP_KEY_INF)
         outv_l = jnp.where(act_l, outv[rk_l], -1)
-        acc, ckeys, cvals, cmask = self.step_fn(acc, outk_l, outv_l, act_l)
+        if spl:
+            outa_l = jnp.where(act_l, outb[rk_l], 0)
+            acc, ckeys, cvals, caux, cmask = self.step_fn(
+                acc, outk_l, outv_l, outa_l, act_l)
+            caf = caux.reshape(-1).astype(jnp.int32)
+        else:
+            acc, ckeys, cvals, cmask = self.step_fn(acc, outk_l, outv_l,
+                                                    act_l)
+            caf = None
         cm = jnp.broadcast_to(cmask.astype(bool), ckeys.shape).reshape(-1)
         ckf = ckeys.reshape(-1).astype(jnp.int32)
         cvf = cvals.reshape(-1).astype(jnp.int32)
-        gk, gv, gactive, _, total, _, _ = dist_priority_publish_round(
-            ckf, cvf, cm.astype(jnp.int32), jnp.min(keys), size, self.axis)
+        # dense-wave rule (DESIGN.md § 4.4): the strict install bound is
+        # the replicated heap's capacity
+        wdth = compact_width(ckf.shape[0], self.capacity, self.compact)
+        if wdth is None:
+            res = dist_priority_publish_round(
+                ckf, cvf, cm.astype(jnp.int32), jnp.min(keys), size,
+                self.axis, aux=caf)
+        else:
+            res = dist_priority_publish_compact_round(
+                ckf, cvf, cm.astype(jnp.int32), jnp.min(keys), size,
+                self.axis, width=wdth, aux=caf)
+        gk, gv = res[0], res[1]
+        i = 2
+        if spl:
+            gaux = res[i]
+            i += 1
+        gactive, total = res[i], res[i + 2]
         over = (size + total) > jnp.int32(self.capacity)
         ins = gactive & ~over
-        if sps:
+        if sps or spl:
             keys, vals, size, _, _, _, births, _ = heap_insert_masked(
                 keys, vals, size, gk, gv, ins,
                 cap_log2=self.capacity_log2, arity_log2=self.arity_log2,
-                rider=births, oprider=sp.round)
+                rider=births, oprider=gaux if spl else sp.round)
         else:
             keys, vals, size, _, _, _ = heap_insert_masked(
                 keys, vals, size, gk, gv, ins,
@@ -665,6 +760,8 @@ class _PriorityMeshBase(_FusedEngine):
             sp = span_record(sp, cls, sp.round - outb_l, act_l, outv_l)
             sp = span_tick(sp)
             out = out + (sp, births)
+        elif spl:
+            out = out + (births,)
         return out
 
     def _broadcast_acc(self, acc):
@@ -692,18 +789,20 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
                  sync_every: int = 0,
                  combine: Callable[[Any], Any] = None,
                  telemetry: Optional[Telemetry] = None,
-                 spans: Optional[Spans] = None) -> None:
+                 spans: Optional[Spans] = None, compact=None,
+                 split: bool = False) -> None:
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
                          arity_log2=arity_log2, relaxed=relaxed,
                          sync_every=sync_every, telemetry=telemetry,
-                         spans=spans)
+                         spans=spans, compact=compact, split=split)
         self.combine = combine
         # trailing (tp, sp, births) slots always exist — None compiles to
         # the exact unspanned/untraced graph.  TracePlane rides replicated;
         # the SpanPlane is sharded (each shard records its own pops); the
         # births plane matches its heap — per-shard (sharded) in relaxed
-        # mode, replicated in strict mode.
+        # mode, replicated in strict mode.  Split mode reuses the births
+        # slot for the aux rider plane (same shapes and specs).
         if relaxed:
             impl, hp = self._megaround_relaxed, P(self.axis)
             in_specs = (hp, hp, P(), P(), hp, P(), P(), P(), P())
@@ -727,8 +826,10 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
         acc = jax.tree_util.tree_map(lambda x: x[0], acc)
         tel = tp is not None
         sps = sp is not None
-        if sps:   # sharded SpanPlane + per-shard births arrive stacked
+        spl = self.split
+        if sps:   # sharded SpanPlane arrives stacked per shard
             sp = jax.tree_util.tree_map(lambda x: x[0], sp)
+        if sps or spl:   # per-shard births/aux rider arrives stacked too
             births = births[0]
 
         def body(carry):
@@ -745,6 +846,8 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
                                   mn, mx, over)
             if sps:
                 sp, births = r[i], r[i + 1]
+            elif spl:
+                births = r[i]
             return (keys, vals, sizes, hints, acc, processed + k,
                     spawned + total,
                     jnp.maximum(max_occ, jnp.sum(sizes)),
@@ -761,6 +864,7 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
         sp_out, births_out = out[11], out[12]
         if sps:
             sp_out = jax.tree_util.tree_map(lambda x: x[None], sp_out)
+        if sps or spl:
             births_out = births_out[None]
         return (out[0][None], out[1][None], out[2], out[3], acc_stacked,
                 out[5], out[6], out[7], out[8], out[9], out[10], sp_out,
@@ -772,6 +876,7 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
         acc = jax.tree_util.tree_map(lambda x: x[0], acc)
         tel = tp is not None
         sps = sp is not None
+        spl = self.split
         if sps:   # sharded SpanPlane arrives stacked; births is replicated
             sp = jax.tree_util.tree_map(lambda x: x[0], sp)
 
@@ -789,6 +894,8 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
                                   mn, mx, over)
             if sps:
                 sp, births = r[i], r[i + 1]
+            elif spl:
+                births = r[i]
             return (keys, vals, size, acc, processed + k, spawned + total,
                     jnp.maximum(max_occ, size), oflow | over, rounds + 1,
                     tp, sp, births)
@@ -808,8 +915,8 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
                 out[7], out[8], out[9], sp_out, out[11])
 
     def run(self, initial_keys: np.ndarray, initial_vals: np.ndarray,
-            acc: Any = None, max_rounds: int = 10_000
-            ) -> Tuple[Any, DistHeapState]:
+            acc: Any = None, max_rounds: int = 10_000,
+            initial_aux: np.ndarray = None) -> Tuple[Any, DistHeapState]:
         """Seed the heap planes (relaxed: round-robin spray by seed rank;
         strict: one replicated heap) and run priority megarounds to
         global quiescence.  Sync contract: one host block per
@@ -818,20 +925,30 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
         Raises ``RuntimeError`` on heap overflow or truncation at the
         next sync.  Returns ``(acc, DistHeapState)`` — relaxed-mode
         planes stacked ``(shards, cap)`` with per-shard sizes, acc with a
-        leading shard axis unless ``combine`` reduces it."""
+        leading shard axis unless ``combine`` reduces it.  In split mode
+        ``initial_aux`` seeds the per-item aux words (zeros when None)."""
         self._reset()
         ik = np.asarray(initial_keys, np.int32).reshape(-1)
         iv = np.asarray(initial_vals, np.int32).reshape(-1)
         assert ik.shape == iv.shape
+        spl = self.split
+        if spl:
+            ia = (np.zeros_like(ik) if initial_aux is None
+                  else np.asarray(initial_aux, np.int32).reshape(-1))
+            assert ia.shape == ik.shape
+        else:
+            ia = None
         acc = self._broadcast_acc(acc)
         if self.relaxed:
-            keys, vals, sizes, hints = self._seed(ik, iv)
+            seeded = self._seed(ik, iv, ia)
+            keys, vals, sizes, hints = seeded[:4]
             occ0 = jnp.int32(int(np.asarray(sizes).sum()))
             state = [keys, vals, sizes, hints, acc,
                      jnp.int32(0), jnp.int32(0), occ0]
             ext = [self._tel_init(self.shards),
                    self._span_init(self.shards, stacked=True),
-                   self._births_init((self.shards, self.capacity))]
+                   seeded[4] if spl
+                   else self._births_init((self.shards, self.capacity))]
             self._tel_plane = lambda: ext[0]
             self._span_plane = lambda: ext[1]
 
@@ -848,12 +965,13 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
             self._drive(chunk_fn, max_rounds, "mesh heap")
             final = DistHeapState(state[0], state[1], state[2])
         else:
-            keys, vals, size = self._seed(ik, iv)
+            seeded = self._seed(ik, iv, ia)
+            keys, vals, size = seeded[:3]
             state = [keys, vals, size, acc,
                      jnp.int32(0), jnp.int32(0), jnp.asarray(size, jnp.int32)]
             ext = [self._tel_init(self.shards),
                    self._span_init(self.shards, stacked=True),
-                   self._births_init((self.capacity,))]
+                   seeded[3] if spl else self._births_init((self.capacity,))]
             self._tel_plane = lambda: ext[0]
             self._span_plane = lambda: ext[1]
 
@@ -893,12 +1011,13 @@ class PriorityMeshRoundRunner(_PriorityMeshBase):
                  combine: Callable[[Any], Any] = None,
                  trace: bool = False,
                  telemetry: Optional[Telemetry] = None,
-                 spans: Optional[Spans] = None) -> None:
+                 spans: Optional[Spans] = None, compact=None,
+                 split: bool = False) -> None:
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
                          arity_log2=arity_log2, relaxed=relaxed,
                          sync_every=sync_every, telemetry=telemetry,
-                         spans=spans)
+                         spans=spans, compact=compact, split=split)
         self.fused = fused
         self.combine = combine
         if trace and fused:
@@ -915,18 +1034,21 @@ class PriorityMeshRoundRunner(_PriorityMeshBase):
                 step_fn, mesh=mesh, axis=axis, capacity_log2=capacity_log2,
                 batch=batch, arity_log2=arity_log2, relaxed=relaxed,
                 sync_every=sync_every, combine=combine, telemetry=telemetry,
-                spans=spans)
+                spans=spans, compact=compact, split=split)
             return
         self._engine = None
         sp = P(self.axis)
+        # split mode threads the aux rider plane through the per-round
+        # state: per-shard (sharded) in relaxed mode, replicated in strict
+        # mode, sitting right after the heap planes in state order
         if relaxed:
             impl, hp = self._round_impl_relaxed, sp
-            in_specs = (hp, hp, P(), P(), sp)
-            out_core = (hp, hp, P(), P(), sp, P(), P(), P())
+            in_specs = (hp, hp, P(), P()) + ((hp,) if split else ()) + (sp,)
+            out_core = (in_specs + (P(), P(), P()))
         else:
             impl, hp = self._round_impl_strict, P()
-            in_specs = (hp, hp, P(), sp)
-            out_core = (hp, hp, P(), sp, P(), P(), P())
+            in_specs = (hp, hp, P()) + ((P(),) if split else ()) + (sp,)
+            out_core = (in_specs + (P(), P(), P()))
         # trace arrays ride in the jit outputs only when recording — the
         # untraced legacy baseline must not pay per-round materialization
         # the fused engine never pays
@@ -942,39 +1064,61 @@ class PriorityMeshRoundRunner(_PriorityMeshBase):
             round_fn, mesh=self.mesh, in_specs=in_specs,
             out_specs=out_specs, check_rep=False))
 
-    def _round_impl_relaxed(self, keys, vals, sizes, hints, acc):
+    def _round_impl_relaxed(self, keys, vals, sizes, hints, *rest):
+        if self.split:
+            births, acc = rest
+            births = births[0]
+        else:
+            (acc,) = rest
+            births = None
         keys, vals = keys[0], vals[0]
         acc = jax.tree_util.tree_map(lambda x: x[0], acc)
-        keys, vals, sizes, hints, acc, k, total, over, tr = \
-            self._round_relaxed(keys, vals, sizes, hints, acc)
+        r = self._round_relaxed(keys, vals, sizes, hints, acc,
+                                births=births)
+        keys, vals, sizes, hints, acc, k, total, over = r[:8]
+        tr = r[8]
         acc = jax.tree_util.tree_map(lambda x: x[None], acc)
         outk, outv, ok, gk, gv, gactive = tr
-        return (keys[None], vals[None], sizes, hints, acc, k, total, over,
-                outk[None], outv[None], ok[None], gk, gv, gactive)
+        core = (keys[None], vals[None], sizes, hints)
+        if self.split:
+            core = core + (r[9][None],)
+        return core + (acc, k, total, over,
+                       outk[None], outv[None], ok[None], gk, gv, gactive)
 
-    def _round_impl_strict(self, keys, vals, size, acc):
+    def _round_impl_strict(self, keys, vals, size, *rest):
+        if self.split:
+            births, acc = rest
+        else:
+            (acc,) = rest
+            births = None
         acc = jax.tree_util.tree_map(lambda x: x[0], acc)
-        keys, vals, size, acc, k, total, over, tr = \
-            self._round_strict(keys, vals, size, acc)
+        r = self._round_strict(keys, vals, size, acc, births=births)
+        keys, vals, size, acc, k, total, over = r[:7]
+        tr = r[7]
         acc = jax.tree_util.tree_map(lambda x: x[None], acc)
         outk, outv, ok, gk, gv, gactive = tr
-        return (keys, vals, size, acc, k, total, over,
-                outk[None], outv[None], ok[None], gk, gv, gactive)
+        core = (keys, vals, size)
+        if self.split:
+            core = core + (r[8],)
+        return core + (acc, k, total, over,
+                       outk[None], outv[None], ok[None], gk, gv, gactive)
 
     def run(self, initial_keys: np.ndarray, initial_vals: np.ndarray,
-            acc: Any = None, max_rounds: int = 10_000
-            ) -> Tuple[Any, DistHeapState]:
+            acc: Any = None, max_rounds: int = 10_000,
+            initial_aux: np.ndarray = None) -> Tuple[Any, DistHeapState]:
         """Run to quiescence on the selected engine.  ``fused=True``:
         ``FusedPriorityMeshRounds.run`` contract (host sync only at
         quiescence / ``sync_every``); ``fused=False``: one dispatch and
         one occupancy readback per round (``host_syncs == rounds``),
         appending per-round pop/push records to ``self.trace`` when
         ``trace=True``.  Both bit-deterministic and identical to each
-        other; both raise on overflow/truncation."""
+        other; both raise on overflow/truncation.  In split mode
+        ``initial_aux`` seeds the per-item aux words (zeros when None)."""
         if self._engine is not None:
             try:
                 return self._engine.run(initial_keys, initial_vals, acc,
-                                        max_rounds)
+                                        max_rounds,
+                                        initial_aux=initial_aux)
             finally:
                 self.stats = dict(self._engine.stats, fused=1)
                 self.sync_log = self._engine.sync_log
@@ -983,14 +1127,27 @@ class PriorityMeshRoundRunner(_PriorityMeshBase):
         ik = np.asarray(initial_keys, np.int32).reshape(-1)
         iv = np.asarray(initial_vals, np.int32).reshape(-1)
         assert ik.shape == iv.shape
+        spl = self.split
+        if spl:
+            ia = (np.zeros_like(ik) if initial_aux is None
+                  else np.asarray(initial_aux, np.int32).reshape(-1))
+            assert ia.shape == ik.shape
+        else:
+            ia = None
         acc = self._broadcast_acc(acc)
         if self.relaxed:
-            keys, vals, sizes, hints = self._seed(ik, iv)
+            seeded = self._seed(ik, iv, ia)
+            keys, vals, sizes, hints = seeded[:4]
             state = [keys, vals, sizes, hints]
+            if spl:
+                state.append(seeded[4])
             occ = int(np.asarray(sizes).sum())
         else:
-            keys, vals, size = self._seed(ik, iv)
+            seeded = self._seed(ik, iv, ia)
+            keys, vals, size = seeded[:3]
             state = [keys, vals, size]
+            if spl:
+                state.append(seeded[3])
             occ = int(np.asarray(size))
         rounds = processed = spawned = host_syncs = 0
         max_occ = occ

@@ -67,7 +67,8 @@ class RoundRunner:
 
     def __init__(self, step_fn: StepFn, *, capacity_log2: int = 10,
                  batch: int = 64, interpret=None, fused: bool = True,
-                 sync_every: int = 0, telemetry=None, spans=None) -> None:
+                 sync_every: int = 0, telemetry=None, spans=None,
+                 compact=None) -> None:
         self.step_fn = jax.jit(step_fn)
         self.capacity_log2 = capacity_log2
         self.nslots_log2 = capacity_log2 + 1
@@ -89,7 +90,7 @@ class RoundRunner:
             self._engine = FusedRounds(
                 step_fn, capacity_log2=capacity_log2, batch=batch,
                 interpret=self.interpret, sync_every=sync_every,
-                telemetry=telemetry, spans=spans)
+                telemetry=telemetry, spans=spans, compact=compact)
         else:
             self._engine = None
             # legacy-path op buffers, reused across rounds (safe because
@@ -193,7 +194,7 @@ class PriorityRoundRunner:
     def __init__(self, step_fn: PriorityStepFn, *, capacity_log2: int = 10,
                  batch: int = 64, arity_log2: int = 2, interpret=None,
                  fused: bool = True, sync_every: int = 0,
-                 telemetry=None, spans=None) -> None:
+                 telemetry=None, spans=None, compact=None) -> None:
         self.step_fn = jax.jit(step_fn)
         self.capacity_log2 = capacity_log2
         self.capacity = 1 << capacity_log2
@@ -215,7 +216,8 @@ class PriorityRoundRunner:
             self._engine = FusedPriorityRounds(
                 step_fn, capacity_log2=capacity_log2, batch=batch,
                 arity_log2=arity_log2, interpret=self.interpret,
-                sync_every=sync_every, telemetry=telemetry, spans=spans)
+                sync_every=sync_every, telemetry=telemetry, spans=spans,
+                compact=compact)
         else:
             self._engine = None
             # legacy-path op buffers, reused across rounds (safe because

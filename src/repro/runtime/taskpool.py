@@ -479,7 +479,7 @@ class PriorityFabric(_FabricBase):
 
 class HostTaskPool:
     """The same sharded/laned/stealing fabric for real host threads, built
-    from ``HostRing``s (DESIGN.md § 4.4).  API mirrors ``HostRing`` so it
+    from ``HostRing``s (DESIGN.md § 4.5).  API mirrors ``HostRing`` so it
     drops into the serving engine: ``enqueue(item, timeout=, priority=)``,
     ``dequeue(timeout=, affinity=)``, ``empty()``.
 

@@ -307,6 +307,47 @@ def test_sssp_payload_packing_guard():
         sssp.sssp_mesh_rounds_runner(g, w, mesh=_mesh1())
 
 
+@pytest.mark.parametrize("relaxed", [True, False])
+def test_sssp_split_payload_parity(relaxed):
+    """Two-plane (key, payload) mode: the aux rider carries the exact
+    distance, everything stays exact and fused/legacy/compact
+    bit-identical."""
+    from repro.apps import bfs, sssp
+    mesh = _mesh1()
+    g = bfs.kron_like(150, avg_deg=5, seed=2)
+    w = sssp.with_weights(g, max_w=8, seed=1)
+    ref = sssp.dijkstra_reference(g, w, 0)
+    res = {}
+    for fused in (True, False):
+        for compact in (None, True):
+            dist, stats = sssp.sssp_mesh_rounds(
+                g, w, 0, mesh=mesh, batch=32, relaxed=relaxed, fused=fused,
+                compact=compact, split_payload=True)
+            np.testing.assert_array_equal(dist, ref)
+            res[(fused, compact)] = stats
+    for k in STAT_KEYS:
+        vals = {v[k] for v in res.values()}
+        assert len(vals) == 1, (k, res)
+
+
+def test_sssp_split_payload_lifts_packed_cap():
+    """Cap-boundary regression: a graph whose (d·n + v) packing overflows
+    int32 trips the packed ValueError but runs exact in split mode —
+    only the raw distances must fit."""
+    from repro.apps import bfs, sssp
+    g = bfs.road_like(49)
+    w = np.full(g.m, 10 ** 6, np.int32)       # max_d ≈ 48e6: packed ≫ 2^31
+    assert (((g.n - 1) * 10 ** 6 + 10 ** 6) * g.n + g.n - 1) >= 2 ** 31
+    assert ((g.n - 1) * 10 ** 6 + 10 ** 6) < 2 ** 31
+    with pytest.raises(ValueError, match="packed"):
+        sssp.sssp_mesh_rounds_runner(g, w, mesh=_mesh1())
+    ref = sssp.dijkstra_reference(g, w, 0)
+    dist, stats = sssp.sssp_mesh_rounds(g, w, 0, mesh=_mesh1(), batch=16,
+                                        split_payload=True)
+    np.testing.assert_array_equal(dist, ref)
+    assert stats["drained"] == 1
+
+
 # -- ≥2-shard acceptance (forced-device subprocess) ---------------------------
 
 

@@ -17,6 +17,12 @@ that persists across several snapshots is the actionable signal.
 ``--strict`` turns flagged regressions into a nonzero exit for local
 bisection.
 
+Sections absent from the immediate predecessor fall back per-section to
+the most recent older snapshot that carries them (sweeps come and go
+between PRs — e.g. the ``rounds`` section skips from BENCH_3 to BENCH_8),
+so no section silently loses its baseline just because the previous
+snapshot dropped it.
+
 Run: ``python tools/bench_compare.py [OLD.json NEW.json]``
 """
 
@@ -59,20 +65,59 @@ def _metrics(row: dict) -> dict:
             and isinstance(v, (int, float))}
 
 
-def latest_pair():
-    """The two newest BENCH_<n>.json paths (old, new); None when fewer
-    than two exist."""
+def _snapshots():
+    """All repo-root BENCH_<n>.json paths as sorted (id, path) pairs."""
     snaps = []
     for p in glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json")):
         m = re.match(r"BENCH_(\d+)\.json$", os.path.basename(p))
         if m:
             snaps.append((int(m.group(1)), p))
     snaps.sort()
+    return snaps
+
+
+def latest_pair():
+    """The two newest BENCH_<n>.json paths (old, new); None when fewer
+    than two exist."""
+    snaps = _snapshots()
     return (snaps[-2][1], snaps[-1][1]) if len(snaps) >= 2 else None
 
 
-def compare(old_path: str, new_path: str, *, tolerance: float = 0.25):
-    """Compare two trajectory snapshots.  Returns ``(report_lines,
+def _compare_section(sec, old_rows, new_rows, tolerance, lines,
+                     regressions, src=""):
+    old_by_id = {_identity(r): r for r in old_rows}
+    matched = flagged = 0
+    for r in new_rows:
+        o = old_by_id.get(_identity(r))
+        if o is None:
+            continue
+        for metric, nv in _metrics(r).items():
+            ov = o.get(metric)
+            if not isinstance(ov, (int, float)) or ov <= 0:
+                continue
+            matched += 1
+            delta = nv / ov - 1.0
+            if delta < -tolerance:
+                flagged += 1
+                ident = {k: v for k, v in r.items()
+                         if isinstance(v, str) or k in _IDENTITY_NUMERIC}
+                reg = {"section": sec, "metric": metric, "old": ov,
+                       "new": nv, "delta_pct": round(delta * 100, 1),
+                       "row": ident}
+                regressions.append(reg)
+                lines.append(
+                    f"  REGRESSION {sec}: {metric} {ov} -> {nv} "
+                    f"({reg['delta_pct']:+.1f}%) at {ident}")
+    lines.append(f"  {sec}: {matched} metric(s) compared, "
+                 f"{flagged} flagged{src}")
+
+
+def compare(old_path: str, new_path: str, *, tolerance: float = 0.25,
+            history=()):
+    """Compare two trajectory snapshots.  ``history`` is an ordered
+    (newest-first) list of older snapshot paths: a section present in the
+    new snapshot but missing from the old one falls back to the most
+    recent history snapshot that carries it.  Returns ``(report_lines,
     regressions)`` where ``regressions`` is the flagged subset."""
     with open(old_path) as f:
         old = json.load(f)
@@ -84,40 +129,40 @@ def compare(old_path: str, new_path: str, *, tolerance: float = 0.25):
              f"tolerance {tolerance:.0%}"]
     regressions = []
     shared = sorted(set(old["sections"]) & set(new["sections"]))
-    skipped = sorted(set(old["sections"]) ^ set(new["sections"]))
-    if skipped:
-        lines.append(f"  sections only in one snapshot (skipped): "
-                     f"{', '.join(skipped)}")
+    only_old = sorted(set(old["sections"]) - set(new["sections"]))
+    missing = sorted(set(new["sections"]) - set(old["sections"]))
+    if only_old:
+        lines.append(f"  sections only in the old snapshot (skipped): "
+                     f"{', '.join(only_old)}")
     if old.get("config", {}).get("quick") != new.get("config", {}).get("quick"):
         lines.append("  WARNING: quick-mode mismatch between snapshots — "
                      "sweep sizes differ, deltas are not comparable")
     for sec in shared:
-        old_rows = {_identity(r): r for r in old["sections"][sec]}
-        matched = flagged = 0
-        for r in new["sections"][sec]:
-            o = old_rows.get(_identity(r))
-            if o is None:
+        _compare_section(sec, old["sections"][sec], new["sections"][sec],
+                         tolerance, lines, regressions)
+    # per-section fallback: a section the predecessor dropped still gets
+    # the most recent baseline that carries it (e.g. rounds: BENCH_3 -> 8)
+    for sec in missing:
+        fell_back = False
+        for hp in history:
+            if os.path.abspath(hp) in (os.path.abspath(old_path),
+                                       os.path.abspath(new_path)):
                 continue
-            for metric, nv in _metrics(r).items():
-                ov = o.get(metric)
-                if not isinstance(ov, (int, float)) or ov <= 0:
-                    continue
-                matched += 1
-                delta = nv / ov - 1.0
-                if delta < -tolerance:
-                    flagged += 1
-                    ident = {k: v for k, v in r.items()
-                             if isinstance(v, str) or k in _IDENTITY_NUMERIC}
-                    reg = {"section": sec, "metric": metric, "old": ov,
-                           "new": nv, "delta_pct": round(delta * 100, 1),
-                           "row": ident}
-                    regressions.append(reg)
-                    lines.append(
-                        f"  REGRESSION {sec}: {metric} {ov} -> {nv} "
-                        f"({reg['delta_pct']:+.1f}%) at {ident}")
-        lines.append(f"  {sec}: {matched} metric(s) compared, "
-                     f"{flagged} flagged")
-    if not shared:
+            try:
+                with open(hp) as f:
+                    hist = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                continue
+            if sec in hist.get("sections", {}):
+                _compare_section(
+                    sec, hist["sections"][sec], new["sections"][sec],
+                    tolerance, lines, regressions,
+                    src=f" (baseline: {os.path.basename(hp)})")
+                fell_back = True
+                break
+        if not fell_back:
+            lines.append(f"  {sec}: new section, no earlier baseline")
+    if not shared and not missing:
         lines.append("  no shared sections — nothing compared")
     lines.append(f"bench_compare: {'REGRESSIONS FLAGGED' if regressions else 'OK'} "
                  f"({len(regressions)} flagged)")
@@ -147,8 +192,10 @@ def main(argv=None) -> int:
     else:
         ap.error("give exactly two snapshot paths, or none for the two "
                  "newest BENCH_<n>.json")
+    history = [p for _, p in reversed(_snapshots())]   # newest first
     lines, regressions = compare(pair[0], pair[1],
-                                 tolerance=args.tolerance)
+                                 tolerance=args.tolerance,
+                                 history=history)
     print("\n".join(lines))
     return 1 if (args.strict and regressions) else 0
 
