@@ -33,7 +33,8 @@ import sys
 import time
 
 HEADER = ("bench,workload,batch,shards,mode,rounds,items,elapsed_s,"
-          "rounds_per_s,items_per_s,host_syncs,drained")
+          "rounds_per_s,items_per_s,host_syncs,drained,"
+          "carry_bytes_per_shard")
 TRIALS = 3
 
 
@@ -94,8 +95,8 @@ def _mesh(shards: int):
     return make_mesh((shards,), ("data",))
 
 
-def _fanout_runner(mesh, batch: int, *, fused: bool, depth: int = 14,
-                   roots: int = 4, sync_every: int = 0):
+def _fanout_runner(mesh, batch: int, *, fused: bool, sharded: bool = False,
+                   depth: int = 14, roots: int = 4, sync_every: int = 0):
     import jax.numpy as jnp
     import numpy as np
     from repro.runtime import MeshRoundRunner
@@ -106,20 +107,22 @@ def _fanout_runner(mesh, batch: int, *, fused: bool, depth: int = 14,
                    int(np.ceil(np.log2(4 * batch * shards))))
     runner = MeshRoundRunner(_fanout_step(2, depth), mesh=mesh,
                              capacity_log2=cap_log2, batch=batch,
-                             fused=fused, sync_every=sync_every,
+                             fused=fused, sharded=sharded,
+                             sync_every=sync_every,
                              combine=lambda a: a.sum(0))
     seeds = np.full(roots, depth, np.int32)
     acc0 = jnp.zeros(depth + 1, jnp.int32)
     return runner, seeds, acc0
 
 
-def run_fanout(mesh, batch: int, *, fused: bool, depth: int = 14,
-               roots: int = 4, trials: int = TRIALS):
+def run_fanout(mesh, batch: int, *, fused: bool, sharded: bool = False,
+               depth: int = 14, roots: int = 4, trials: int = TRIALS):
     """Best-of-``trials`` timed fanout run (post-warmup).  Returns
     (row dict, acc, state)."""
     import numpy as np
     runner, seeds, acc0 = _fanout_runner(mesh, batch, fused=fused,
-                                         depth=depth, roots=roots)
+                                         sharded=sharded, depth=depth,
+                                         roots=roots)
     acc, st = runner.run(seeds, acc=acc0, max_rounds=1_000_000)  # warmup
     best = None
     for _ in range(trials):
@@ -127,8 +130,9 @@ def run_fanout(mesh, batch: int, *, fused: bool, depth: int = 14,
         acc, st = runner.run(seeds, acc=acc0, max_rounds=1_000_000)
         el = time.perf_counter() - t0
         best = el if best is None else min(best, el)
-    row = _row("fanout", batch, int(mesh.shape["data"]), fused,
-               runner.stats, best)
+    mode = "sharded" if sharded else ("fused" if fused else "legacy")
+    row = _row("fanout", batch, int(mesh.shape["data"]), mode,
+               runner.stats, best, runner.loop_carry_bytes())
     return row, np.asarray(acc), st
 
 
@@ -148,22 +152,24 @@ def run_bfs(mesh, batch: int, *, fused: bool, graph: str = "road",
         dist, _ = runner.run([0], acc=init_fn(0), max_rounds=1_000_000)
         el = time.perf_counter() - t0
         best = el if best is None else min(best, el)
-    row = _row(f"bfs_{graph}", batch, int(mesh.shape["data"]), fused,
-               runner.stats, best)
+    row = _row(f"bfs_{graph}", batch, int(mesh.shape["data"]),
+               "fused" if fused else "legacy", runner.stats, best,
+               runner.loop_carry_bytes())
     return row, np.asarray(dist)
 
 
-def _row(workload: str, batch: int, shards: int, fused: bool, stats: dict,
-         elapsed: float) -> dict:
+def _row(workload: str, batch: int, shards: int, mode: str, stats: dict,
+         elapsed: float, carry_bytes: int) -> dict:
     rounds, items = stats["rounds"], stats["processed"]
     return {
         "workload": workload, "batch": batch, "shards": shards,
-        "mode": "fused" if fused else "legacy",
+        "mode": mode,
         "rounds": rounds, "items": items,
         "elapsed_s": round(elapsed, 4),
         "rounds_per_s": round(rounds / max(elapsed, 1e-9), 1),
         "items_per_s": round(items / max(elapsed, 1e-9), 1),
         "host_syncs": stats["host_syncs"], "drained": stats["drained"],
+        "carry_bytes_per_shard": carry_bytes,
     }
 
 
@@ -171,7 +177,33 @@ def _emit(out, row: dict) -> None:
     print(f"mesh,{row['workload']},{row['batch']},{row['shards']},"
           f"{row['mode']},{row['rounds']},{row['items']},{row['elapsed_s']},"
           f"{row['rounds_per_s']},{row['items_per_s']},{row['host_syncs']},"
-          f"{row['drained']}", file=out)
+          f"{row['drained']},{row['carry_bytes_per_shard']}", file=out)
+
+
+def run_fanout_interleaved(mesh, batch: int, *, depth: int = 14,
+                           roots: int = 4, trials: int = TRIALS):
+    """Timed fanout sweep over all three modes with trials interleaved
+    (min-of-interleaved-trials: shared-runner scheduler drift hits every
+    mode equally instead of biasing whichever ran last)."""
+    modes = ("legacy", "fused", "sharded")
+    rigs, best = {}, {}
+    for mode in modes:
+        rigs[mode] = _fanout_runner(mesh, batch, fused=mode != "legacy",
+                                    sharded=mode == "sharded",
+                                    depth=depth, roots=roots)
+        runner, seeds, acc0 = rigs[mode]
+        runner.run(seeds, acc=acc0, max_rounds=1_000_000)        # warmup
+    for _ in range(trials):
+        for mode in modes:
+            runner, seeds, acc0 = rigs[mode]
+            t0 = time.perf_counter()
+            runner.run(seeds, acc=acc0, max_rounds=1_000_000)
+            el = time.perf_counter() - t0
+            best[mode] = min(best.get(mode, el), el)
+    return {mode: _row("fanout", batch, int(mesh.shape["data"]), mode,
+                       rigs[mode][0].stats, best[mode],
+                       rigs[mode][0].loop_carry_bytes())
+            for mode in modes}
 
 
 def inner_main(out, shards: int, batches, bfs_n: int,
@@ -179,17 +211,20 @@ def inner_main(out, shards: int, batches, bfs_n: int,
     mesh = _mesh(shards)
     print(f"bench,{HEADER.split(',', 1)[1]}", file=out)
     for batch in batches:
-        by_mode = {}
-        for fused in (False, True):
-            row, _, _ = run_fanout(mesh, batch, fused=fused)
+        by_mode = run_fanout_interleaved(mesh, batch)
+        for row in by_mode.values():
             _emit(out, row)
-            by_mode[row["mode"]] = row
         speedup = (by_mode["fused"]["rounds_per_s"]
                    / max(by_mode["legacy"]["rounds_per_s"], 1e-9))
+        ratio = (by_mode["sharded"]["rounds_per_s"]
+                 / max(by_mode["fused"]["rounds_per_s"], 1e-9))
         print(f"# mesh fanout batch={batch} shards={shards}: fused "
               f"{speedup:.1f}x rounds/s, host_syncs "
               f"{by_mode['legacy']['host_syncs']} -> "
-              f"{by_mode['fused']['host_syncs']}", file=out)
+              f"{by_mode['fused']['host_syncs']}; sharded rings "
+              f"{by_mode['sharded']['carry_bytes_per_shard']} B/shard "
+              f"carry vs {by_mode['fused']['carry_bytes_per_shard']} B "
+              f"replicated at {ratio:.2f}x fused rounds/s", file=out)
     for graph in graphs:
         for batch in batches:
             for fused in (False, True):
@@ -231,6 +266,23 @@ def inner_smoke(out, shards: int) -> bool:
     if not (row_f["host_syncs"] == 1
             and row_l["host_syncs"] == row_l["rounds"]):
         print("# FAIL: mesh fused path did not reduce host syncs", file=out)
+        ok = False
+
+    # sharded rings: same results, per-shard carry O(ring/shards)
+    row_s, acc_s, _ = run_fanout(mesh, 32, fused=True, sharded=True,
+                                 depth=6, roots=2, trials=1)
+    _emit(out, row_s)
+    if not np.array_equal(acc_s, _expected_fanout_acc(2, 6, 2)):
+        print("# FAIL: sharded mesh fanout acc mismatch", file=out)
+        ok = False
+    if row_s["host_syncs"] != 1:
+        print("# FAIL: sharded mesh path did not reduce host syncs",
+              file=out)
+        ok = False
+    if shards > 1 and not (row_s["carry_bytes_per_shard"]
+                           < row_f["carry_bytes_per_shard"]):
+        print("# FAIL: sharded rings do not shrink per-shard loop carry",
+              file=out)
         ok = False
 
     g = bfs.road_like(256)

@@ -605,3 +605,149 @@ def dist_priority_publish_compact_round(ckeys: jax.Array, cvals: jax.Array,
     if pop_meta is not None:
         out = out + (gmeta[:, 3], gmeta[:, 4])
     return out
+
+
+# ---------------------------------------------------------------------------
+# sharded FIFO plane (DESIGN.md § 2.3) — per-shard rings, O(ring/shards)
+# ---------------------------------------------------------------------------
+
+
+class DistShardedQueueState(NamedTuple):
+    """Per-shard ring planes: each shard owns ONE local 2n/S-slot ring
+    (the planes are ``P(axis)``-sharded; inside shard_map they are this
+    shard's local (2n_l,) slices) while the (S,) head/tail ticket vectors
+    stay replicated — they evolve by replicated arithmetic (the claim
+    schedule and the round-robin spray are pure functions of replicated
+    values), so no occupancy meta word rides the psum.  Loop-carry memory
+    per shard is O(ring/shards) + O(S), versus the replicated
+    ``DistQueueState``'s O(ring) — the same plane discipline
+    ``DistHeapState`` uses for the relaxed priority mesh."""
+    cycles: jax.Array   # (2n_l,) int32 local slice (global (S, 2n_l))
+    safes: jax.Array    # (2n_l,) int32
+    enqs: jax.Array     # (2n_l,) int32
+    idxs: jax.Array     # (2n_l,) int32 — payload or ⊥ / ⊥_c
+    tails: jax.Array    # (S,) int32 replicated — per-shard unsigned tickets
+    heads: jax.Array    # (S,) int32 replicated
+
+    @property
+    def occupancy(self):
+        return jnp.sum(self.tails - self.heads)  # wraparound differences
+
+
+def dist_sharded_queue_init(capacity: int, shards: int
+                            ) -> DistShardedQueueState:
+    """Global capacity rounded up to a power of two and split evenly over
+    ``shards`` local rings (shards must be a power of two dividing the
+    capacity, so each local slot count stays a power of two and wrapped
+    tickets keep mask indexing).  Returns the GLOBAL stacked state —
+    planes (S, 2n_l) ready for ``P(axis)`` sharding — with every ring
+    starting at head = tail = 2n_l (first tickets: cycle 1 over
+    cycle-0 slots, as in the chip ring)."""
+    if shards < 1 or shards & (shards - 1):
+        raise ValueError(f"shards {shards} must be a power of two")
+    cap = 1 << max(int(capacity) - 1, 1).bit_length()
+    if cap < shards:
+        raise ValueError(f"capacity {cap} smaller than {shards} shards")
+    local = cap // shards
+    n2 = 2 * local
+    return DistShardedQueueState(
+        cycles=jnp.zeros((shards, n2), jnp.int32),
+        safes=jnp.ones((shards, n2), jnp.int32),
+        enqs=jnp.zeros((shards, n2), jnp.int32),
+        idxs=jnp.full((shards, n2), IDX_BOT),
+        tails=jnp.full((shards,), n2, jnp.int32),
+        heads=jnp.full((shards,), n2, jnp.int32),
+    )
+
+
+def dist_sharded_claim_round(planes, heads, tails, batch: int, axis: str, *,
+                             nslots_log2: int):
+    """Claim up to ``S · batch`` items from the per-shard rings with NO
+    collective: the per-shard pop counts are ``priority_claim_schedule``
+    over the replicated (S,) occupancies — hints are the *negated*
+    occupancies, so the round's budget lands on the fullest rings first
+    (Wang-style dynamic rebalancing with zero exchange).  A shard only
+    ever dequeues its OWN ring (tickets ``heads[me] + lane``, one
+    sub-wave — batch ≤ local capacity < 2n_l).  The schedule's per-shard
+    clamp means an imbalanced mesh may claim fewer than the global budget
+    this round; the remainder drains over subsequent rounds.  Returns
+    ``(planes, heads, vals (batch,), ok (batch,), counts (S,))``."""
+    n = _axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    occs = tails - heads
+    k = jnp.minimum(jnp.sum(occs), n * batch)
+    counts = priority_claim_schedule(k, n, batch, -occs, occs)
+    lane = jnp.arange(batch, dtype=jnp.int32)
+    active = lane < counts[me]
+    tickets = jnp.where(active, heads[me] + lane, 0)
+    planes, vals, ok = _apply_dequeue(planes, tickets, active, lane,
+                                      nslots_log2=nslots_log2,
+                                      engine="planes")
+    return planes, heads + counts, vals, ok > 0, counts
+
+
+def dist_sharded_publish_round(planes, heads, tails, values, mask,
+                               axis: str, *, nslots_log2: int,
+                               local_capacity: int, width: int = None,
+                               pop_meta=None):
+    """The sharded ring's ONE collective per round: gather every shard's
+    child block (sparse (B,) mask or dense-wave ``width`` lanes with a
+    count meta word — DESIGN.md § 4.4), then spray children round-robin
+    by global rank (``rank % S`` — global ranks are contiguous, so the
+    per-shard install counts are the closed form ``total//S + (s <
+    total%S)``: replicated, no occupancy word needed).  Each shard
+    installs only its own slice (local ticket ``tails[me] + rank//S``,
+    one sub-wave).  Overflow is whole-round: if ANY local ring would
+    exceed ``local_capacity``, nothing installs anywhere and ``over``
+    returns True (the fused driver raises at the next sync), exactly the
+    replicated publish's suppression contract.
+
+    ``pop_meta=(local_min, local_max)`` rides extrema words on the same
+    psum (the telemetry path — local claim extrema are NOT replicated, so
+    they must cross the mesh to land in the replicated trace plane;
+    one-collective-per-round still holds).  Returns ``(planes, tails,
+    total, over, assigned (S,)[, pop_mins (S,), pop_maxs (S,)])``."""
+    n = _axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    mask_i = (mask > 0).astype(jnp.int32)
+    meta_words = []
+    if pop_meta is not None:
+        meta_words = [jnp.asarray(pop_meta[0], jnp.int32),
+                      jnp.asarray(pop_meta[1], jnp.int32)]
+    if width is None:
+        blocks = (values.astype(jnp.int32), mask_i)
+        if meta_words:
+            g = mesh_round_gather(blocks + (jnp.stack(meta_words),), axis)
+            gmeta = g[2]
+        else:
+            g = mesh_round_gather(blocks, axis)
+            gmeta = None
+        gv, gm = g[0].reshape(-1), g[1].reshape(-1)
+        active = gm > 0
+        ranks = jnp.cumsum(gm) - gm
+        total = jnp.sum(gm)
+    else:
+        (dv,), count = compact_planes(mask_i, (values.astype(jnp.int32),),
+                                      width=width)
+        meta = jnp.stack([count.astype(jnp.int32)] + meta_words)
+        g = mesh_round_gather((dv, meta), axis)
+        counts_pub = g[1][:, 0]
+        gmeta = g[1][:, 1:] if meta_words else None
+        total = jnp.sum(counts_pub)
+        active, ranks = _compact_grid(counts_pub, width)
+        gv = g[0].reshape(-1)
+    s_ix = jnp.arange(n, dtype=jnp.int32)
+    assigned = total // n + (s_ix < total % n)
+    over = jnp.any((tails - heads) + assigned > local_capacity)
+    mine = active & (ranks % n == me) & ~over
+    lrank = jnp.where(mine, ranks // n, 0)
+    tickets = jnp.where(mine, tails[me] + lrank, 0)
+    planes, _ = _apply_enqueue(planes, heads[me], tickets, gv, mine, lrank,
+                               nslots_log2=nslots_log2, engine="planes",
+                               max_rank=local_capacity)
+    assigned = jnp.where(over, 0, assigned)
+    res = (planes, tails + assigned, jnp.where(over, 0, total), over,
+           assigned)
+    if pop_meta is not None:
+        res = res + (gmeta[:, 0], gmeta[:, 1])
+    return res

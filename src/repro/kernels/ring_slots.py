@@ -31,6 +31,14 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .pallas_env import resolve_interpret
 
+#: Round-clock ceiling of the packed birth-stamp layout: the stamp rides
+#: the upper 31 bits of the enq flag word as ``(birth << 1) | 1``, so any
+#: round index >= 2^30 would wrap into the sign bit and corrupt both the
+#: stamp and the flag's 0/1 semantics.  ``enq_planes`` raises at stamp
+#: time (concrete birth rounds) and the engine driver clamps its chunk
+#: limits to the cap (traced birth rounds) — stamps never wrap silently.
+SPAN_ROUND_CAP = 1 << 30
+
 
 def ticket_cycle(tickets, nslots_log2: int):
     """A ticket's ring cycle, wrap-safe: tickets are unsigned mod-2^32
@@ -82,8 +90,9 @@ def enq_planes(cycles, safes, enqs, idxs, tickets, values, head, *,
       kernel path carry ``enqs == 1`` ⇔ birth round 0, exactly the span
       seed contract; ``enqs & 1`` recovers the unpacked plane bit-exactly.
       The stamp occupies the upper 31 bits, capping the round clock at
-      2^30 — far beyond any reachable megaround count (the separate
-      plane keeps full int32 range for the mesh engines).  All other
+      2^30 (``SPAN_ROUND_CAP``, enforced here for concrete rounds and by
+      the engine driver for traced ones — never a silent wrap; the
+      separate plane keeps full int32 range for the mesh engines).  All other
       plane updates are identical in every mode."""
     nslots = 1 << nslots_log2
     idx_botc = idx_bot - 1
@@ -99,6 +108,13 @@ def enq_planes(cycles, safes, enqs, idxs, tickets, values, head, *,
     cycles = cycles.at[w].set(c, mode="drop")
     safes = safes.at[w].set(1, mode="drop")
     if births is None and birth_round is not None:
+        if not isinstance(birth_round, jax.core.Tracer):
+            if int(birth_round) >= SPAN_ROUND_CAP:
+                raise ValueError(
+                    f"birth_round {int(birth_round)} exceeds the packed "
+                    f"birth-stamp cap SPAN_ROUND_CAP={SPAN_ROUND_CAP}: the "
+                    f"(birth << 1) | 1 layout caps the round clock at 2^30 "
+                    f"(use the separate births plane for longer clocks)")
         flag = (jnp.asarray(birth_round, jnp.int32) << 1) | 1
     else:
         flag = jnp.int32(1)

@@ -16,7 +16,10 @@ the trace planes):
   enq-flag plane* (``(birth << 1) | 1`` — the flag only ever carried 0/1,
   so the stamp rides the flag scatter/gather the round already pays for:
   zero extra ops, and ``enqs & 1`` recovers the unspanned plane
-  bit-exactly).  The heaps move a rider plane through
+  bit-exactly; the packing caps the round clock at ``SPAN_ROUND_CAP`` =
+  2^30, enforced at stamp time — the kernel raises on concrete rounds
+  past the cap and the engine driver refuses to run a spanned round loop
+  across it, instead of wrapping stamps silently).  The heaps move a rider plane through
   ``heap_batch.heap_planes``; the mesh queues thread a ``births=`` plane
   through ``distqueue``.  Seeds keep flag 1 / zero stamps — born at
   round 0 by construction.
@@ -71,9 +74,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.ring_slots import SPAN_ROUND_CAP
+
 __all__ = [
-    "SpanPlane", "Spans", "bucket_edges", "bucket_of", "span_init",
-    "span_record", "span_tick",
+    "SPAN_ROUND_CAP", "SpanPlane", "Spans", "bucket_edges", "bucket_of",
+    "span_init", "span_record", "span_tick",
 ]
 
 DEFAULT_BUCKETS = 16

@@ -8,26 +8,39 @@ Two faces over the same queue core:
   persistent workers under the adversarial interleaving scheduler;
 * **JAX face** — ``RoundRunner`` / ``PriorityRoundRunner`` (deterministic
   rounds over the Pallas ring/heap, running on the fused device-resident
-  megaround engine ``fusedrounds.FusedRounds`` by default with host sync
+  megaround engine ``fusedrounds.RingEngine`` by default with host sync
   only at quiescence), ``MeshRoundRunner`` (the FIFO megaround under
-  shard_map, DESIGN.md § 2.3), and ``PriorityMeshRoundRunner`` (the
-  sharded G-PQ megaround — strict or k-relaxed pop order, DESIGN.md § 6).
+  shard_map — replicated or per-shard rings, DESIGN.md § 2.3), and
+  ``PriorityMeshRoundRunner`` (the sharded G-PQ megaround — strict or
+  k-relaxed pop order, DESIGN.md § 6).
+
+All fused engines are configurations of ``enginecore.EngineCore``
+(DESIGN.md § 4.8): one jitted while_loop builder, one plane registry, one
+host driver.  ``ENGINE_REGISTRY`` enumerates the runner matrix; the
+``Fused*`` names are deprecated shims kept for one release.
 """
 
+from .enginecore import (ENGINE_REGISTRY, EngineCore, EngineEntry,
+                         PlaneGroup, PlaneRegistry, register_engine)
 from .executor import Arrival, ExecutorConfig, Handler, TaskRuntime
-from .fusedrounds import FusedPriorityRounds, FusedRounds
+from .fusedrounds import (FusedPriorityRounds, FusedRounds, HeapEngine,
+                          RingEngine)
 from .meshrounds import (FusedMeshRounds, FusedPriorityMeshRounds,
-                         MeshRoundRunner, PriorityMeshRoundRunner)
+                         MeshHeapEngine, MeshRingEngine, MeshRoundRunner,
+                         PriorityMeshRoundRunner, ShardedMeshRingEngine)
 from .rounds import (HeapState, PriorityRoundRunner, RingState, RoundRunner,
                      heap_init, mesh_task_round, ring_init)
 from .taskpool import (FabricMetrics, HostTaskPool, PriorityFabric,
                        TaskFabric, TaskRecord, TaskSpec)
 
 __all__ = [
-    "Arrival", "ExecutorConfig", "FabricMetrics", "FusedMeshRounds",
+    "Arrival", "ENGINE_REGISTRY", "EngineCore", "EngineEntry",
+    "ExecutorConfig", "FabricMetrics", "FusedMeshRounds",
     "FusedPriorityMeshRounds", "FusedPriorityRounds", "FusedRounds",
-    "Handler", "HostTaskPool", "HeapState", "MeshRoundRunner",
+    "Handler", "HeapEngine", "HostTaskPool", "HeapState", "MeshHeapEngine",
+    "MeshRingEngine", "MeshRoundRunner", "PlaneGroup", "PlaneRegistry",
     "PriorityFabric", "PriorityMeshRoundRunner", "PriorityRoundRunner",
-    "RingState", "RoundRunner", "TaskFabric", "TaskRecord", "TaskSpec",
-    "TaskRuntime", "heap_init", "mesh_task_round", "ring_init",
+    "RingEngine", "RingState", "RoundRunner", "ShardedMeshRingEngine",
+    "TaskFabric", "TaskRecord", "TaskSpec", "TaskRuntime", "heap_init",
+    "mesh_task_round", "register_engine", "ring_init",
 ]

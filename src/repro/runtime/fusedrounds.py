@@ -1,10 +1,12 @@
-"""Fused device-resident round engine (DESIGN.md § 4.3).
+"""Chip-local fused round engines (DESIGN.md § 4.3) as configurations of
+the engine core (DESIGN.md § 4.8).
 
 The legacy round loop (``rounds.py``) pays a host↔device round-trip per
 round: head/tail live as host ints, tickets are ``np.arange`` math, every
 enqueue chunk is its own ``pallas_call`` dispatch, and each round blocks on
-an ``ok`` readback.  This module fuses the whole dequeue → step → ticket →
-enqueue cycle into ONE jitted ``lax.while_loop``:
+an ``ok`` readback.  The fused engines run the whole dequeue → step →
+ticket → enqueue cycle inside ONE jitted ``lax.while_loop``
+(``enginecore.fused_loop``):
 
 * head/tail (ring) and size (heap) are device scalars in the loop carry;
 * the dequeue wave is the vectorized ``ring_dequeue`` scatter kernel;
@@ -26,12 +28,14 @@ order, Lemma III.1), applies them through the same vectorized plane
 updates, and calls the same jitted ``step_fn`` on the same operands — so
 acc, field planes, head/tail, and stats counters are bit-identical to the
 legacy loop (tests assert this on BFS, raytrace, and tree workloads).
+Each engine here contributes only its ``_round`` body and plane
+registrations; the loop carry, chunk driver, and obs-plane lifecycle live
+in ``enginecore``.
 """
 
 from __future__ import annotations
 
-import time
-from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +48,9 @@ from ..kernels.pallas_env import resolve_interpret
 from ..kernels.ring_slots import (deq_planes, enq_planes, ring_dequeue,
                                   ring_enqueue)
 from ..kernels.wavefaa import LANES, wavefaa
-from ..obs.spans import Spans, span_init, span_record, span_tick
-from ..obs.trace import (SyncPoint, Telemetry, masked_min_max, trace_init,
-                         trace_record)
+from ..obs.spans import Spans, span_record, span_tick
+from ..obs.trace import Telemetry, masked_min_max
+from .enginecore import EngineCore, _sds, deprecated_engine
 
 IDX_BOT = 2 ** 31 - 1           # ⊥ (⊥_c = IDX_BOT - 1); payloads must be smaller
 
@@ -117,148 +121,12 @@ def _pad_lanes(mask: jax.Array) -> jax.Array:
     return jnp.zeros((npad,), jnp.int32).at[:n].set(mask)
 
 
-class _FusedEngine:
-    """Shared host-side driver: chunk the megaround by ``sync_every``,
-    read back occupancy at each sync, keep stats/sync_log, and raise on
-    overflow or truncation.  Subclasses provide the jitted megaround via
-    ``chunk_fn`` and the structure-specific error wording.
-
-    Telemetry (DESIGN.md § 7): when constructed with a
-    ``repro.obs.Telemetry``, the megaround carries a ``TracePlane`` of
-    per-round records as extra loop state; the driver drains it into the
-    collector at every host sync (the same sync — telemetry adds zero
-    extra syncs).  The plane's ``count`` doubles as the global round
-    index, so ``_tel_plane()`` below is the only contract a subclass
-    adds: return the current plane from the chunk state.  With
-    ``telemetry=None`` the plane never enters the carry and the jitted
-    loop is the exact pre-telemetry graph (bit-identity asserted in
-    tests)."""
-
-    sync_every: int
-    capacity: int
-    telemetry: Optional[Telemetry]
-    spans: Optional[Spans] = None
-
-    def _reset(self) -> None:
-        self.stats: Dict[str, int] = {}
-        self.sync_log: List[SyncPoint] = []
-        if self.telemetry is not None:
-            self.telemetry.begin_run()
-        if self.spans is not None:
-            self.spans.begin_run()
-
-    def _tel_init(self, shards: int = 1):
-        """Fresh plane for one run (telemetry on), else None.  The zero
-        plane is immutable (recording is functional), so one instance is
-        memoized and shared across runs — plane init must not show up in
-        the per-run overhead budget (DESIGN.md § 7.5)."""
-        if self.telemetry is None:
-            return None
-        key = (self.telemetry.capacity, shards)
-        if getattr(self, "_tel_zero_key", None) != key:
-            self._tel_zero = trace_init(*key)
-            self._tel_zero_key = key
-        return self._tel_zero
-
-    def _tel_plane(self):
-        """Current TracePlane from the chunk state (subclasses with
-        telemetry enabled override)."""
-        raise NotImplementedError
-
-    def _span_init(self, shards: int = 1, *, stacked: bool = False):
-        """Fresh SpanPlane for one run (spans on), else None — memoized
-        like ``_tel_init`` (same zero-init budget rule, DESIGN.md § 7.6).
-        ``stacked=True`` (the mesh engines) broadcasts a leading shard
-        axis for ``P(axis)``-sharded planes; with no ``class_of`` the
-        mesh histogram defaults to one row per shard."""
-        if self.spans is None:
-            return None
-        rows = self.spans.classes
-        if stacked and self.spans.class_of is None:
-            rows = shards
-        key = (rows, self.spans.buckets, self.spans.flow_capacity,
-               shards if stacked else 0, self.batch)
-        if getattr(self, "_span_zero_key", None) != key:
-            z = span_init(rows, buckets=self.spans.buckets,
-                          flow_capacity=self.spans.flow_capacity,
-                          lanes=self.batch)
-            if stacked:
-                z = jax.tree_util.tree_map(
-                    lambda x: jnp.broadcast_to(x[None], (shards,) + x.shape),
-                    z)
-            self._span_zero = z
-            self._span_zero_key = key
-        return self._span_zero
-
-    def _births_init(self, shape):
-        """Fresh zeroed birth-stamp plane (spans on), else None — memoized;
-        zero stamps make seed items born at round 0 by construction."""
-        if self.spans is None:
-            return None
-        if getattr(self, "_births_zero_shape", None) != shape:
-            self._births_zero = jnp.zeros(shape, jnp.int32)
-            self._births_zero_shape = shape
-        return self._births_zero
-
-    def _span_plane(self):
-        """Current SpanPlane from the chunk state (subclasses with spans
-        enabled override)."""
-        raise NotImplementedError
-
-    def _span_cls(self, keys_or_vals, default):
-        """Per-lane class row: the collector's ``class_of`` applied to the
-        popped keys (priority) / payloads (FIFO), else ``default``."""
-        if self.spans is not None and self.spans.class_of is not None:
-            return jnp.asarray(self.spans.class_of(keys_or_vals), jnp.int32)
-        return default
-
-    def _drive(self, chunk_fn, max_rounds: int, what: str) -> None:
-        """``chunk_fn(limit)`` advances internal state by up to ``limit``
-        rounds and returns (occupancy, rounds_delta, overflow, processed,
-        spawned, max_occ) — one host sync per call."""
-        chunk = self.sync_every if self.sync_every > 0 else max_rounds
-        rounds = host_syncs = 0
-        while True:
-            limit = min(chunk, max_rounds - rounds)
-            occ, r, oflow, processed, spawned, max_occ = chunk_fn(limit)
-            rounds += r
-            host_syncs += 1
-            now = time.time()
-            point = SyncPoint(rounds=rounds, occupancy=occ, wall_time=now,
-                              host_syncs=host_syncs)
-            self.sync_log.append(point)
-            self.stats = {
-                "rounds": rounds, "processed": processed, "spawned": spawned,
-                "max_occupancy": max_occ, "drained": int(occ == 0),
-                "host_syncs": host_syncs,
-            }
-            if self.telemetry is not None:
-                self.telemetry.drain(self._tel_plane(),
-                                     sync=host_syncs - 1, wall_time=now)
-                self.telemetry.heartbeat(point)
-                self.telemetry.finish(self.stats)
-            if self.spans is not None:
-                self.spans.drain(self._span_plane(), wall_time=now)
-                self.spans.finish(self.stats)
-            if oflow:
-                raise RuntimeError(
-                    f"{what} overflow: occupancy {occ} + spawned children "
-                    f"exceed capacity {self.capacity} at round {rounds} "
-                    f"(raise capacity_log2 or lower the fanout)")
-            if occ == 0:
-                return
-            if rounds >= max_rounds:
-                raise RuntimeError(
-                    f"{what} round loop truncated at max_rounds="
-                    f"{max_rounds} with occupancy {occ}: not quiescent "
-                    f"(stats['drained']=0)")
-
-
-class FusedRounds(_FusedEngine):
-    """The FIFO megaround loop.  Same contract as the legacy
-    ``RoundRunner.run`` (exact tickets, row-major child order, quiescence),
-    with device-resident head/tail and host sync only at quiescence or
-    every ``sync_every`` rounds (0 = quiescence only)."""
+class RingEngine(EngineCore):
+    """The FIFO megaround configuration: chip ring planes + device
+    head/tail scalars under the core's fused loop.  Same contract as the
+    legacy ``RoundRunner.run`` (exact tickets, row-major child order,
+    quiescence), with host sync only at quiescence or every
+    ``sync_every`` rounds (0 = quiescence only)."""
 
     def __init__(self, step_fn: StepFn, *, capacity_log2: int = 10,
                  batch: int = 64, interpret=None, sync_every: int = 0,
@@ -278,104 +146,90 @@ class FusedRounds(_FusedEngine):
         self.spans = spans
         self.compact = compact
         self._reset()
+        nslots = 2 << capacity_log2
+        self.registry.register("ring", (_sds((nslots,)),) * 4
+                               + (_sds(()), _sds(())))    # planes + head/tail
+        # births stays None: FIFO stamps pack into the enq-flag plane
+        self._register_obs_planes()
         self._megaround = jax.jit(self._megaround_impl)
 
-    # -- the jitted megaround: up to `limit` rounds entirely on device ------
-    # (tp = the optional TracePlane, sp/births = the optional SpanPlane +
-    # birth-stamp plane; None slots are empty pytrees, so the default call
-    # compiles to the exact untraced loop — all obs branches below are
-    # python-level)
-    def _megaround_impl(self, planes, head, tail, acc, processed, spawned,
-                        max_occ, limit, tp=None, sp=None, births=None):
+    @staticmethod
+    def _occ_of(q):
+        return q.tail - q.head
+
+    def _round(self, st, acc, tel=False, sp=None, births=None):
         batch, capacity = self.batch, self.capacity
         nslots_log2, interp = self.nslots_log2, self.interpret
-        lane = jnp.arange(batch, dtype=jnp.int32)
-        tel = tp is not None
         sps = sp is not None
-
-        def body(carry):
-            (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
-             max_occ, oflow, rounds, tp, sp, births) = carry
-            k = jnp.minimum(jnp.int32(batch), tail - head)
-            dtickets = jnp.where(lane < k, head + lane, -1)
-            if sps:
-                # span path inlines the pure-jnp twin of the dequeue kernel
-                # in packed-flag mode: the birth stamp lives in the high
-                # bits of the enq-flag plane, so it rides the flag
-                # gather/scatter the round already pays for — zero extra
-                # ops, zero extra carry (every scatter here copies its
-                # whole plane per round, so a separate stamp plane costs
-                # real microseconds; measured in DESIGN.md § 7.6)
-                cyc, saf, enq, idx, vals, okw, bout = deq_planes(
-                    cyc, saf, enq, idx, dtickets, nslots_log2=nslots_log2,
-                    idx_bot=IDX_BOT, birth_packed=True)
-                ok = okw.astype(bool)
-            else:
-                cyc, saf, enq, idx, vals, ok = ring_dequeue(
-                    cyc, saf, enq, idx, dtickets, nslots_log2=nslots_log2,
-                    idx_bot=IDX_BOT, interpret=interp)
-            head = head + k
-            acc, cvals, cmask = self.step_fn(acc, vals, ok)
-            cm = jnp.broadcast_to(cmask.astype(bool), cvals.shape).reshape(-1)
-            cv = cvals.reshape(-1).astype(jnp.int32)
-            # dense-wave rule (DESIGN.md § 4.4): compact the sparse child
-            # wave down to the capacity bound before installing — the
-            # decision is static (trace-time) so exactly one path compiles
-            wdth = compact_width(cv.shape[0], capacity, self.compact)
-            if wdth is None:
-                # in-loop leader FAA: child tickets from the spawn-mask
-                # ballot
-                etickets, newctr = wavefaa(_pad_lanes(cm.astype(jnp.int32)),
-                                           jnp.reshape(tail, (1,)),
-                                           interpret=interp)
-                etickets = etickets[:cv.shape[0]]
-                n_child = newctr[0] - tail
-                over = (tail + n_child - head) > capacity
-                etickets = jnp.where(over, -1, etickets)  # suppress install
-            else:
-                # compaction subsumes the ballot: the dense wave IS the
-                # children in wavefaa rank order, so tickets are the
-                # contiguous run tail + [0, n_child) — bit-identical
-                # (ticket, value) scatters to the sparse install
-                (cv,), n_child = wave_compact(cm.astype(jnp.int32), (cv,),
-                                              width=wdth, interpret=interp)
-                over = (tail + n_child - head) > capacity
-                lane_w = jnp.arange(wdth, dtype=jnp.int32)
-                etickets = jnp.where((lane_w < n_child) & ~over,
-                                     tail + lane_w, -1)
-            if sps:
-                cyc, saf, enq, idx, _ = enq_planes(
-                    cyc, saf, enq, idx, etickets, cv, head,
-                    nslots_log2=nslots_log2, idx_bot=IDX_BOT,
-                    birth_round=sp.round)
-            else:
-                cyc, saf, enq, idx, _ = ring_enqueue(
-                    cyc, saf, enq, idx, etickets, cv, head,
-                    nslots_log2=nslots_log2, idx_bot=IDX_BOT, interpret=interp)
-            tail = jnp.where(over, tail, tail + n_child)
-            if tel:
-                mn, mx = masked_min_max(vals, ok)   # FIFO: payload extrema
-                tp = trace_record(tp, tp.count, k,
-                                  jnp.where(over, 0, n_child), tail - head,
-                                  mn, mx, over)
-            if sps:
-                cls = self._span_cls(vals, jnp.zeros_like(vals))
-                sp = span_record(sp, cls, sp.round - bout, ok, vals)
-                sp = span_tick(sp)
-            return (cyc, saf, enq, idx, head, tail, acc,
-                    processed + k, spawned + jnp.where(over, 0, n_child),
-                    jnp.maximum(max_occ, tail - head), oflow | over,
-                    rounds + 1, tp, sp, births)
-
-        def cond(carry):
-            head, tail, oflow, rounds = carry[4], carry[5], carry[10], carry[11]
-            return (tail - head > 0) & (~oflow) & (rounds < limit)
-
-        carry = planes + (head, tail, acc, processed, spawned, max_occ,
-                          jnp.bool_(False), jnp.int32(0), tp, sp, births)
-        out = jax.lax.while_loop(cond, body, carry)
-        return (out[:4], out[4], out[5], out[6], out[7], out[8], out[9],
-                out[10], out[11], out[12], out[13], out[14])
+        lane = jnp.arange(batch, dtype=jnp.int32)
+        cyc, saf, enq, idx, head, tail = st
+        k = jnp.minimum(jnp.int32(batch), tail - head)
+        dtickets = jnp.where(lane < k, head + lane, -1)
+        if sps:
+            # span path inlines the pure-jnp twin of the dequeue kernel
+            # in packed-flag mode: the birth stamp lives in the high
+            # bits of the enq-flag plane, so it rides the flag
+            # gather/scatter the round already pays for — zero extra
+            # ops, zero extra carry (every scatter here copies its
+            # whole plane per round, so a separate stamp plane costs
+            # real microseconds; measured in DESIGN.md § 7.6)
+            cyc, saf, enq, idx, vals, okw, bout = deq_planes(
+                cyc, saf, enq, idx, dtickets, nslots_log2=nslots_log2,
+                idx_bot=IDX_BOT, birth_packed=True)
+            ok = okw.astype(bool)
+        else:
+            cyc, saf, enq, idx, vals, ok = ring_dequeue(
+                cyc, saf, enq, idx, dtickets, nslots_log2=nslots_log2,
+                idx_bot=IDX_BOT, interpret=interp)
+        head = head + k
+        acc, cvals, cmask = self.step_fn(acc, vals, ok)
+        cm = jnp.broadcast_to(cmask.astype(bool), cvals.shape).reshape(-1)
+        cv = cvals.reshape(-1).astype(jnp.int32)
+        # dense-wave rule (DESIGN.md § 4.4): compact the sparse child
+        # wave down to the capacity bound before installing — the
+        # decision is static (trace-time) so exactly one path compiles
+        wdth = compact_width(cv.shape[0], capacity, self.compact)
+        if wdth is None:
+            # in-loop leader FAA: child tickets from the spawn-mask ballot
+            etickets, newctr = wavefaa(_pad_lanes(cm.astype(jnp.int32)),
+                                       jnp.reshape(tail, (1,)),
+                                       interpret=interp)
+            etickets = etickets[:cv.shape[0]]
+            n_child = newctr[0] - tail
+            over = (tail + n_child - head) > capacity
+            etickets = jnp.where(over, -1, etickets)  # suppress install
+        else:
+            # compaction subsumes the ballot: the dense wave IS the
+            # children in wavefaa rank order, so tickets are the
+            # contiguous run tail + [0, n_child) — bit-identical
+            # (ticket, value) scatters to the sparse install
+            (cv,), n_child = wave_compact(cm.astype(jnp.int32), (cv,),
+                                          width=wdth, interpret=interp)
+            over = (tail + n_child - head) > capacity
+            lane_w = jnp.arange(wdth, dtype=jnp.int32)
+            etickets = jnp.where((lane_w < n_child) & ~over,
+                                 tail + lane_w, -1)
+        if sps:
+            cyc, saf, enq, idx, _ = enq_planes(
+                cyc, saf, enq, idx, etickets, cv, head,
+                nslots_log2=nslots_log2, idx_bot=IDX_BOT,
+                birth_round=sp.round)
+        else:
+            cyc, saf, enq, idx, _ = ring_enqueue(
+                cyc, saf, enq, idx, etickets, cv, head,
+                nslots_log2=nslots_log2, idx_bot=IDX_BOT, interpret=interp)
+        tail = jnp.where(over, tail, tail + n_child)
+        total = jnp.where(over, 0, n_child)
+        telinfo = None
+        if tel:
+            mn, mx = masked_min_max(vals, ok)      # FIFO: payload extrema
+            telinfo = (k, total, tail - head, mn, mx)
+        if sps:
+            cls = self._span_cls(vals, jnp.zeros_like(vals))
+            sp = span_record(sp, cls, sp.round - bout, ok, vals)
+            sp = span_tick(sp)
+        return (RingState(cyc, saf, enq, idx, head, tail), acc, k, total,
+                over, telinfo, sp, births)
 
     def _seed(self, st: RingState, initial: np.ndarray) -> RingState:
         n = len(initial)
@@ -410,38 +264,29 @@ class FusedRounds(_FusedEngine):
         st = self._seed(ring_init(self.capacity_log2),
                         np.asarray(initial, np.int32).reshape(-1))
         acc = jax.tree_util.tree_map(jnp.asarray, acc)
-        state = [(st.cycles, st.safes, st.enqs, st.idxs),   # planes
-                 jnp.int32(st.head), jnp.int32(st.tail), acc,
-                 jnp.int32(0), jnp.int32(0),                # processed/spawned
-                 jnp.int32(st.tail - st.head)]              # max_occ
+        q = RingState(st.cycles, st.safes, st.enqs, st.idxs,
+                      jnp.int32(st.head), jnp.int32(st.tail))
+        state = [q, acc, jnp.int32(0), jnp.int32(0),    # processed/spawned
+                 jnp.int32(st.tail - st.head)]          # max_occ
         # obs state: [TracePlane, SpanPlane, births] — None slots are empty
         # pytrees, so the all-None call is the exact unspanned graph.  The
         # FIFO ring keeps births=None: its stamps pack into the enq-flag
         # plane (seeds installed by the kernel carry flag 1 ⇔ birth 0)
         ext = [self._tel_init(), self._span_init(), None]
-        self._tel_plane = lambda: ext[0]
-        self._span_plane = lambda: ext[1]
-
-        def chunk_fn(limit):
-            (state[0], state[1], state[2], state[3], state[4], state[5],
-             state[6], oflow, r, ext[0], ext[1], ext[2]) = self._megaround(
-                *state, jnp.int32(limit), ext[0], ext[1], ext[2])
-            occ = int(state[2] - state[1])              # THE host sync
-            return (occ, int(r), bool(oflow), int(state[4]), int(state[5]),
-                    int(state[6]))
-
-        self._drive(chunk_fn, max_rounds, "ring")
-        planes, head, tail, acc = state[0], state[1], state[2], state[3]
+        self._run_chunks(state, ext, lambda q: int(q.tail - q.head),
+                         "ring", max_rounds)
+        q, acc = state[0], state[1]
+        planes = (q.cycles, q.safes, q.enqs, q.idxs)
         if self.spans is not None:
             # strip packed birth stamps: the enq-flag plane is bit-identical
             # to the unspanned run's once reduced back to its low bit
             planes = (planes[0], planes[1], planes[2] & 1, planes[3])
-        return acc, RingState(*planes, int(head), int(tail))
+        return acc, RingState(*planes, int(q.head), int(q.tail))
 
 
-class FusedPriorityRounds(_FusedEngine):
-    """``FusedRounds``' priority twin: chains ``heap_apply`` pop and insert
-    batches under one jitted ``lax.while_loop`` with the heap size as a
+class HeapEngine(EngineCore):
+    """``RingEngine``'s priority configuration: chains ``heap_apply`` pop
+    and insert batches under the core's fused loop with the heap size as a
     device scalar.  The pad/op vectors are loop-invariant constants (hoisted
     by XLA), and children insert as one masked batch in row-major order —
     identical heap evolution to the legacy chunked inserts."""
@@ -465,86 +310,78 @@ class FusedPriorityRounds(_FusedEngine):
         self.spans = spans
         self.compact = compact
         self._reset()
+        cap = self.capacity
+        self.registry.register("heap", (_sds((cap,)), _sds((cap,)),
+                                        _sds(())))       # keys/vals + size
+        self._register_obs_planes(births_shape=(cap,))
         self._megaround = jax.jit(self._megaround_impl)
 
-    def _megaround_impl(self, keys, vals, size, acc, processed, spawned,
-                        max_occ, limit, tp=None, sp=None, births=None):
+    @staticmethod
+    def _occ_of(q):
+        return q.size
+
+    def _round(self, st, acc, tel=False, sp=None, births=None):
         batch, capacity = self.batch, self.capacity
         cap_log2, arity_log2 = self.capacity_log2, self.arity_log2
         interp = self.interpret
-        lane = jnp.arange(batch, dtype=jnp.int32)
-        pad = jnp.full((batch,), HEAP_KEY_INF, jnp.int32)   # loop-invariant
-        tel = tp is not None
         sps = sp is not None
-
-        def body(carry):
-            (keys, vals, size, acc, processed, spawned, max_occ, oflow,
-             rounds, tp, sp, births) = carry
-            k = jnp.minimum(jnp.int32(batch), size)
-            pop_ops = jnp.where(lane < k, OP_DELMIN, OP_NOP)
-            if sps:
-                # span path inlines the rider-capable pure-jnp heap twin
-                # (bit-identical heap evolution to the kernel; the rider
-                # plane carries the birth stamps through every sift)
-                (keys, vals, size, outk, outv, ok, births,
-                 bout) = heap_planes(
-                    keys, vals, size, pop_ops, pad, pad, cap_log2=cap_log2,
-                    arity_log2=arity_log2, rider=births)
-            else:
-                keys, vals, size, outk, outv, ok = heap_apply(
-                    keys, vals, size, pop_ops, pad, pad, cap_log2=cap_log2,
-                    arity_log2=arity_log2, interpret=interp)
-            acc, ckeys, cvals, cmask = self.step_fn(acc, outk, outv, ok)
-            cm = jnp.broadcast_to(cmask.astype(bool),
-                                  ckeys.shape).reshape(-1)
-            ckf = ckeys.reshape(-1).astype(jnp.int32)
-            cvf = cvals.reshape(-1).astype(jnp.int32)
-            # dense-wave rule (DESIGN.md § 4.4): compact before the insert
-            # batch — the dense wave preserves row-major lane order, so the
-            # masked insert sequence (hence the heap evolution) is
-            # bit-identical to the sparse one
-            wdth = compact_width(ckf.shape[0], capacity, self.compact)
-            if wdth is None:
-                n_child = cm.sum(dtype=jnp.int32)
-                over = size + n_child > capacity
-                ins_ops = jnp.where(cm & ~over, OP_INSERT, OP_NOP)
-            else:
-                (ckf, cvf), n_child = wave_compact(
-                    cm.astype(jnp.int32), (ckf, cvf), width=wdth,
-                    interpret=interp)
-                over = size + n_child > capacity
-                lane_w = jnp.arange(wdth, dtype=jnp.int32)
-                ins_ops = jnp.where((lane_w < n_child) & ~over,
-                                    OP_INSERT, OP_NOP)
-            if sps:
-                keys, vals, size, _, _, _, births, _ = heap_planes(
-                    keys, vals, size, ins_ops, ckf, cvf, cap_log2=cap_log2,
-                    arity_log2=arity_log2, rider=births, oprider=sp.round)
-            else:
-                keys, vals, size, _, _, _ = heap_apply(
-                    keys, vals, size, ins_ops, ckf, cvf, cap_log2=cap_log2,
-                    arity_log2=arity_log2, interpret=interp)
-            if tel:
-                mn, mx = masked_min_max(outk, ok)    # popped-key extrema
-                tp = trace_record(tp, tp.count, k,
-                                  jnp.where(over, 0, n_child), size,
-                                  mn, mx, over)
-            if sps:
-                cls = self._span_cls(outk, jnp.zeros_like(outk))
-                sp = span_record(sp, cls, sp.round - bout, ok, outv)
-                sp = span_tick(sp)
-            return (keys, vals, size, acc, processed + k,
-                    spawned + jnp.where(over, 0, n_child),
-                    jnp.maximum(max_occ, size), oflow | over, rounds + 1,
-                    tp, sp, births)
-
-        def cond(carry):
-            size, oflow, rounds = carry[2], carry[7], carry[8]
-            return (size > 0) & (~oflow) & (rounds < limit)
-
-        carry = (keys, vals, size, acc, processed, spawned, max_occ,
-                 jnp.bool_(False), jnp.int32(0), tp, sp, births)
-        return jax.lax.while_loop(cond, body, carry)
+        lane = jnp.arange(batch, dtype=jnp.int32)
+        pad = jnp.full((batch,), HEAP_KEY_INF, jnp.int32)
+        keys, vals, size = st
+        k = jnp.minimum(jnp.int32(batch), size)
+        pop_ops = jnp.where(lane < k, OP_DELMIN, OP_NOP)
+        if sps:
+            # span path inlines the rider-capable pure-jnp heap twin
+            # (bit-identical heap evolution to the kernel; the rider
+            # plane carries the birth stamps through every sift)
+            (keys, vals, size, outk, outv, ok, births,
+             bout) = heap_planes(
+                keys, vals, size, pop_ops, pad, pad, cap_log2=cap_log2,
+                arity_log2=arity_log2, rider=births)
+        else:
+            keys, vals, size, outk, outv, ok = heap_apply(
+                keys, vals, size, pop_ops, pad, pad, cap_log2=cap_log2,
+                arity_log2=arity_log2, interpret=interp)
+        acc, ckeys, cvals, cmask = self.step_fn(acc, outk, outv, ok)
+        cm = jnp.broadcast_to(cmask.astype(bool), ckeys.shape).reshape(-1)
+        ckf = ckeys.reshape(-1).astype(jnp.int32)
+        cvf = cvals.reshape(-1).astype(jnp.int32)
+        # dense-wave rule (DESIGN.md § 4.4): compact before the insert
+        # batch — the dense wave preserves row-major lane order, so the
+        # masked insert sequence (hence the heap evolution) is
+        # bit-identical to the sparse one
+        wdth = compact_width(ckf.shape[0], capacity, self.compact)
+        if wdth is None:
+            n_child = cm.sum(dtype=jnp.int32)
+            over = size + n_child > capacity
+            ins_ops = jnp.where(cm & ~over, OP_INSERT, OP_NOP)
+        else:
+            (ckf, cvf), n_child = wave_compact(
+                cm.astype(jnp.int32), (ckf, cvf), width=wdth,
+                interpret=interp)
+            over = size + n_child > capacity
+            lane_w = jnp.arange(wdth, dtype=jnp.int32)
+            ins_ops = jnp.where((lane_w < n_child) & ~over,
+                                OP_INSERT, OP_NOP)
+        if sps:
+            keys, vals, size, _, _, _, births, _ = heap_planes(
+                keys, vals, size, ins_ops, ckf, cvf, cap_log2=cap_log2,
+                arity_log2=arity_log2, rider=births, oprider=sp.round)
+        else:
+            keys, vals, size, _, _, _ = heap_apply(
+                keys, vals, size, ins_ops, ckf, cvf, cap_log2=cap_log2,
+                arity_log2=arity_log2, interpret=interp)
+        total = jnp.where(over, 0, n_child)
+        telinfo = None
+        if tel:
+            mn, mx = masked_min_max(outk, ok)      # popped-key extrema
+            telinfo = (k, total, size, mn, mx)
+        if sps:
+            cls = self._span_cls(outk, jnp.zeros_like(outk))
+            sp = span_record(sp, cls, sp.round - bout, ok, outv)
+            sp = span_tick(sp)
+        return (HeapState(keys, vals, size), acc, k, total, over, telinfo,
+                sp, births)
 
     def _seed(self, st: HeapState, ik: np.ndarray,
               iv: np.ndarray) -> HeapState:
@@ -567,7 +404,7 @@ class FusedPriorityRounds(_FusedEngine):
             acc: Any = None, max_rounds: int = 10_000
             ) -> Tuple[Any, HeapState]:
         """Seed the heap and run priority megarounds to quiescence.  Same
-        sync/determinism contract as ``FusedRounds.run`` (one host sync
+        sync/determinism contract as ``RingEngine.run`` (one host sync
         per chunk, bit-identical to the legacy engine, RuntimeError on
         heap overflow/truncation at the next sync), with pops in exact
         min-key order within each round.  Returns ``(acc, HeapState)``."""
@@ -577,21 +414,24 @@ class FusedPriorityRounds(_FusedEngine):
         assert ik.shape == iv.shape
         st = self._seed(heap_init(self.capacity_log2), ik, iv)
         acc = jax.tree_util.tree_map(jnp.asarray, acc)
-        state = [st.keys, st.vals, jnp.asarray(st.size, jnp.int32), acc,
-                 jnp.int32(0), jnp.int32(0),                # processed/spawned
-                 jnp.int32(st.size)]                        # max_occ
+        q = HeapState(st.keys, st.vals, jnp.asarray(st.size, jnp.int32))
+        state = [q, acc, jnp.int32(0), jnp.int32(0),    # processed/spawned
+                 jnp.int32(st.size)]                    # max_occ
         ext = [self._tel_init(), self._span_init(),
                self._births_init((self.capacity,))]
-        self._tel_plane = lambda: ext[0]
-        self._span_plane = lambda: ext[1]
+        self._run_chunks(state, ext, lambda q: int(q.size),
+                         "heap", max_rounds)
+        q = state[0]
+        return state[1], HeapState(q.keys, q.vals, int(q.size))
 
-        def chunk_fn(limit):
-            (state[0], state[1], state[2], state[3], state[4], state[5],
-             state[6], oflow, r, ext[0], ext[1], ext[2]) = self._megaround(
-                *state, jnp.int32(limit), ext[0], ext[1], ext[2])
-            occ = int(state[2])                         # THE host sync
-            return (occ, int(r), bool(oflow), int(state[4]), int(state[5]),
-                    int(state[6]))
 
-        self._drive(chunk_fn, max_rounds, "heap")
-        return state[3], HeapState(state[0], state[1], int(state[2]))
+@deprecated_engine("RingEngine")
+class FusedRounds(RingEngine):
+    """Deprecated alias of :class:`RingEngine` (same constructor and run
+    contract; emits ``DeprecationWarning``)."""
+
+
+@deprecated_engine("HeapEngine")
+class FusedPriorityRounds(HeapEngine):
+    """Deprecated alias of :class:`HeapEngine` (same constructor and run
+    contract; emits ``DeprecationWarning``)."""

@@ -1,74 +1,73 @@
-"""Mesh-fused round engine (DESIGN.md § 2.3): ``FusedRounds``' twin one
-level up the hierarchy, running the whole dequeue → step → ticket →
-enqueue cycle *device-resident under shard_map*.
+"""Mesh round engines (DESIGN.md § 2.3, § 6): ``enginecore.EngineCore``
+configurations one level up the hierarchy, running the whole
+dequeue → step → ticket → enqueue cycle *device-resident under
+shard_map*.
 
-PR 3 removed the per-round host sync at chip scope; this module removes it
-at mesh scope.  The legacy mesh path (`fused=False`, the ``mesh_task_round``
-discipline) dispatches one jitted shard_map call per round and reads
-occupancy back on the host every time; ``FusedMeshRounds`` runs up to
-``limit`` rounds inside ONE ``lax.while_loop`` *inside* shard_map:
+Three engines over two queue planes:
 
-* the distqueue's replicated field planes, head and tail ride in the loop
-  carry as device values;
-* the claim wave needs NO collective — the cross-shard rebalancing
-  schedule (``distqueue.claim_schedule``: the round's budget split evenly,
-  so a shard whose step spawned nothing still pulls its share of the
-  gathered compact block) is a pure function of the replicated head/tail;
-* the publish wave costs exactly ONE psum (``mesh_round_gather``: ticket
-  aggregation and compact-block exchange fused into a single collective —
-  the ``mesh_ticket_base`` leader-FAA with the payload riding along);
-* the loop condition is the replicated occupancy, so every shard exits on
-  the same round and the collectives stay in lockstep;
-* the host syncs once at global quiescence (or every ``sync_every``
-  rounds for a stats heartbeat), exactly like the chip-level engine.
+* ``MeshRingEngine`` — the FIFO megaround over the *replicated* ring
+  (``core.distqueue.DistQueueState``): every shard carries the full
+  O(ring) plane set, the claim wave is collective-free (the rebalancing
+  schedule is a pure function of the replicated head/tail), and the
+  publish wave costs exactly ONE psum (``mesh_round_gather``).  Kept as
+  the bit-identity parity baseline for the sharded plane.
+* ``ShardedMeshRingEngine`` — the same megaround over *per-shard* ring
+  planes (``DistShardedQueueState``): each shard owns one
+  2·(capacity/shards)-slot local ring while the (S,) head/tail ticket
+  vectors stay replicated, so the loop-carry memory drops from O(ring)
+  to O(ring/shards) per shard (the ``benchmarks/bench_mesh.py`` column).
+  The claim schedule drains the fullest rings first
+  (``dist_sharded_claim_round``); children spray round-robin by global
+  publish rank with ONE ``mesh_round_gather`` meta-word psum per round
+  (``dist_sharded_publish_round``), mirroring the relaxed priority
+  plane's ``dist_priority_publish_round`` discipline.
+* ``MeshHeapEngine`` — the priority megaround (claim → pop-min → step →
+  push) over the ``core.distqueue`` priority plane, in two orderings:
+  ``relaxed=True`` (per-shard local heaps, hint-ordered even-split
+  claim schedule, k-relaxed delete-min — envelope in
+  ``sched.relaxed.mesh_relaxation_bound``) and ``relaxed=False`` (one
+  replicated heap popped in exact global min-key order).
 
-Overflow and truncation follow the ``_FusedEngine`` contract: a flag in
-the carry exits the loop and the host driver raises ``RuntimeError`` at
-the next sync.
+All three are thin configurations of the fused-engine core
+(DESIGN.md § 4.8): the round bodies follow the standardized ``_round``
+contract, ``EngineCore.fused_loop`` builds the one jitted
+``lax.while_loop``, ``_run_chunks``/``_drive`` own the host sync +
+overflow/truncation contract, and each engine's loop carry is declared
+once in its ``PlaneRegistry`` — the registry derives both the shard_map
+specs and the measured per-shard carry bytes.  The mesh layer adds only
+the shard_map boundary: ``_megaround_impl`` overrides unstack the
+``P(axis)``-sharded leaves (stacked ``(1, ...)`` per shard) around the
+core loop and restack them on the way out.
 
-Accumulators are *per-shard*: the step function sees only its shard's
-claimed batch, so acc leaves diverge across shards.  ``run`` returns them
-stacked with a leading shard axis, reduced by the ``combine`` callable
-when one is given (BFS: elementwise min over shards).
+``MeshRoundRunner`` / ``PriorityMeshRoundRunner`` are the runner faces:
+``fused=True`` (default) delegates to the engines above; ``fused=False``
+keeps the legacy host-driven loop — one jitted shard_map dispatch and
+one occupancy readback per round (``EngineCore._legacy_loop``) — for
+step-debug, as the parity baseline, and (priority only) as the history
+recorder for ``sched.plinearizability``.  Fused and legacy are
+bit-identical on the replicated planes; the sharded ring is exact
+against the replicated baseline on totals and order-insensitive
+accumulators (claim *order* legitimately differs — the schedule is
+load-aware, not rank-sliced).
 
 Note on the replication checker: the per-round distqueue API passes
-``check_rep=True`` (psum-gathered payloads keep the planes
-replicated-typed), but ``lax.while_loop`` has no replication rule in this
-jax line, so the megaround's shard_map is built with ``check_rep=False``.
-Per-shard state bit-identity is asserted by tests instead.
+``check_rep=True``, but ``lax.while_loop`` has no replication rule in
+this jax line, so every megaround shard_map is built with
+``check_rep=False``.  Per-shard state bit-identity is asserted by tests
+instead.
 
-Both engines are bit-identical — same acc leaves, same planes, same
-head/tail and stats counters — asserted on tree and BFS workloads.
+Overflow and truncation follow the core contract: a flag in the carry
+exits the loop and the host driver raises ``RuntimeError`` at the next
+sync.  Accumulators are *per-shard* (each shard steps only its claimed
+batch), returned stacked with a leading shard axis unless ``combine``
+reduces them (BFS: elementwise min over shards).
 
-Priority mesh rounds (DESIGN.md § 6) live here too:
-``PriorityMeshRoundRunner`` / ``FusedPriorityMeshRounds`` run the
-claim → pop-min → step → push cycle at mesh scope over the
-``core.distqueue`` priority plane (``DistHeapState``), in two orderings:
-
-* ``relaxed=True`` (default) — one *local* heap per shard; the round's
-  pop budget is rebalanced by the hint-ordered even-split schedule
-  (``priority_claim_schedule``: remainder to the lowest-key shards) and
-  children spray round-robin by publish rank.  Globally this is a
-  k-relaxed delete-min; the envelope is
-  ``sched.relaxed.mesh_relaxation_bound``.
-* ``relaxed=False`` (strict) — the heap is replicated: every shard
-  applies the identical pop/insert waves and steps only its
-  ``claim_schedule`` slice, so pops follow exact global min-key order
-  (k = 0) at the price of every shard doing full-heap work.
-
-Either way the publish wave costs exactly one
-``dist_priority_publish_round`` psum per round, carrying the packed
-``(key | payload)`` child blocks plus each shard's post-pop (hint, size)
-meta word, so the next claim schedule is again collective-free.  Sync,
-determinism, and failure contracts match the FIFO mesh engine: fused =
-host sync only at global quiescence (or ``sync_every``), legacy = one
-readback per round, both bit-identical; overflow/truncation flag-then-
-raise ``RuntimeError`` at the next sync.
+``FusedMeshRounds`` / ``FusedPriorityMeshRounds`` are deprecated shims
+over ``MeshRingEngine`` / ``MeshHeapEngine``.
 """
 
 from __future__ import annotations
 
-import time
 from typing import Any, Callable, Optional, Tuple
 
 import jax
@@ -77,30 +76,47 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from ..core.distqueue import (DistHeapState, DistQueueState, claim_schedule,
+from ..core.distqueue import (DistHeapState, DistQueueState,
+                              DistShardedQueueState, claim_schedule,
                               dist_claim_round, dist_heap_init,
                               dist_priority_publish_compact_round,
                               dist_priority_publish_round,
                               dist_publish_compact_round, dist_publish_round,
-                              dist_queue_init, priority_claim_schedule)
+                              dist_queue_init, dist_sharded_claim_round,
+                              dist_sharded_publish_round,
+                              dist_sharded_queue_init,
+                              priority_claim_schedule)
 from ..kernels.compact import compact_width
 from ..kernels.heap_batch import (KEY_INF as HEAP_KEY_INF, heap_insert_masked,
                                   heap_pop_count)
 from ..kernels.ring_slots import enq_planes
 from ..obs.spans import Spans, span_record, span_tick
-from ..obs.trace import (SyncPoint, Telemetry, masked_min_max, trace_record)
-from .fusedrounds import IDX_BOT, PriorityStepFn, StepFn, _FusedEngine
+from ..obs.trace import Telemetry, masked_min_max
+from .enginecore import (EngineCore, _sds, deprecated_engine,
+                         register_engine)
+from .fusedrounds import IDX_BOT, PriorityStepFn, StepFn
 
-__all__ = ["FusedMeshRounds", "FusedPriorityMeshRounds", "MeshRoundRunner",
-           "PriorityMeshRoundRunner"]
+__all__ = ["FusedMeshRounds", "FusedPriorityMeshRounds", "MeshHeapEngine",
+           "MeshRingEngine", "MeshRoundRunner", "PriorityMeshRoundRunner",
+           "ShardedMeshRingEngine"]
 
 
-class _MeshEngineBase(_FusedEngine):
-    """Shared mesh-round machinery: seeding, specs, the one-round body."""
+def _unstack(x):
+    return jax.tree_util.tree_map(lambda a: a[0], x)
+
+
+def _restack(x):
+    return jax.tree_util.tree_map(lambda a: a[None], x)
+
+
+class _MeshFifoBase(EngineCore):
+    """Shared FIFO-mesh scaffolding: constructor fields, capacity
+    validation, and the host-side acc broadcast."""
 
     def __init__(self, step_fn: StepFn, *, mesh, axis: str = "data",
                  capacity_log2: int = 10, batch: int = 64,
                  sync_every: int = 0,
+                 combine: Callable[[Any], Any] = None,
                  telemetry: Optional[Telemetry] = None,
                  spans: Optional[Spans] = None, compact=None) -> None:
         self.step_fn = step_fn
@@ -116,10 +132,67 @@ class _MeshEngineBase(_FusedEngine):
                 f"mesh batch {batch} x {self.shards} shards exceeds ring "
                 f"capacity {self.capacity}")
         self.sync_every = sync_every
+        self.combine = combine
         self.telemetry = telemetry
         self.spans = spans
         self.compact = compact
         self._reset()
+
+    def _initial_carry(self, state, acc):
+        acc = jax.tree_util.tree_map(jnp.asarray, acc)
+        acc = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (self.shards,) + x.shape),
+            acc)
+        return state, acc
+
+    def _finish(self, state):
+        acc = state[1]
+        if self.combine is not None:
+            acc = self.combine(acc)
+        return acc, state[0]
+
+
+class MeshRingEngine(_MeshFifoBase):
+    """The replicated-ring FIFO megaround: one jitted shard_map call runs
+    up to ``limit`` rounds on device; host sync only at quiescence (or
+    every ``sync_every`` rounds).  ``run`` mirrors ``RingEngine.run`` and
+    returns (acc, final ``DistQueueState``) where acc carries a leading
+    shard axis unless ``combine`` reduces it."""
+
+    def __init__(self, step_fn: StepFn, *, mesh, axis: str = "data",
+                 capacity_log2: int = 10, batch: int = 64,
+                 sync_every: int = 0,
+                 combine: Callable[[Any], Any] = None,
+                 telemetry: Optional[Telemetry] = None,
+                 spans: Optional[Spans] = None, compact=None) -> None:
+        super().__init__(step_fn, mesh=mesh, axis=axis,
+                         capacity_log2=capacity_log2, batch=batch,
+                         sync_every=sync_every, combine=combine,
+                         telemetry=telemetry, spans=spans, compact=compact)
+        n2 = 2 << capacity_log2
+        reg = self.registry
+        reg.register("ring", (_sds((n2,)),) * 4 + (_sds(()), _sds(())))
+        self._register_obs_planes(self.shards, stacked=True,
+                                  births_shape=(n2,))
+        # in shard_map, P() = replicated, P(axis) = sharded; a bare spec
+        # serves as a pytree-prefix for a whole subtree (the qstate
+        # NamedTuple, the acc tree).  acc rides stacked (shards, ...) so
+        # successive chunk calls (sync_every heartbeats) compose.  The
+        # trailing (tp, sp, births) slots always exist in the specs: None
+        # is a valid pytree leaf-set for any spec, and the all-None call
+        # compiles to the exact unobserved graph.  The TracePlane is
+        # replicated (every record field derives from replicated values);
+        # the SpanPlane is sharded (each shard records its own claims);
+        # the births plane mirrors the ring field planes — replicated.
+        obs = (reg.spec("trace"), reg.spec("span"), reg.spec("births"))
+        in_specs = (reg.spec("ring"), P(self.axis),
+                    P(), P(), P(), P()) + obs
+        out_specs = (reg.spec("ring"), P(self.axis),
+                     P(), P(), P(), P(), P()) + obs
+        self._megaround = jax.jit(shard_map(
+            self._megaround_impl, mesh=self.mesh,
+            in_specs=in_specs, out_specs=out_specs,
+            check_rep=False))   # while_loop has no replication rule
 
     # -- seeding (host-side, before shard_map: planes are plain jnp) --------
     def _seed(self, state: DistQueueState,
@@ -144,18 +217,19 @@ class _MeshEngineBase(_FusedEngine):
                               tail=state.tail + jnp.int32(k),
                               head=state.head)
 
-    # -- one mesh round, shared verbatim by both engines --------------------
+    @staticmethod
+    def _occ_of(q: DistQueueState):
+        return q.tail - q.head
+
+    # -- one mesh round (the standardized ``_round`` contract) --------------
     def _round(self, state: DistQueueState, acc, tel: bool = False,
                sp=None, births=None):
-        """claim (no collective) → step → publish (one psum).  Returns
-        (state, acc, k, total, over); with ``tel`` (the telemetry path) an
-        extra ``(shard_pops, shard_pushes, min_val, max_val)`` tuple of
-        replicated per-round record fields rides along — all derived from
-        already-replicated values, zero extra collectives.  With ``sp``
-        (the span path) the claim reads birth stamps, the publish stamps
-        ``sp.round`` into the replicated births plane, and each shard
-        records its own local claims into its sharded SpanPlane row —
-        ``(sp, births)`` trail the return tuple (DESIGN.md §7.6)."""
+        """claim (no collective) → step → publish (one psum).  Telemetry
+        record fields all derive from already-replicated values — zero
+        extra collectives.  With ``sp`` the claim reads birth stamps, the
+        publish stamps ``sp.round`` into the replicated births plane, and
+        each shard records its own local claims into its sharded
+        SpanPlane row (DESIGN.md § 7.6)."""
         sps = sp is not None
         occ = state.tail - state.head
         k = jnp.minimum(occ, jnp.int32(self.shards * self.batch))
@@ -188,7 +262,7 @@ class _MeshEngineBase(_FusedEngine):
                 births=births, birth_round=sp.round if sps else None)
         state, _, total, over = pr[0], pr[1], pr[2], pr[3]
         j = 4
-        out = (state, acc, k, total, over)
+        telinfo = None
         if tel:
             pushes = pr[j]
             j += 1
@@ -196,107 +270,28 @@ class _MeshEngineBase(_FusedEngine):
             pops = cs_active.reshape(self.shards, self.batch).sum(
                 1, dtype=jnp.int32)
             mn, mx = masked_min_max(gvals, gok)   # FIFO: payload extrema
-            out = out + ((pops, pushes, mn, mx),)
+            occs = jnp.broadcast_to(state.tail - state.head,
+                                    (self.shards,))   # replicated ring
+            telinfo = (pops, pushes, occs, mn, mx)
         if sps:
             births = pr[j]
             me = jax.lax.axis_index(self.axis)
             cls = self._span_cls(vals, jnp.full_like(vals, me))
             sp = span_record(sp, cls, sp.round - bout, ok, vals)
             sp = span_tick(sp)
-            out = out + (sp, births)
-        return out
+        return state, acc, k, total, over, telinfo, sp, births
 
-    def _initial_carry(self, state: DistQueueState, acc):
-        acc = jax.tree_util.tree_map(jnp.asarray, acc)
-        occ0 = jnp.int32(np.asarray(state.tail - state.head))
-        return state, acc, occ0
-
-
-class FusedMeshRounds(_MeshEngineBase):
-    """The mesh megaround loop: one jitted shard_map call runs up to
-    ``limit`` rounds on device; host sync only at quiescence (or every
-    ``sync_every`` rounds).  ``run`` mirrors ``FusedRounds.run`` and
-    returns (acc, final DistQueueState) where acc carries a leading shard
-    axis unless ``combine`` reduces it."""
-
-    def __init__(self, step_fn: StepFn, *, mesh, axis: str = "data",
-                 capacity_log2: int = 10, batch: int = 64,
-                 sync_every: int = 0,
-                 combine: Callable[[Any], Any] = None,
-                 telemetry: Optional[Telemetry] = None,
-                 spans: Optional[Spans] = None, compact=None) -> None:
-        super().__init__(step_fn, mesh=mesh, axis=axis,
-                         capacity_log2=capacity_log2, batch=batch,
-                         sync_every=sync_every, telemetry=telemetry,
-                         spans=spans, compact=compact)
-        self.combine = combine
-        # in shard_map, P() = replicated operand, P(axis) = sharded; a bare
-        # P serves as a pytree-prefix spec for the whole acc subtree.  acc
-        # rides stacked (shards, ...) through P(axis) specs so successive
-        # chunk calls (sync_every heartbeats) compose.  The TracePlane (when
-        # telemetry is on) is replicated — every record field is derived
-        # from replicated values, so every shard writes the same plane.
-        # Trailing slots (tp, sp, births) always exist in the specs: None is
-        # a valid pytree leaf-set for any spec, and the all-None call
-        # compiles to the exact unspanned/untraced graph.  The SpanPlane is
-        # sharded (each shard records only its local claims); the births
-        # plane mirrors the ring field planes — replicated.
-        in_specs = (P(), P(), P(), P(), P(), P(), P(self.axis), P(), P(),
-                    P(), P()) + (P(), P(self.axis), P())
-        out_specs = (P(), P(), P(), P(), P(), P(), P(self.axis),
-                     P(), P(), P(), P(), P()) + (P(), P(self.axis), P())
-        self._megaround = jax.jit(shard_map(
-            self._megaround_impl, mesh=self.mesh,
-            in_specs=in_specs, out_specs=out_specs,
-            check_rep=False))   # while_loop has no replication rule
-
-    # -- the jitted megaround: up to `limit` rounds entirely on device ------
-    def _megaround_impl(self, cyc, saf, enq, idx, head, tail, acc,
-                        processed, spawned, max_occ, limit,
-                        tp=None, sp=None, births=None):
-        acc = jax.tree_util.tree_map(lambda x: x[0], acc)
-        tel = tp is not None
+    # -- shard_map boundary: unstack/restack the P(axis) leaves -------------
+    def _megaround_impl(self, qstate, acc, processed, spawned, max_occ,
+                        limit, tp=None, sp=None, births=None):
+        acc = _unstack(acc)
         sps = sp is not None
         if sps:   # sharded SpanPlane arrives stacked (1, ...) per shard
-            sp = jax.tree_util.tree_map(lambda x: x[0], sp)
-
-        def body(carry):
-            (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
-             max_occ, oflow, rounds, tp, sp, births) = carry
-            state = DistQueueState(cyc, saf, enq, idx, tail=tail, head=head)
-            r = self._round(state, acc, tel=tel, sp=sp, births=births)
-            state, acc, k, total, over = r[:5]
-            i = 5
-            if tel:
-                pops, pushes, mn, mx = r[i]
-                i += 1
-                occ = state.tail - state.head
-                tp = trace_record(
-                    tp, tp.count, pops, pushes,
-                    jnp.broadcast_to(occ, (self.shards,)),   # replicated ring
-                    mn, mx, over)
-            if sps:
-                sp, births = r[i], r[i + 1]
-            return (state.cycles, state.safes, state.enqs, state.idxs,
-                    state.head, state.tail, acc, processed + k,
-                    spawned + total,
-                    jnp.maximum(max_occ, state.tail - state.head),
-                    oflow | over, rounds + 1, tp, sp, births)
-
-        def cond(carry):
-            head, tail, oflow, rounds = carry[4], carry[5], carry[10], carry[11]
-            return (tail - head > 0) & (~oflow) & (rounds < limit)
-
-        carry = (cyc, saf, enq, idx, head, tail, acc, processed, spawned,
-                 max_occ, jnp.bool_(False), jnp.int32(0), tp, sp, births)
-        out = jax.lax.while_loop(cond, body, carry)
-        acc_stacked = jax.tree_util.tree_map(lambda x: x[None], out[6])
-        sp_out = out[13]
-        if sps:
-            sp_out = jax.tree_util.tree_map(lambda x: x[None], sp_out)
-        return (out[0], out[1], out[2], out[3], out[4], out[5], acc_stacked,
-                out[7], out[8], out[9], out[10], out[11], out[12], sp_out,
-                out[14])
+            sp = _unstack(sp)
+        out = super()._megaround_impl(qstate, acc, processed, spawned,
+                                      max_occ, limit, tp, sp, births)
+        sp_out = _restack(out[8]) if sps else out[8]
+        return (out[0], _restack(out[1])) + out[2:8] + (sp_out, out[9])
 
     def run(self, initial: np.ndarray, acc: Any = None,
             max_rounds: int = 10_000) -> Tuple[Any, DistQueueState]:
@@ -306,98 +301,250 @@ class FusedMeshRounds(_MeshEngineBase):
         coordination stays on device (one psum per round).  Determinism:
         bit-identical to the legacy per-round path — same acc leaves,
         planes, head/tail, stats.  Raises ``RuntimeError`` on ring
-        overflow or truncation at the next sync.  Returns ``(acc, final
-        DistQueueState)``; acc keeps a leading shard axis unless
-        ``combine`` reduces it."""
+        overflow or truncation at the next sync."""
         self._reset()
         st = self._seed(dist_queue_init(self.capacity),
                         np.asarray(initial, np.int32).reshape(-1))
-        st, acc, occ0 = self._initial_carry(st, acc)
-        acc = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x[None], (self.shards,) + x.shape),
-            acc)
-        state = [st.cycles, st.safes, st.enqs, st.idxs, st.head, st.tail,
-                 acc, jnp.int32(0), jnp.int32(0), occ0]
+        st, acc = self._initial_carry(st, acc)
+        occ0 = jnp.int32(np.asarray(st.tail - st.head))
+        state = [st, acc, jnp.int32(0), jnp.int32(0), occ0]
         ext = [self._tel_init(self.shards),
                self._span_init(self.shards, stacked=True),
                self._births_init((2 << self.capacity_log2,))]
-        self._tel_plane = lambda: ext[0]
-        self._span_plane = lambda: ext[1]
-
-        def chunk_fn(limit):
-            (state[0], state[1], state[2], state[3], state[4], state[5],
-             state[6], state[7], state[8], state[9], oflow, r,
-             ext[0], ext[1], ext[2]
-             ) = self._megaround(*state, jnp.int32(limit),
-                                 ext[0], ext[1], ext[2])
-            occ = int(np.int32(np.asarray(state[5] - state[4])))  # THE sync
-            return (occ, int(r), bool(oflow), int(state[7]), int(state[8]),
-                    int(state[9]))
-
-        self._drive(chunk_fn, max_rounds, "mesh ring")
-        final = DistQueueState(state[0], state[1], state[2], state[3],
-                               tail=state[5], head=state[4])
-        acc = state[6]
-        if self.combine is not None:
-            acc = self.combine(acc)
-        return acc, final
+        self._run_chunks(
+            state, ext,
+            lambda q: int(np.int32(np.asarray(q.tail - q.head))),
+            "mesh ring", max_rounds)
+        return self._finish(state)
 
 
-class MeshRoundRunner(_MeshEngineBase):
-    """Mesh twin of ``RoundRunner``: ``fused=True`` (default) delegates to
-    ``FusedMeshRounds``; ``fused=False`` keeps the legacy host-driven loop
-    — one jitted shard_map dispatch and one occupancy readback per round
-    (the ``mesh_task_round`` pathology PR 3's engine removed at chip
-    level), kept for step-debug and as the parity baseline.  Both engines
-    are bit-identical."""
+class ShardedMeshRingEngine(_MeshFifoBase):
+    """The per-shard-ring FIFO megaround (DESIGN.md § 2.3): each shard
+    loop-carries ONE 2·(capacity/shards)-slot local ring plus the (S,)
+    replicated ticket vectors — O(ring/shards) carry bytes per shard
+    (``loop_carry_bytes``, measured in bench_mesh) versus the replicated
+    engine's O(ring).  The claim schedule is load-aware
+    (fullest-rings-first, collective-free); the publish sprays children
+    round-robin by global rank in ONE meta-word psum.  Exact against the
+    replicated baseline on totals and order-insensitive accumulators;
+    claim *order* differs by design, so plane bit-identity is not a
+    contract here.  Spans are unsupported: the local rings keep no
+    replicated birth-stamp rider."""
 
     def __init__(self, step_fn: StepFn, *, mesh, axis: str = "data",
                  capacity_log2: int = 10, batch: int = 64,
-                 fused: bool = True, sync_every: int = 0,
+                 sync_every: int = 0,
+                 combine: Callable[[Any], Any] = None,
+                 telemetry: Optional[Telemetry] = None,
+                 spans: Optional[Spans] = None, compact=None) -> None:
+        if spans is not None:
+            raise ValueError(
+                "sharded ring planes keep no replicated birth-stamp "
+                "rider: spans needs the replicated mesh engine "
+                "(sharded=False)")
+        super().__init__(step_fn, mesh=mesh, axis=axis,
+                         capacity_log2=capacity_log2, batch=batch,
+                         sync_every=sync_every, combine=combine,
+                         telemetry=telemetry, spans=spans, compact=compact)
+        self.local_capacity = self.capacity // self.shards
+        self.lslots_log2 = (capacity_log2
+                            - (self.shards.bit_length() - 1)) + 1
+        n2 = 2 * self.local_capacity
+        reg = self.registry
+        # global (stacked) shapes; the registry divides sharded groups by
+        # the shard count in bytes_per_shard — the O(ring/shards) claim
+        reg.register("ring", (_sds((self.shards, n2)),) * 4, sharded=True)
+        reg.register("tickets", (_sds((self.shards,)), _sds((self.shards,))))
+        self._register_obs_planes(self.shards, stacked=True)
+        qspec = DistShardedQueueState(
+            *((reg.spec("ring"),) * 4),
+            tails=reg.spec("tickets"), heads=reg.spec("tickets"))
+        obs = (reg.spec("trace"), reg.spec("span"), reg.spec("births"))
+        in_specs = (qspec, P(self.axis), P(), P(), P(), P()) + obs
+        out_specs = (qspec, P(self.axis), P(), P(), P(), P(), P()) + obs
+        self._megaround = jax.jit(shard_map(
+            self._megaround_impl, mesh=self.mesh,
+            in_specs=in_specs, out_specs=out_specs,
+            check_rep=False))   # while_loop has no replication rule
+
+    # -- seeding: round-robin spray by seed rank into the local rings -------
+    def _seed(self, state: DistShardedQueueState,
+              initial: np.ndarray) -> DistShardedQueueState:
+        k = len(initial)
+        if k > self.capacity:
+            raise RuntimeError(
+                f"sharded mesh ring overflow: {k} seed values exceed "
+                f"capacity {self.capacity} (raise capacity_log2)")
+        if k == 0:
+            return state
+        planes = [list(np.asarray(p)) for p in
+                  (state.cycles, state.safes, state.enqs, state.idxs)]
+        tails = np.asarray(state.tails).copy()
+        shard_of = np.arange(k) % self.shards
+        for s in range(self.shards):
+            vals = initial[shard_of == s]
+            c = len(vals)
+            if c == 0:
+                continue
+            t = (np.int64(np.uint32(tails[s]))
+                 + np.arange(c, dtype=np.int64)) % (2 ** 32)
+            tickets = jnp.asarray(np.where(t >= 2 ** 31, t - 2 ** 32, t)
+                                  .astype(np.int32))
+            cyc, saf, enq, idx, ok = enq_planes(
+                jnp.asarray(planes[0][s]), jnp.asarray(planes[1][s]),
+                jnp.asarray(planes[2][s]), jnp.asarray(planes[3][s]),
+                tickets, jnp.asarray(vals), state.heads[s],
+                nslots_log2=self.lslots_log2, idx_bot=IDX_BOT)
+            assert bool(np.asarray(ok).all()), "exact tickets cannot miss"
+            for p, new in zip(planes, (cyc, saf, enq, idx)):
+                p[s] = np.asarray(new)
+            tails[s] = np.int32(np.int64(tails[s]) + c)
+        return DistShardedQueueState(
+            *(jnp.asarray(np.stack(p)) for p in planes),
+            tails=jnp.asarray(tails), heads=state.heads)
+
+    @staticmethod
+    def _occ_of(q: DistShardedQueueState):
+        return jnp.sum(q.tails - q.heads)
+
+    # -- one sharded round (the standardized ``_round`` contract) -----------
+    def _round(self, state: DistShardedQueueState, acc, tel: bool = False,
+               sp=None, births=None):
+        """claim (no collective: load-aware schedule over the replicated
+        (S,) occupancies) → step → publish (ONE psum: child blocks +
+        count/extrema meta words).  The local claim extrema are NOT
+        replicated, so with telemetry on they ride the publish psum as
+        ``pop_meta`` words — one-collective-per-round still holds."""
+        planes = (state.cycles, state.safes, state.enqs, state.idxs)
+        planes, heads, vals, ok, counts = dist_sharded_claim_round(
+            planes, state.heads, state.tails, self.batch, self.axis,
+            nslots_log2=self.lslots_log2)
+        acc, cvals, cmask = self.step_fn(acc, vals, ok)
+        cm = jnp.broadcast_to(cmask.astype(bool), cvals.shape).reshape(-1)
+        cv = cvals.reshape(-1).astype(jnp.int32)
+        pop_meta = masked_min_max(vals, ok) if tel else None
+        # dense-wave bound: a round spawning more than the GLOBAL capacity
+        # must overflow some local ring, where both paths install nothing
+        wdth = compact_width(cv.shape[0], self.capacity, self.compact)
+        res = dist_sharded_publish_round(
+            planes, heads, state.tails, cv, cm.astype(jnp.int32),
+            self.axis, nslots_log2=self.lslots_log2,
+            local_capacity=self.local_capacity, width=wdth,
+            pop_meta=pop_meta)
+        planes, tails, total, over = res[0], res[1], res[2], res[3]
+        state = DistShardedQueueState(*planes, tails=tails, heads=heads)
+        telinfo = None
+        if tel:
+            assigned, mins, maxs = res[4], res[5], res[6]
+            telinfo = (counts, assigned, tails - heads,
+                       jnp.min(mins), jnp.max(maxs))
+        return state, acc, jnp.sum(counts), total, over, telinfo, sp, births
+
+    # -- shard_map boundary: unstack/restack the P(axis) plane leaves -------
+    def _megaround_impl(self, qstate, acc, processed, spawned, max_occ,
+                        limit, tp=None, sp=None, births=None):
+        qstate = qstate._replace(
+            cycles=qstate.cycles[0], safes=qstate.safes[0],
+            enqs=qstate.enqs[0], idxs=qstate.idxs[0])
+        acc = _unstack(acc)
+        out = EngineCore._megaround_impl(
+            self, qstate, acc, processed, spawned, max_occ, limit,
+            tp, sp, births)
+        q = out[0]
+        q = q._replace(cycles=q.cycles[None], safes=q.safes[None],
+                       enqs=q.enqs[None], idxs=q.idxs[None])
+        return (q, _restack(out[1])) + out[2:]
+
+    def run(self, initial: np.ndarray, acc: Any = None,
+            max_rounds: int = 10_000) -> Tuple[Any, DistShardedQueueState]:
+        """Seed the per-shard rings (round-robin by seed rank) and run to
+        global quiescence; same sync/overflow/truncation contract as the
+        replicated engine.  Returns (acc, final ``DistShardedQueueState``
+        with globally-stacked planes)."""
+        self._reset()
+        st = self._seed(dist_sharded_queue_init(self.capacity, self.shards),
+                        np.asarray(initial, np.int32).reshape(-1))
+        st, acc = self._initial_carry(st, acc)
+        occ0 = jnp.int32(int(np.asarray(st.tails - st.heads).sum()))
+        state = [st, acc, jnp.int32(0), jnp.int32(0), occ0]
+        ext = [self._tel_init(self.shards), None, None]
+        self._run_chunks(
+            state, ext,
+            lambda q: int(np.asarray(q.tails - q.heads).sum()),
+            "sharded mesh ring", max_rounds)
+        return self._finish(state)
+
+
+class MeshRoundRunner(_MeshFifoBase):
+    """Mesh twin of ``RoundRunner``: ``fused=True`` (default) delegates
+    to ``MeshRingEngine`` (or ``ShardedMeshRingEngine`` with
+    ``sharded=True``); ``fused=False`` keeps the legacy host-driven loop
+    — one jitted shard_map dispatch and one occupancy readback per round
+    (the ``mesh_task_round`` pathology the fused engines removed), kept
+    for step-debug and as the parity baseline.  Fused and legacy are
+    bit-identical on the replicated ring."""
+
+    def __init__(self, step_fn: StepFn, *, mesh, axis: str = "data",
+                 capacity_log2: int = 10, batch: int = 64,
+                 fused: bool = True, sharded: bool = False,
+                 sync_every: int = 0,
                  combine: Callable[[Any], Any] = None,
                  telemetry: Optional[Telemetry] = None,
                  spans: Optional[Spans] = None, compact=None) -> None:
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
-                         sync_every=sync_every, telemetry=telemetry,
-                         spans=spans, compact=compact)
+                         sync_every=sync_every, combine=combine,
+                         telemetry=telemetry, spans=spans, compact=compact)
         self.fused = fused
-        self.combine = combine
+        self.sharded = sharded
         if spans is not None and not fused:
             raise ValueError(
                 "span planes are in-loop state: spans needs the fused "
                 "engine (fused=True)")
+        if sharded and not fused:
+            raise ValueError(
+                "sharded rings are a fused-engine configuration (the "
+                "per-shard planes live in the megaround carry): use "
+                "fused=True")
         if fused:
-            self._engine = FusedMeshRounds(
+            cls = ShardedMeshRingEngine if sharded else MeshRingEngine
+            self._engine = cls(
                 step_fn, mesh=mesh, axis=axis, capacity_log2=capacity_log2,
                 batch=batch, sync_every=sync_every, combine=combine,
                 telemetry=telemetry, spans=spans, compact=compact)
         else:
             self._engine = None
-            # legacy: acc rides stacked (shards, ...) through P(axis) specs
+            # legacy: acc rides stacked (shards, ...) through P(axis)
             self._round_jit = jax.jit(shard_map(
-                self._round_impl, mesh=self.mesh,
-                in_specs=(P(), P(), P(), P(), P(), P(), P(self.axis)),
-                out_specs=(P(), P(), P(), P(), P(), P(), P(self.axis),
-                           P(), P(), P()),
+                self._legacy_round, mesh=self.mesh,
+                in_specs=(P(), P(self.axis)),
+                out_specs=(P(), P(self.axis), P(), P(), P()),
                 check_rep=False))   # acc diverges per shard (P(axis) io)
 
-    def _round_impl(self, cyc, saf, enq, idx, head, tail, acc):
-        acc = jax.tree_util.tree_map(lambda x: x[0], acc)
-        state = DistQueueState(cyc, saf, enq, idx, tail=tail, head=head)
-        state, acc, k, total, over = self._round(state, acc)
-        acc = jax.tree_util.tree_map(lambda x: x[None], acc)
-        return (state.cycles, state.safes, state.enqs, state.idxs,
-                state.head, state.tail, acc, k, total, over)
+    # reuse the replicated engine's round/seed for the legacy baseline
+    _seed = MeshRingEngine._seed
+    _round = MeshRingEngine._round
+    _occ_of = MeshRingEngine._occ_of
+
+    def _legacy_round(self, qstate, acc):
+        acc = _unstack(acc)
+        qstate, acc, k, total, over = self._round(qstate, acc)[:5]
+        return qstate, _restack(acc), k, total, over
+
+    def loop_carry_bytes(self, shards: int = None) -> int:
+        # the fused engine owns the plane registry; the legacy loop
+        # carries nothing between dispatches (host-resident state)
+        if self._engine is not None:
+            return self._engine.loop_carry_bytes(shards)
+        return super().loop_carry_bytes(shards)
 
     def run(self, initial: np.ndarray, acc: Any = None,
             max_rounds: int = 10_000) -> Tuple[Any, DistQueueState]:
         """Run to quiescence on the selected engine.  ``fused=True``:
-        ``FusedMeshRounds.run`` contract (host sync only at quiescence /
+        the megaround contract (host sync only at quiescence /
         ``sync_every``); ``fused=False``: one shard_map dispatch and one
         occupancy readback per round (``host_syncs == rounds``).  Both
-        bit-deterministic and identical to each other; both raise on
-        overflow/truncation."""
+        bit-deterministic; both raise on overflow/truncation."""
         if self._engine is not None:
             try:
                 return self._engine.run(initial, acc, max_rounds)
@@ -407,48 +554,20 @@ class MeshRoundRunner(_MeshEngineBase):
         self._reset()
         st = self._seed(dist_queue_init(self.capacity),
                         np.asarray(initial, np.int32).reshape(-1))
-        st, acc, occ0 = self._initial_carry(st, acc)
-        acc = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x[None], (self.shards,) + x.shape),
-            acc)
-        state = [st.cycles, st.safes, st.enqs, st.idxs, st.head, st.tail]
-        rounds = processed = spawned = 0
-        max_occ = occ = int(np.int32(np.asarray(occ0)))
-        host_syncs = 0
-        overflow = False
-        while occ > 0 and rounds < max_rounds:
-            (state[0], state[1], state[2], state[3], state[4], state[5],
-             acc, k, total, over) = self._round_jit(*state, acc)
-            occ = int(np.int32(np.asarray(state[5] - state[4])))
-            host_syncs += 1                             # per-round readback
-            rounds += 1
-            processed += int(k)
-            spawned += int(total)
-            max_occ = max(max_occ, occ)
-            self.sync_log.append(SyncPoint(
-                rounds=rounds, occupancy=occ, wall_time=time.time(),
-                host_syncs=host_syncs))
-            if bool(over):
-                overflow = True
-                break
-        self.stats = {"rounds": rounds, "processed": processed,
-                      "spawned": spawned, "max_occupancy": max_occ,
-                      "drained": int(occ == 0),
-                      "host_syncs": host_syncs, "fused": 0}
-        if overflow:
-            raise RuntimeError(
-                f"mesh ring overflow: occupancy {occ} + spawned children "
-                f"exceed capacity {self.capacity} at round {rounds} (raise "
-                f"capacity_log2 or lower the fanout)")
-        if occ > 0:
-            raise RuntimeError(
-                f"mesh ring round loop truncated at max_rounds={max_rounds} "
-                f"with occupancy {occ}: not quiescent (stats['drained']=0)")
-        final = DistQueueState(state[0], state[1], state[2], state[3],
-                               tail=state[5], head=state[4])
+        st, acc = self._initial_carry(st, acc)
+        occ0 = int(np.int32(np.asarray(st.tail - st.head)))
+
+        def round_call(q, acc):
+            q, acc, k, total, over = self._round_jit(q, acc)
+            return q, acc, k, total, over, None
+
+        st, acc = self._legacy_loop(
+            st, acc, round_call, occ0,
+            lambda q: int(np.int32(np.asarray(q.tail - q.head))),
+            "mesh ring", max_rounds)
         if self.combine is not None:
             acc = self.combine(acc)
-        return acc, final
+        return acc, st
 
 
 # ---------------------------------------------------------------------------
@@ -456,16 +575,17 @@ class MeshRoundRunner(_MeshEngineBase):
 # ---------------------------------------------------------------------------
 
 
-class _PriorityMeshBase(_FusedEngine):
-    """Shared priority-mesh machinery: seeding, the one-round bodies, and
-    the mode-specific shard_map specs.  ``relaxed=True`` = per-shard local
-    heaps with hint-ordered claim rebalancing; ``relaxed=False`` = one
-    replicated heap popped in exact global min-key order."""
+class _PriorityMeshBase(EngineCore):
+    """Shared priority-mesh machinery: seeding and the one-round bodies.
+    ``relaxed=True`` = per-shard local heaps with hint-ordered claim
+    rebalancing; ``relaxed=False`` = one replicated heap popped in exact
+    global min-key order."""
 
     def __init__(self, step_fn: PriorityStepFn, *, mesh, axis: str = "data",
                  capacity_log2: int = 10, batch: int = 64,
                  arity_log2: int = 2, relaxed: bool = True,
                  sync_every: int = 0,
+                 combine: Callable[[Any], Any] = None,
                  telemetry: Optional[Telemetry] = None,
                  spans: Optional[Spans] = None, compact=None,
                  split: bool = False) -> None:
@@ -487,6 +607,7 @@ class _PriorityMeshBase(_FusedEngine):
         self.relaxed = relaxed
         self.compact = compact
         self.split = split
+        self.combine = combine
         if relaxed and batch > self.capacity:
             raise ValueError(
                 f"batch {batch} exceeds per-shard heap capacity "
@@ -559,21 +680,24 @@ class _PriorityMeshBase(_FusedEngine):
                jnp.asarray(sizes, jnp.int32), jnp.asarray(hints, jnp.int32))
         return res + ((jnp.stack(aux_l),) if spl else ())
 
-    # -- one priority mesh round, shared verbatim by both engines -----------
+    def _occ_of(self, q):
+        return jnp.sum(q[2]) if self.relaxed else q[2]
+
+    def _round(self, qstate, acc, tel: bool = False, sp=None, births=None):
+        body = self._round_relaxed if self.relaxed else self._round_strict
+        return body(*qstate, acc, tel=tel, sp=sp, births=births)
+
+    # -- one priority mesh round, relaxed ordering --------------------------
     def _round_relaxed(self, keys, vals, sizes, hints, acc,
                        tel: bool = False, sp=None, births=None):
         """claim (no collective: hint-ordered schedule over replicated
         sizes/hints) → masked pop wave on the local heap → step →
         publish (ONE psum) → masked insert of this shard's sprayed share.
-        Returns (keys, vals, sizes, hints, acc, popped, total, over,
-        trace); with ``tel`` an extra ``(pops, pushes, sizes, mn, mx)``
-        record tuple — the popped-key extrema ride the publish psum as
-        widened meta words (``pop_meta``), so the one-collective-per-round
-        invariant holds with telemetry on.  With ``sp`` the per-shard
-        births plane rides the local heap as a rider value plane: pops
-        surface the birth stamps, the masked insert stamps ``sp.round``
-        on this shard's sprayed share, and each shard records its own
-        pops — ``(sp, births)`` trail the return (DESIGN.md §7.6)."""
+        The popped-key extrema ride the publish psum as widened meta
+        words (``pop_meta``), so the one-collective-per-round invariant
+        holds with telemetry on.  With ``sp`` the per-shard births plane
+        rides the local heap as a rider value plane (DESIGN.md § 7.6).
+        The legacy trace tuple trails the standardized 8-tuple."""
         sps = sp is not None
         spl = self.split
         me = jax.lax.axis_index(self.axis)
@@ -653,35 +777,30 @@ class _PriorityMeshBase(_FusedEngine):
         hints = jnp.where(over, hints_pop, jnp.minimum(hints_pop, ckmin))
         sizes = jnp.where(over, sizes_pop, sizes_pop + assigned)
         total = jnp.where(over, 0, total)
-        trace = (outk, outv, ok, gk, gv, gactive)
-        out = (keys, vals, sizes, hints, acc, jnp.sum(counts), total, over,
-               trace)
+        telinfo = None
         if tel:
             telinfo = (counts, jnp.where(over, 0, assigned), sizes,
                        jnp.min(pop_mins), jnp.max(pop_maxs))
-            out = out + (telinfo,)
         if sps:
             cls = self._span_cls(outk, jnp.full_like(outk, me))
             sp = span_record(sp, cls, sp.round - bout, ok, outv)
             sp = span_tick(sp)
-            out = out + (sp, births)
-        elif spl:
-            out = out + (births,)
-        return out
+        trace = (outk, outv, ok, gk, gv, gactive)
+        return ((keys, vals, sizes, hints), acc, jnp.sum(counts), total,
+                over, telinfo, sp, births, trace)
 
+    # -- one priority mesh round, strict ordering ---------------------------
     def _round_strict(self, keys, vals, size, acc, tel: bool = False,
                       sp=None, births=None):
         """Every shard applies the identical full-width pop wave to the
         replicated heap (exact global min-key order), steps only its
         ``claim_schedule`` slice, and installs ALL gathered children —
-        the planes stay replicated by construction.  Returns (keys, vals,
-        size, acc, popped, total, over, trace); with ``tel`` an extra
-        ``(pops, pushes, occ, mn, mx)`` record tuple (the pop wave is
-        replicated full-width, so extrema are free).  With ``sp`` the
-        replicated births plane rides the replicated heap as a rider —
-        every shard computes identical pops/inserts but records only its
-        own ``claim_schedule`` slice into its sharded SpanPlane, so the
-        host-side shard merge counts each task once (DESIGN.md §7.6)."""
+        the planes stay replicated by construction.  The pop wave is
+        replicated full-width, so telemetry extrema are free.  With
+        ``sp`` every shard computes identical pops/inserts but records
+        only its own slice into its sharded SpanPlane, so the host-side
+        shard merge counts each task once (DESIGN.md § 7.6).  The legacy
+        trace tuple trails the standardized 8-tuple."""
         sps = sp is not None
         spl = self.split
         me = jax.lax.axis_index(self.axis)
@@ -742,8 +861,7 @@ class _PriorityMeshBase(_FusedEngine):
                 keys, vals, size, gk, gv, ins,
                 cap_log2=self.capacity_log2, arity_log2=self.arity_log2)
         total = jnp.where(over, 0, total)
-        trace = (outk_l, outv_l, act_l, gk, gv, gactive)
-        out = (keys, vals, size, acc, k, total, over, trace)
+        telinfo = None
         if tel:
             pops = active.reshape(self.shards, self.batch).sum(
                 1, dtype=jnp.int32)
@@ -753,16 +871,14 @@ class _PriorityMeshBase(_FusedEngine):
             mn, mx = masked_min_max(outk, lane < k)
             telinfo = (pops, pushes, jnp.broadcast_to(size, (self.shards,)),
                        mn, mx)
-            out = out + (telinfo,)
         if sps:
             outb_l = jnp.where(act_l, outb[rk_l], 0)
             cls = self._span_cls(outk_l, jnp.full_like(outk_l, me))
             sp = span_record(sp, cls, sp.round - outb_l, act_l, outv_l)
             sp = span_tick(sp)
-            out = out + (sp, births)
-        elif spl:
-            out = out + (births,)
-        return out
+        trace = (outk_l, outv_l, act_l, gk, gv, gactive)
+        return (DistHeapState(keys, vals, size), acc, k, total, over,
+                telinfo, sp, births, trace)
 
     def _broadcast_acc(self, acc):
         acc = jax.tree_util.tree_map(jnp.asarray, acc)
@@ -770,15 +886,31 @@ class _PriorityMeshBase(_FusedEngine):
             lambda x: jnp.broadcast_to(x[None], (self.shards,) + x.shape),
             acc)
 
+    # -- shard_map boundary, shared by fused and legacy ---------------------
+    def _unstack_round_io(self, qstate, births):
+        if self.relaxed:
+            k, v, sz, h = qstate
+            qstate = (k[0], v[0], sz, h)
+            if births is not None:
+                births = births[0]
+        return qstate, births
 
-class FusedPriorityMeshRounds(_PriorityMeshBase):
-    """The priority mesh megaround loop: one jitted shard_map call runs the
-    whole claim → pop-min → step → push cycle for up to ``limit`` rounds
-    with the heap planes (per-shard in relaxed mode, replicated in strict
-    mode) as loop-carried device state; the host syncs once at global
-    quiescence (or every ``sync_every`` rounds).  ``run`` mirrors
-    ``FusedPriorityRounds.run``: bit-deterministic, raises ``RuntimeError``
-    on heap overflow or ``max_rounds`` truncation at the next sync, and
+    def _restack_round_io(self, qstate, births):
+        if self.relaxed:
+            qstate = (qstate[0][None], qstate[1][None], qstate[2], qstate[3])
+            if births is not None:
+                births = births[None]
+        return qstate, births
+
+
+class MeshHeapEngine(_PriorityMeshBase):
+    """The priority mesh megaround loop: one jitted shard_map call runs
+    the whole claim → pop-min → step → push cycle for up to ``limit``
+    rounds with the heap planes (per-shard in relaxed mode, replicated in
+    strict mode) as loop-carried device state; the host syncs once at
+    global quiescence (or every ``sync_every`` rounds).  ``run`` mirrors
+    ``HeapEngine.run``: bit-deterministic, raises ``RuntimeError`` on
+    heap overflow or ``max_rounds`` truncation at the next sync, and
     returns (acc, final ``DistHeapState``) — acc carries a leading shard
     axis unless ``combine`` reduces it; relaxed-mode final planes are
     stacked ``(shards, cap)``."""
@@ -794,125 +926,54 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
                          arity_log2=arity_log2, relaxed=relaxed,
-                         sync_every=sync_every, telemetry=telemetry,
-                         spans=spans, compact=compact, split=split)
-        self.combine = combine
-        # trailing (tp, sp, births) slots always exist — None compiles to
-        # the exact unspanned/untraced graph.  TracePlane rides replicated;
-        # the SpanPlane is sharded (each shard records its own pops); the
-        # births plane matches its heap — per-shard (sharded) in relaxed
-        # mode, replicated in strict mode.  Split mode reuses the births
-        # slot for the aux rider plane (same shapes and specs).
+                         sync_every=sync_every, combine=combine,
+                         telemetry=telemetry, spans=spans, compact=compact,
+                         split=split)
+        cap = self.capacity
+        reg = self.registry
+        # TracePlane rides replicated; the SpanPlane is sharded (each
+        # shard records its own pops); the births plane matches its heap —
+        # per-shard (sharded) in relaxed mode, replicated in strict mode.
+        # Split mode reuses the births slot for the aux rider plane (same
+        # shapes and specs).
         if relaxed:
-            impl, hp = self._megaround_relaxed, P(self.axis)
-            in_specs = (hp, hp, P(), P(), hp, P(), P(), P(), P())
-            out_specs = (hp, hp, P(), P(), hp, P(), P(), P(), P(), P())
-            ext = (P(), P(self.axis), P(self.axis))
+            reg.register("heap",
+                         (_sds((self.shards, cap)),) * 2, sharded=True)
+            reg.register("sched", (_sds((self.shards,)),) * 2)
+            self._register_obs_planes(
+                self.shards, stacked=True,
+                births_shape=(self.shards, cap), births_sharded=True)
+            if split:
+                reg.register("births", _sds((self.shards, cap)),
+                             sharded=True)
+            qspec = ((reg.spec("heap"),) * 2 + (reg.spec("sched"),) * 2)
         else:
-            impl, hp = self._megaround_strict, P()
-            in_specs = (hp, hp, P(), P(self.axis), P(), P(), P(), P())
-            out_specs = (hp, hp, P(), P(self.axis), P(), P(), P(), P(), P())
-            ext = (P(), P(self.axis), P())
-        in_specs = in_specs + ext
-        out_specs = out_specs + ext
+            reg.register("heap", (_sds((cap,)), _sds((cap,)), _sds(())))
+            self._register_obs_planes(self.shards, stacked=True,
+                                      births_shape=(cap,))
+            if split:
+                reg.register("births", _sds((cap,)))
+            qspec = reg.spec("heap")
+        obs = (reg.spec("trace"), reg.spec("span"), reg.spec("births"))
+        in_specs = (qspec, P(self.axis), P(), P(), P(), P()) + obs
+        out_specs = (qspec, P(self.axis), P(), P(), P(), P(), P()) + obs
         self._megaround = jax.jit(shard_map(
-            impl, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
+            self._megaround_impl, mesh=self.mesh,
+            in_specs=in_specs, out_specs=out_specs,
             check_rep=False))   # while_loop has no replication rule
 
-    def _megaround_relaxed(self, keys, vals, sizes, hints, acc,
-                           processed, spawned, max_occ, limit,
-                           tp=None, sp=None, births=None):
-        keys, vals = keys[0], vals[0]
-        acc = jax.tree_util.tree_map(lambda x: x[0], acc)
-        tel = tp is not None
+    def _megaround_impl(self, qstate, acc, processed, spawned, max_occ,
+                        limit, tp=None, sp=None, births=None):
+        qstate, births = self._unstack_round_io(qstate, births)
+        acc = _unstack(acc)
         sps = sp is not None
-        spl = self.split
         if sps:   # sharded SpanPlane arrives stacked per shard
-            sp = jax.tree_util.tree_map(lambda x: x[0], sp)
-        if sps or spl:   # per-shard births/aux rider arrives stacked too
-            births = births[0]
-
-        def body(carry):
-            (keys, vals, sizes, hints, acc, processed, spawned, max_occ,
-             oflow, rounds, tp, sp, births) = carry
-            r = self._round_relaxed(keys, vals, sizes, hints, acc,
-                                    tel=tel, sp=sp, births=births)
-            keys, vals, sizes, hints, acc, k, total, over = r[:8]
-            i = 9   # r[8] is the per-round trace tuple (unused fused)
-            if tel:
-                pops, pushes, occs, mn, mx = r[i]
-                i += 1
-                tp = trace_record(tp, tp.count, pops, pushes, occs,
-                                  mn, mx, over)
-            if sps:
-                sp, births = r[i], r[i + 1]
-            elif spl:
-                births = r[i]
-            return (keys, vals, sizes, hints, acc, processed + k,
-                    spawned + total,
-                    jnp.maximum(max_occ, jnp.sum(sizes)),
-                    oflow | over, rounds + 1, tp, sp, births)
-
-        def cond(carry):
-            sizes, oflow, rounds = carry[2], carry[8], carry[9]
-            return (jnp.sum(sizes) > 0) & (~oflow) & (rounds < limit)
-
-        carry = (keys, vals, sizes, hints, acc, processed, spawned, max_occ,
-                 jnp.bool_(False), jnp.int32(0), tp, sp, births)
-        out = jax.lax.while_loop(cond, body, carry)
-        acc_stacked = jax.tree_util.tree_map(lambda x: x[None], out[4])
-        sp_out, births_out = out[11], out[12]
-        if sps:
-            sp_out = jax.tree_util.tree_map(lambda x: x[None], sp_out)
-        if sps or spl:
-            births_out = births_out[None]
-        return (out[0][None], out[1][None], out[2], out[3], acc_stacked,
-                out[5], out[6], out[7], out[8], out[9], out[10], sp_out,
-                births_out)
-
-    def _megaround_strict(self, keys, vals, size, acc,
-                          processed, spawned, max_occ, limit,
-                          tp=None, sp=None, births=None):
-        acc = jax.tree_util.tree_map(lambda x: x[0], acc)
-        tel = tp is not None
-        sps = sp is not None
-        spl = self.split
-        if sps:   # sharded SpanPlane arrives stacked; births is replicated
-            sp = jax.tree_util.tree_map(lambda x: x[0], sp)
-
-        def body(carry):
-            (keys, vals, size, acc, processed, spawned, max_occ, oflow,
-             rounds, tp, sp, births) = carry
-            r = self._round_strict(keys, vals, size, acc,
-                                   tel=tel, sp=sp, births=births)
-            keys, vals, size, acc, k, total, over = r[:7]
-            i = 8   # r[7] is the per-round trace tuple (unused fused)
-            if tel:
-                pops, pushes, occs, mn, mx = r[i]
-                i += 1
-                tp = trace_record(tp, tp.count, pops, pushes, occs,
-                                  mn, mx, over)
-            if sps:
-                sp, births = r[i], r[i + 1]
-            elif spl:
-                births = r[i]
-            return (keys, vals, size, acc, processed + k, spawned + total,
-                    jnp.maximum(max_occ, size), oflow | over, rounds + 1,
-                    tp, sp, births)
-
-        def cond(carry):
-            size, oflow, rounds = carry[2], carry[7], carry[8]
-            return (size > 0) & (~oflow) & (rounds < limit)
-
-        carry = (keys, vals, size, acc, processed, spawned, max_occ,
-                 jnp.bool_(False), jnp.int32(0), tp, sp, births)
-        out = jax.lax.while_loop(cond, body, carry)
-        acc_stacked = jax.tree_util.tree_map(lambda x: x[None], out[3])
-        sp_out = out[10]
-        if sps:
-            sp_out = jax.tree_util.tree_map(lambda x: x[None], sp_out)
-        return (out[0], out[1], out[2], acc_stacked, out[4], out[5], out[6],
-                out[7], out[8], out[9], sp_out, out[11])
+            sp = _unstack(sp)
+        out = super()._megaround_impl(qstate, acc, processed, spawned,
+                                      max_occ, limit, tp, sp, births)
+        qstate, births_out = self._restack_round_io(out[0], out[9])
+        sp_out = _restack(out[8]) if sps else out[8]
+        return (qstate, _restack(out[1])) + out[2:8] + (sp_out, births_out)
 
     def run(self, initial_keys: np.ndarray, initial_vals: np.ndarray,
             acc: Any = None, max_rounds: int = 10_000,
@@ -921,12 +982,10 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
         strict: one replicated heap) and run priority megarounds to
         global quiescence.  Sync contract: one host block per
         ``sync_every`` chunk (once total when 0); one psum per round on
-        device.  Determinism: bit-identical to the legacy per-round path.
-        Raises ``RuntimeError`` on heap overflow or truncation at the
-        next sync.  Returns ``(acc, DistHeapState)`` — relaxed-mode
-        planes stacked ``(shards, cap)`` with per-shard sizes, acc with a
-        leading shard axis unless ``combine`` reduces it.  In split mode
-        ``initial_aux`` seeds the per-item aux words (zeros when None)."""
+        device.  Determinism: bit-identical to the legacy per-round
+        path.  Raises ``RuntimeError`` on heap overflow or truncation at
+        the next sync.  In split mode ``initial_aux`` seeds the per-item
+        aux words (zeros when None)."""
         self._reset()
         ik = np.asarray(initial_keys, np.int32).reshape(-1)
         iv = np.asarray(initial_vals, np.int32).reshape(-1)
@@ -939,54 +998,29 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
         else:
             ia = None
         acc = self._broadcast_acc(acc)
+        seeded = self._seed(ik, iv, ia)
         if self.relaxed:
-            seeded = self._seed(ik, iv, ia)
-            keys, vals, sizes, hints = seeded[:4]
-            occ0 = jnp.int32(int(np.asarray(sizes).sum()))
-            state = [keys, vals, sizes, hints, acc,
-                     jnp.int32(0), jnp.int32(0), occ0]
-            ext = [self._tel_init(self.shards),
-                   self._span_init(self.shards, stacked=True),
-                   seeded[4] if spl
-                   else self._births_init((self.shards, self.capacity))]
-            self._tel_plane = lambda: ext[0]
-            self._span_plane = lambda: ext[1]
-
-            def chunk_fn(limit):
-                (state[0], state[1], state[2], state[3], state[4],
-                 state[5], state[6], state[7], oflow, r,
-                 ext[0], ext[1], ext[2]
-                 ) = self._megaround(*state, jnp.int32(limit),
-                                     ext[0], ext[1], ext[2])
-                occ = int(np.asarray(state[2]).sum())        # THE sync
-                return (occ, int(r), bool(oflow), int(state[5]),
-                        int(state[6]), int(state[7]))
-
-            self._drive(chunk_fn, max_rounds, "mesh heap")
-            final = DistHeapState(state[0], state[1], state[2])
+            qstate = seeded[:4]
+            occ0 = jnp.int32(int(np.asarray(qstate[2]).sum()))
+            births0 = (seeded[4] if spl
+                       else self._births_init((self.shards, self.capacity)))
         else:
-            seeded = self._seed(ik, iv, ia)
-            keys, vals, size = seeded[:3]
-            state = [keys, vals, size, acc,
-                     jnp.int32(0), jnp.int32(0), jnp.asarray(size, jnp.int32)]
-            ext = [self._tel_init(self.shards),
-                   self._span_init(self.shards, stacked=True),
-                   seeded[3] if spl else self._births_init((self.capacity,))]
-            self._tel_plane = lambda: ext[0]
-            self._span_plane = lambda: ext[1]
+            qstate = DistHeapState(*seeded[:3])
+            occ0 = jnp.asarray(qstate.size, jnp.int32)
+            births0 = (seeded[3] if spl
+                       else self._births_init((self.capacity,)))
+        state = [qstate, acc, jnp.int32(0), jnp.int32(0), occ0]
+        ext = [self._tel_init(self.shards),
+               self._span_init(self.shards, stacked=True), births0]
 
-            def chunk_fn(limit):
-                (state[0], state[1], state[2], state[3], state[4],
-                 state[5], state[6], oflow, r, ext[0], ext[1], ext[2]
-                 ) = self._megaround(*state, jnp.int32(limit),
-                                     ext[0], ext[1], ext[2])
-                occ = int(np.asarray(state[2]))              # THE sync
-                return (occ, int(r), bool(oflow), int(state[4]),
-                        int(state[5]), int(state[6]))
+        def occ_fn(q):
+            return (int(np.asarray(q[2]).sum()) if self.relaxed
+                    else int(np.asarray(q[2])))
 
-            self._drive(chunk_fn, max_rounds, "mesh heap")
-            final = DistHeapState(state[0], state[1], state[2])
-        acc = state[4] if self.relaxed else state[3]
+        self._run_chunks(state, ext, occ_fn, "mesh heap", max_rounds)
+        q = state[0]
+        final = DistHeapState(q[0], q[1], q[2])
+        acc = state[1]
         if self.combine is not None:
             acc = self.combine(acc)
         return acc, final
@@ -994,15 +1028,15 @@ class FusedPriorityMeshRounds(_PriorityMeshBase):
 
 class PriorityMeshRoundRunner(_PriorityMeshBase):
     """Mesh twin of ``PriorityRoundRunner``: ``fused=True`` (default)
-    delegates to ``FusedPriorityMeshRounds`` (host sync only at global
+    delegates to ``MeshHeapEngine`` (host sync only at global
     quiescence); ``fused=False`` keeps the legacy host-driven loop — one
     jitted shard_map dispatch and one occupancy readback per round — for
     step-debug, as the parity baseline, and as the history recorder
     (``trace=True``, legacy only: per round the popped (key, val, ok)
     batches per shard and the gathered published children, the raw
     material for ``sched.plinearizability`` checking).  Both engines are
-    bit-identical: same acc leaves, same heap planes, same sizes/hints and
-    stats counters."""
+    bit-identical: same acc leaves, same heap planes, same sizes/hints
+    and stats counters."""
 
     def __init__(self, step_fn: PriorityStepFn, *, mesh, axis: str = "data",
                  capacity_log2: int = 10, batch: int = 64,
@@ -1016,10 +1050,10 @@ class PriorityMeshRoundRunner(_PriorityMeshBase):
         super().__init__(step_fn, mesh=mesh, axis=axis,
                          capacity_log2=capacity_log2, batch=batch,
                          arity_log2=arity_log2, relaxed=relaxed,
-                         sync_every=sync_every, telemetry=telemetry,
-                         spans=spans, compact=compact, split=split)
+                         sync_every=sync_every, combine=combine,
+                         telemetry=telemetry, spans=spans, compact=compact,
+                         split=split)
         self.fused = fused
-        self.combine = combine
         if trace and fused:
             raise ValueError("trace recording needs the per-round host "
                              "boundary: use fused=False")
@@ -1030,7 +1064,7 @@ class PriorityMeshRoundRunner(_PriorityMeshBase):
         self.trace_enabled = trace
         self.trace = []
         if fused:
-            self._engine = FusedPriorityMeshRounds(
+            self._engine = MeshHeapEngine(
                 step_fn, mesh=mesh, axis=axis, capacity_log2=capacity_log2,
                 batch=batch, arity_log2=arity_log2, relaxed=relaxed,
                 sync_every=sync_every, combine=combine, telemetry=telemetry,
@@ -1038,82 +1072,48 @@ class PriorityMeshRoundRunner(_PriorityMeshBase):
             return
         self._engine = None
         sp = P(self.axis)
-        # split mode threads the aux rider plane through the per-round
-        # state: per-shard (sharded) in relaxed mode, replicated in strict
-        # mode, sitting right after the heap planes in state order
-        if relaxed:
-            impl, hp = self._round_impl_relaxed, sp
-            in_specs = (hp, hp, P(), P()) + ((hp,) if split else ()) + (sp,)
-            out_core = (in_specs + (P(), P(), P()))
-        else:
-            impl, hp = self._round_impl_strict, P()
-            in_specs = (hp, hp, P()) + ((P(),) if split else ()) + (sp,)
-            out_core = (in_specs + (P(), P(), P()))
+        hp = sp if relaxed else P()
+        qspec = (hp, hp, P(), P()) if relaxed else P()
+        bspec = hp if (split and relaxed) else P()
+        in_specs = (qspec, bspec, sp)
+        out_core = (qspec, bspec, sp, P(), P(), P())
         # trace arrays ride in the jit outputs only when recording — the
         # untraced legacy baseline must not pay per-round materialization
         # the fused engine never pays
         out_specs = out_core + ((sp, sp, sp, P(), P(), P())
                                 if trace else ())
-        ncore = len(out_core)
-
-        def round_fn(*args):
-            out = impl(*args)
-            return out if trace else out[:ncore]
-
         self._round_jit = jax.jit(shard_map(
-            round_fn, mesh=self.mesh, in_specs=in_specs,
+            self._legacy_round, mesh=self.mesh, in_specs=in_specs,
             out_specs=out_specs, check_rep=False))
 
-    def _round_impl_relaxed(self, keys, vals, sizes, hints, *rest):
-        if self.split:
-            births, acc = rest
-            births = births[0]
-        else:
-            (acc,) = rest
-            births = None
-        keys, vals = keys[0], vals[0]
-        acc = jax.tree_util.tree_map(lambda x: x[0], acc)
-        r = self._round_relaxed(keys, vals, sizes, hints, acc,
-                                births=births)
-        keys, vals, sizes, hints, acc, k, total, over = r[:8]
-        tr = r[8]
-        acc = jax.tree_util.tree_map(lambda x: x[None], acc)
-        outk, outv, ok, gk, gv, gactive = tr
-        core = (keys[None], vals[None], sizes, hints)
-        if self.split:
-            core = core + (r[9][None],)
-        return core + (acc, k, total, over,
-                       outk[None], outv[None], ok[None], gk, gv, gactive)
+    def _legacy_round(self, qstate, births, acc):
+        qstate, births = self._unstack_round_io(qstate, births)
+        acc = _unstack(acc)
+        r = self._round(qstate, acc, births=births)
+        qstate, acc, k, total, over, _, _, births = r[:8]
+        qstate, births = self._restack_round_io(qstate, births)
+        out = (qstate, births, _restack(acc), k, total, over)
+        if self.trace_enabled:
+            outk, outv, ok, gk, gv, gactive = r[8]
+            out = out + (outk[None], outv[None], ok[None], gk, gv, gactive)
+        return out
 
-    def _round_impl_strict(self, keys, vals, size, *rest):
-        if self.split:
-            births, acc = rest
-        else:
-            (acc,) = rest
-            births = None
-        acc = jax.tree_util.tree_map(lambda x: x[0], acc)
-        r = self._round_strict(keys, vals, size, acc, births=births)
-        keys, vals, size, acc, k, total, over = r[:7]
-        tr = r[7]
-        acc = jax.tree_util.tree_map(lambda x: x[None], acc)
-        outk, outv, ok, gk, gv, gactive = tr
-        core = (keys, vals, size)
-        if self.split:
-            core = core + (r[8],)
-        return core + (acc, k, total, over,
-                       outk[None], outv[None], ok[None], gk, gv, gactive)
+    def loop_carry_bytes(self, shards: int = None) -> int:
+        if self._engine is not None:
+            return self._engine.loop_carry_bytes(shards)
+        return super().loop_carry_bytes(shards)
 
     def run(self, initial_keys: np.ndarray, initial_vals: np.ndarray,
             acc: Any = None, max_rounds: int = 10_000,
             initial_aux: np.ndarray = None) -> Tuple[Any, DistHeapState]:
         """Run to quiescence on the selected engine.  ``fused=True``:
-        ``FusedPriorityMeshRounds.run`` contract (host sync only at
-        quiescence / ``sync_every``); ``fused=False``: one dispatch and
-        one occupancy readback per round (``host_syncs == rounds``),
-        appending per-round pop/push records to ``self.trace`` when
-        ``trace=True``.  Both bit-deterministic and identical to each
-        other; both raise on overflow/truncation.  In split mode
-        ``initial_aux`` seeds the per-item aux words (zeros when None)."""
+        ``MeshHeapEngine.run`` contract (host sync only at quiescence /
+        ``sync_every``); ``fused=False``: one dispatch and one occupancy
+        readback per round (``host_syncs == rounds``), appending
+        per-round pop/push records to ``self.trace`` when ``trace=True``.
+        Both bit-deterministic and identical to each other; both raise on
+        overflow/truncation.  In split mode ``initial_aux`` seeds the
+        per-item aux words (zeros when None)."""
         if self._engine is not None:
             try:
                 return self._engine.run(initial_keys, initial_vals, acc,
@@ -1135,63 +1135,64 @@ class PriorityMeshRoundRunner(_PriorityMeshBase):
         else:
             ia = None
         acc = self._broadcast_acc(acc)
+        seeded = self._seed(ik, iv, ia)
         if self.relaxed:
-            seeded = self._seed(ik, iv, ia)
-            keys, vals, sizes, hints = seeded[:4]
-            state = [keys, vals, sizes, hints]
-            if spl:
-                state.append(seeded[4])
-            occ = int(np.asarray(sizes).sum())
+            qstate = seeded[:4]
+            births = seeded[4] if spl else None
+            occ0 = int(np.asarray(qstate[2]).sum())
         else:
-            seeded = self._seed(ik, iv, ia)
-            keys, vals, size = seeded[:3]
-            state = [keys, vals, size]
-            if spl:
-                state.append(seeded[3])
-            occ = int(np.asarray(size))
-        rounds = processed = spawned = host_syncs = 0
-        max_occ = occ
-        overflow = False
-        while occ > 0 and rounds < max_rounds:
-            out = self._round_jit(*state, acc)
-            nstate = len(state)
-            state = list(out[:nstate])
-            acc, k, total, over = out[nstate:nstate + 4]
-            occ = (int(np.asarray(state[2]).sum()) if self.relaxed
-                   else int(np.asarray(state[2])))
-            host_syncs += 1                             # per-round readback
-            rounds += 1
-            processed += int(k)
-            spawned += int(total)
-            max_occ = max(max_occ, occ)
-            self.sync_log.append(SyncPoint(
-                rounds=rounds, occupancy=occ, wall_time=time.time(),
-                host_syncs=host_syncs))
-            if self.trace_enabled:
-                outk, outv, ok, gk, gv, gactive = out[nstate + 4:]
-                self.trace.append({
-                    "pops": (np.asarray(outk), np.asarray(outv),
-                             np.asarray(ok)),
-                    "pushes": (np.asarray(gk), np.asarray(gv),
-                               np.asarray(gactive)),
-                })
-            if bool(over):
-                overflow = True
-                break
-        self.stats = {"rounds": rounds, "processed": processed,
-                      "spawned": spawned, "max_occupancy": max_occ,
-                      "drained": int(occ == 0),
-                      "host_syncs": host_syncs, "fused": 0}
-        if overflow:
-            raise RuntimeError(
-                f"mesh heap overflow: occupancy {occ} + spawned children "
-                f"exceed capacity {self.capacity} at round {rounds} (raise "
-                f"capacity_log2 or lower the fanout)")
-        if occ > 0:
-            raise RuntimeError(
-                f"mesh heap round loop truncated at max_rounds={max_rounds} "
-                f"with occupancy {occ}: not quiescent (stats['drained']=0)")
-        final = DistHeapState(state[0], state[1], state[2])
+            qstate = DistHeapState(*seeded[:3])
+            births = seeded[3] if spl else None
+            occ0 = int(np.asarray(qstate.size))
+
+        def round_call(st, acc):
+            out = self._round_jit(st[0], st[1], acc)
+            q, b, acc, k, total, over = out[:6]
+            return ((q, b), acc, k, total, over,
+                    out[6:] if self.trace_enabled else None)
+
+        def occ_fn(st):
+            return (int(np.asarray(st[0][2]).sum()) if self.relaxed
+                    else int(np.asarray(st[0][2])))
+
+        def on_round(tr):
+            if tr is None:
+                return
+            outk, outv, ok, gk, gv, gactive = tr
+            self.trace.append({
+                "pops": (np.asarray(outk), np.asarray(outv),
+                         np.asarray(ok)),
+                "pushes": (np.asarray(gk), np.asarray(gv),
+                           np.asarray(gactive)),
+            })
+
+        st, acc = self._legacy_loop(
+            (qstate, births), acc, round_call, occ0, occ_fn,
+            "mesh heap", max_rounds, on_round=on_round)
+        q = st[0]
+        final = DistHeapState(q[0], q[1], q[2])
         if self.combine is not None:
             acc = self.combine(acc)
         return acc, final
+
+
+@deprecated_engine("MeshRingEngine")
+class FusedMeshRounds(MeshRingEngine):
+    """Deprecated alias for ``MeshRingEngine`` (the replicated FIFO mesh
+    megaround as an ``enginecore`` configuration)."""
+
+
+@deprecated_engine("MeshHeapEngine")
+class FusedPriorityMeshRounds(MeshHeapEngine):
+    """Deprecated alias for ``MeshHeapEngine`` (the priority mesh
+    megaround as an ``enginecore`` configuration)."""
+
+
+# engine-matrix rows (tests/conftest.py parametrizes over these)
+register_engine("mesh", MeshRoundRunner, priority=False, mesh=True)
+register_engine("mesh-sharded", MeshRoundRunner, priority=False, mesh=True,
+                kwargs={"sharded": True}, spans_ok=False)
+register_engine("pmesh-relaxed", PriorityMeshRoundRunner, priority=True,
+                mesh=True, kwargs={"relaxed": True})
+register_engine("pmesh-strict", PriorityMeshRoundRunner, priority=True,
+                mesh=True, kwargs={"relaxed": False})

@@ -11,7 +11,7 @@ analogue of Lemma III.1, with no nondeterminism left.  One round is
 
 Two execution engines share this contract:
 
-* **fused** (default) — ``fusedrounds.FusedRounds``: the whole round cycle
+* **fused** (default) — ``fusedrounds.RingEngine``: the whole round cycle
   runs on device inside one jitted ``lax.while_loop`` with head/tail as
   device scalars and ``wavefaa`` as the in-loop child-ticket source; the
   host syncs only at quiescence (or every ``sync_every`` rounds).
@@ -46,9 +46,10 @@ from ..core.distqueue import dist_dequeue_round, dist_enqueue_round
 from ..kernels.heap_batch import KEY_INF as HEAP_KEY_INF, heap_apply
 from ..kernels.pallas_env import resolve_interpret
 from ..kernels.ring_slots import ring_dequeue, ring_enqueue
-from .fusedrounds import (IDX_BOT, FusedPriorityRounds, FusedRounds,
-                          HeapState, PriorityStepFn, RingState, StepFn,
-                          heap_init, ring_init)
+from .enginecore import register_engine
+from .fusedrounds import (IDX_BOT, HeapEngine, HeapState, PriorityStepFn,
+                          RingEngine, RingState, StepFn, heap_init,
+                          ring_init)
 
 __all__ = [
     "IDX_BOT", "HeapState", "PriorityRoundRunner", "PriorityStepFn",
@@ -87,7 +88,7 @@ class RoundRunner:
             raise ValueError("span planes are in-loop state: spans needs "
                              "the fused engine (fused=True)")
         if fused:
-            self._engine = FusedRounds(
+            self._engine = RingEngine(
                 step_fn, capacity_log2=capacity_log2, batch=batch,
                 interpret=self.interpret, sync_every=sync_every,
                 telemetry=telemetry, spans=spans, compact=compact)
@@ -213,7 +214,7 @@ class PriorityRoundRunner:
             raise ValueError("span planes are in-loop state: spans needs "
                              "the fused engine (fused=True)")
         if fused:
-            self._engine = FusedPriorityRounds(
+            self._engine = HeapEngine(
                 step_fn, capacity_log2=capacity_log2, batch=batch,
                 arity_log2=arity_log2, interpret=self.interpret,
                 sync_every=sync_every, telemetry=telemetry, spans=spans,
@@ -323,3 +324,8 @@ def mesh_task_round(state, spawn_vals: jax.Array, spawn_mask: jax.Array,
     state, granted = dist_enqueue_round(state, spawn_vals, spawn_mask, axis)
     state, vals, ok = dist_dequeue_round(state, claim_mask, axis)
     return state, granted, vals, ok
+
+
+# engine-matrix rows (tests/conftest.py parametrizes over these)
+register_engine("rounds", RoundRunner, priority=False, mesh=False)
+register_engine("prounds", PriorityRoundRunner, priority=True, mesh=False)

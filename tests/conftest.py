@@ -1,0 +1,79 @@
+"""Shared fixtures: the fused-engine matrix.
+
+``ENGINE_REGISTRY`` (repro.runtime.enginecore) enumerates every runner
+configuration — FIFO/priority x single-host/mesh x replicated/sharded.
+The ``engine_case`` fixture parametrizes a test over the whole matrix so
+engine-generic invariants (telemetry-off bit-identity, drain/stat
+agreement, deprecation coverage) are written once instead of copy-pasted
+per engine.  New engines self-register at import and are picked up here
+with zero test edits.
+"""
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(
+    0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.jaxcompat import make_mesh  # noqa: E402
+from repro.runtime import ENGINE_REGISTRY  # noqa: E402
+
+
+def _fifo_fanout_step():
+    def step(acc, vals, valid):
+        acc = acc.at[jnp.where(valid, vals, 0)].add(valid.astype(jnp.int32))
+        cv = jnp.stack([vals * 2, vals * 2 + 1], -1).astype(jnp.int32)
+        cm = (valid & (vals < 32))[:, None]
+        return acc, cv, cm
+    return step
+
+
+def _priority_fanout_step():
+    def step(acc, keys, vals, valid):
+        acc = acc.at[jnp.where(valid, vals, 0)].add(valid.astype(jnp.int32))
+        cv = jnp.stack([vals * 2, vals * 2 + 1], -1).astype(jnp.int32)
+        ck = (cv * 7919) % 1000
+        cm = (valid & (vals < 32))[:, None]
+        return acc, ck, cv, cm
+    return step
+
+
+class EngineCase:
+    """One engine-matrix row bound to the standard fanout workload.
+
+    ``build(**obs)`` constructs the runner (telemetry=/spans= pass
+    through); ``run(runner)`` drives it to quiescence and returns
+    ``(acc, final_state, stats)``.  Mesh rows run on a 1-device mesh with
+    ``combine=sum-over-shards`` so acc shapes match the host rows.
+    """
+
+    def __init__(self, entry):
+        self.entry = entry
+        self.name = entry.name
+
+    def build(self, **obs):
+        kw = dict(self.entry.kwargs, capacity_log2=8, batch=16, **obs)
+        if self.entry.mesh:
+            kw["mesh"] = make_mesh((1,), ("data",))
+            kw["combine"] = lambda a: a.sum(0)
+        step = (_priority_fanout_step() if self.entry.priority
+                else _fifo_fanout_step())
+        return self.entry.runner(step, **kw)
+
+    def run(self, runner):
+        acc0 = jnp.zeros(80, jnp.int32)
+        if self.entry.priority:
+            acc, st = runner.run([7919 % 1000], [1], acc=acc0)
+        else:
+            acc, st = runner.run([1], acc=acc0)
+        return acc, st, dict(runner.stats)
+
+
+@pytest.fixture(params=sorted(ENGINE_REGISTRY), ids=str)
+def engine_case(request):
+    return EngineCase(ENGINE_REGISTRY[request.param])

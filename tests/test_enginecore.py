@@ -1,0 +1,400 @@
+"""EngineCore refactor invariants (DESIGN.md § 4.8).
+
+The four fused engines are now thin configurations over one while_loop
+builder and one plane registry.  This suite pins the refactor to the
+pre-refactor engines with golden digests captured from the last commit
+before the unification:
+
+* every engine is bit-identical to its pre-refactor twin on fixed-seed
+  runs — stats counters, acc leaves, queue planes, drained trace and
+  span banks (1-shard in-process, 2-shard in a forced-device
+  subprocess);
+* the sharded FIFO mesh ring is *exact* against the replicated baseline
+  (combined acc + processed/spawned totals; per-shard plane layout
+  legitimately differs under fullest-first claim order) while its
+  per-shard loop carry shrinks O(ring/shards);
+* the packed ``(birth << 1) | 1`` span stamp cap is enforced at stamp
+  time — concrete rounds raise ``ValueError`` in ``enq_planes``, traced
+  rounds raise ``RuntimeError`` from the driver clamp;
+* the deprecated ``Fused*`` entry points warn and still run.
+"""
+
+import hashlib
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(
+    0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.jaxcompat import make_mesh  # noqa: E402
+from repro.kernels.ring_slots import SPAN_ROUND_CAP, enq_planes  # noqa: E402
+from repro.obs import Spans, Telemetry  # noqa: E402
+from repro.runtime import (  # noqa: E402
+    ENGINE_REGISTRY, FusedMeshRounds, FusedPriorityMeshRounds,
+    FusedPriorityRounds, FusedRounds, MeshRoundRunner, PlaneRegistry,
+    PriorityMeshRoundRunner, PriorityRoundRunner, RoundRunner)
+from repro.runtime.fusedrounds import IDX_BOT  # noqa: E402
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+STATS = ("rounds", "processed", "spawned", "max_occupancy", "drained",
+         "host_syncs")
+
+# digests of the pre-refactor engines on the fixed workloads below
+# (sha256[:16] over raw int32 bytes; see _digest/_tel_digest)
+GOLDEN = {
+    "fifo_fanout": {
+        "stats": [7, 63, 62, 32, 1, 1], "acc": "b8d77df0675e0603",
+        "planes": "1a0afe86d6513a2a", "head_tail": [575, 575],
+        "tel": "cb3aae309ae1f69f", "spans": "b5f891af2ff7334a"},
+    "heap_sssp": {
+        "stats": [10, 124, 122, 46, 1, 1], "acc": "17210d10068cbe8b",
+        "planes": "3e13f886f2e96c70", "size": 0,
+        "tel": "ef6805304552b52a", "spans": "bbf1586fce097a87"},
+    "mesh_fanout": {
+        "stats": [7, 63, 62, 32, 1, 1], "acc": "b8d77df0675e0603",
+        "planes": "1a0afe86d6513a2a", "head_tail": [575, 575],
+        "tel": "cb3aae309ae1f69f"},
+    "mesh_bfs": {"stats": [23, 144, 143, 12, 1, 1],
+                 "dist": "c8795c4f65942e14"},
+    "pmesh_relaxed": {
+        "stats": [19, 260, 258, 128, 1, 1], "acc": "cd729cf83f33eed5",
+        "planes": "c5830eb454bd1761", "tel": "c24a2c5171ec130e"},
+    "pmesh_strict": {
+        "stats": [19, 260, 258, 128, 1, 1], "acc": "cd729cf83f33eed5",
+        "planes": "c5830eb454bd1761", "tel": "c24a2c5171ec130e"},
+}
+
+GOLDEN_2SHARD = {
+    "mesh_fanout_2": {
+        "stats": [6, 63, 62, 32, 1, 1], "acc": "b8d77df0675e0603",
+        "planes": "1a0afe86d6513a2a", "head_tail": [575, 575],
+        "tel": "01bcb5be848e8028"},
+    "mesh_bfs_2": {"stats": [23, 287, 286, 24, 1, 1],
+                   "dist": "c8795c4f65942e14"},
+    "pmesh_relaxed_2": {
+        "stats": [12, 260, 258, 88, 1, 1], "acc": "cd729cf83f33eed5",
+        "planes": "c822643452639513", "tel": "bd8f8645639ba8bc"},
+    "pmesh_strict_2": {
+        "stats": [12, 260, 258, 110, 1, 1], "acc": "cd729cf83f33eed5",
+        "planes": "c5830eb454bd1761", "tel": "2455cb0b0971fae9"},
+}
+
+
+def _digest(*arrays):
+    h = hashlib.sha256()
+    for a in arrays:
+        h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _tel_digest(tel):
+    rows = []
+    for r in tel.records:
+        rows.append((r.round, r.imbalance, r.min_key, r.max_key,
+                     int(r.overflow), tuple(r.pops), tuple(r.pushes),
+                     tuple(r.occupancy)))
+    return hashlib.sha256(repr(rows).encode()).hexdigest()[:16]
+
+
+def _stat_tuple(st):
+    return [int(st[k]) for k in STATS]
+
+
+def _tree_step(acc, vals, valid):
+    acc = acc.at[jnp.where(valid, vals, 0)].add(valid.astype(jnp.int32))
+    cv = jnp.stack([vals * 2, vals * 2 + 1], -1).astype(jnp.int32)
+    cm = (valid & (vals < 32))[:, None]
+    return acc, cv, cm
+
+
+def _pri_step(acc, keys, vals, valid):
+    acc = acc.at[jnp.where(valid, vals % 97, 0)].add(valid.astype(jnp.int32))
+    ck = jnp.stack([keys + 3, keys + 7], -1).astype(jnp.int32)
+    cv = jnp.stack([vals * 2 + 1, vals * 2 + 2], -1).astype(jnp.int32)
+    cm = (valid & (keys < 24))[:, None]
+    return acc, ck, cv, cm
+
+
+def _pri_mesh_step(acc, keys, vals, valid):
+    acc = acc.at[jnp.where(valid, vals % 89, 0)].add(valid.astype(jnp.int32))
+    ck = jnp.stack([keys + 2, keys + 5], -1).astype(jnp.int32)
+    cv = jnp.stack([(vals * 7919) % 1000, (vals * 104729) % 1000],
+                   -1).astype(jnp.int32)
+    cm = (valid & (keys < 20))[:, None]
+    return acc, ck, cv, cm
+
+
+def _mesh1():
+    return make_mesh((1,), ("data",))
+
+
+# -- bit-identity vs the pre-refactor engines ---------------------------------
+
+
+def test_chip_fifo_matches_prerefactor_golden():
+    g = GOLDEN["fifo_fanout"]
+    tel, sp = Telemetry(capacity=256), Spans(classes=1, buckets=8)
+    r = RoundRunner(_tree_step, capacity_log2=8, batch=16, telemetry=tel,
+                    spans=sp)
+    acc, st = r.run([1], acc=jnp.zeros(80, jnp.int32))
+    assert _stat_tuple(r.stats) == g["stats"]
+    assert _digest(acc) == g["acc"]
+    assert _digest(*st[:4]) == g["planes"]
+    assert [int(st.head), int(st.tail)] == g["head_tail"]
+    assert _tel_digest(tel) == g["tel"]
+    assert _digest(sp.hist, sp.max_wait) == g["spans"]
+    # plain run (no obs planes in the carry): same digests
+    r2 = RoundRunner(_tree_step, capacity_log2=8, batch=16)
+    acc2, st2 = r2.run([1], acc=jnp.zeros(80, jnp.int32))
+    assert _stat_tuple(r2.stats) == g["stats"]
+    assert _digest(acc2) == g["acc"] and _digest(*st2[:4]) == g["planes"]
+
+
+def test_chip_heap_matches_prerefactor_golden():
+    g = GOLDEN["heap_sssp"]
+    tel, sp = Telemetry(capacity=256), Spans(classes=1, buckets=8)
+    r = PriorityRoundRunner(_pri_step, capacity_log2=9, batch=16,
+                            telemetry=tel, spans=sp)
+    acc, st = r.run([5, 1], [1, 2], acc=jnp.zeros(97, jnp.int32))
+    assert _stat_tuple(r.stats) == g["stats"]
+    assert _digest(acc) == g["acc"]
+    assert _digest(st.keys, st.vals) == g["planes"]
+    assert int(st.size) == g["size"]
+    assert _tel_digest(tel) == g["tel"]
+    assert _digest(sp.hist, sp.max_wait) == g["spans"]
+
+
+def test_mesh_engines_match_prerefactor_goldens_1shard():
+    mesh = _mesh1()
+    g = GOLDEN["mesh_fanout"]
+    tel = Telemetry(capacity=256)
+    r = MeshRoundRunner(_tree_step, mesh=mesh, capacity_log2=8, batch=16,
+                        combine=lambda a: a.sum(0), telemetry=tel)
+    acc, st = r.run([1], acc=jnp.zeros(80, jnp.int32))
+    assert _stat_tuple(r.stats) == g["stats"]
+    assert _digest(acc) == g["acc"] and _digest(*st[:4]) == g["planes"]
+    assert [int(np.asarray(st.head)),
+            int(np.asarray(st.tail))] == g["head_tail"]
+    assert _tel_digest(tel) == g["tel"]
+
+    for relaxed, key in ((True, "pmesh_relaxed"), (False, "pmesh_strict")):
+        g = GOLDEN[key]
+        tel = Telemetry(capacity=512)
+        r = PriorityMeshRoundRunner(_pri_mesh_step, mesh=mesh,
+                                    capacity_log2=10, batch=16,
+                                    relaxed=relaxed,
+                                    combine=lambda a: a.sum(0),
+                                    telemetry=tel)
+        acc, st = r.run([3, 1], [7, 11], acc=jnp.zeros(89, jnp.int32))
+        assert _stat_tuple(r.stats) == g["stats"], key
+        assert _digest(acc) == g["acc"], key
+        assert _digest(st.keys, st.vals) == g["planes"], key
+        assert _tel_digest(tel) == g["tel"], key
+
+    from repro.apps import bfs
+    g = GOLDEN["mesh_bfs"]
+    graph = bfs.road_like(144)
+    dist, stats = bfs.bfs_mesh_rounds(graph, 0, mesh=mesh, batch=32)
+    assert _stat_tuple(stats) == g["stats"]
+    assert _digest(dist) == g["dist"]
+    assert np.array_equal(dist, bfs.bfs_reference(graph, 0))
+
+
+def _forced_device_env(n: int):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n}"
+                        ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"), env.get("PYTHONPATH"), REPO)
+        if p)
+    return env
+
+
+def test_mesh_engines_match_prerefactor_goldens_2shard():
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--golden2"],
+        capture_output=True, text=True, cwd=REPO,
+        env=_forced_device_env(2), timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got == GOLDEN_2SHARD
+
+
+def _golden2_worker():
+    """Re-derive the 2-shard goldens in a forced-device subprocess."""
+    mesh = make_mesh((2,), ("data",))
+    out = {}
+    tel = Telemetry(capacity=256)
+    r = MeshRoundRunner(_tree_step, mesh=mesh, capacity_log2=8, batch=16,
+                        combine=lambda a: a.sum(0), telemetry=tel)
+    acc, st = r.run([1], acc=jnp.zeros(80, jnp.int32))
+    out["mesh_fanout_2"] = {
+        "stats": _stat_tuple(r.stats), "acc": _digest(acc),
+        "planes": _digest(*st[:4]),
+        "head_tail": [int(np.asarray(st.head)), int(np.asarray(st.tail))],
+        "tel": _tel_digest(tel)}
+    from repro.apps import bfs
+    g = bfs.road_like(144)
+    dist, stats = bfs.bfs_mesh_rounds(g, 0, mesh=mesh, batch=32)
+    out["mesh_bfs_2"] = {"stats": _stat_tuple(stats),
+                         "dist": _digest(dist)}
+    for relaxed in (True, False):
+        tel = Telemetry(capacity=512)
+        r = PriorityMeshRoundRunner(_pri_mesh_step, mesh=mesh,
+                                    capacity_log2=10, batch=16,
+                                    relaxed=relaxed,
+                                    combine=lambda a: a.sum(0),
+                                    telemetry=tel)
+        acc, st = r.run([3, 1], [7, 11], acc=jnp.zeros(89, jnp.int32))
+        out["pmesh_%s_2" % ("relaxed" if relaxed else "strict")] = {
+            "stats": _stat_tuple(r.stats), "acc": _digest(acc),
+            "planes": _digest(st.keys, st.vals), "tel": _tel_digest(tel)}
+    print(json.dumps(out))
+
+
+# -- sharded FIFO mesh ring: exactness + O(ring/shards) carry -----------------
+
+
+def test_sharded_ring_exact_and_carry_shrinks_1_2_4_shards():
+    """Per-shard ring planes: combined results exact vs the replicated
+    baseline at 1/2/4 shards, per-shard loop-carry bytes strictly
+    shrinking as shards double (the replicated engine stays O(ring))."""
+    carries = {}
+    for n in (1, 2, 4):
+        out = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--sharded-worker"],
+            capture_output=True, text=True, cwd=REPO,
+            env=_forced_device_env(n), timeout=900)
+        assert out.returncode == 0, (n, out.stderr[-3000:])
+        got = json.loads(out.stdout.strip().splitlines()[-1])
+        assert got["acc_repl"] == got["acc_sharded"], n
+        assert got["totals_repl"] == got["totals_sharded"], n
+        assert got["carry_repl"] == carries.get("repl",
+                                                got["carry_repl"])
+        carries["repl"] = got["carry_repl"]
+        carries[n] = got["carry_sharded"]
+    assert carries[2] < carries[1] and carries[4] < carries[2]
+    assert carries["repl"] == carries[1]
+
+
+def _sharded_worker():
+    mesh = make_mesh((len(jax.devices()),), ("data",))
+    out = {}
+    for sharded in (False, True):
+        r = MeshRoundRunner(_tree_step, mesh=mesh, capacity_log2=8,
+                            batch=16, sharded=sharded,
+                            combine=lambda a: a.sum(0))
+        acc, q = r.run([1], acc=jnp.zeros(80, jnp.int32), max_rounds=200)
+        tag = "sharded" if sharded else "repl"
+        out["acc_" + tag] = np.asarray(acc).tolist()
+        out["totals_" + tag] = [int(r.stats["processed"]),
+                                int(r.stats["spawned"])]
+        out["carry_" + tag] = r.loop_carry_bytes()
+    print(json.dumps(out))
+
+
+def test_sharded_ring_rejects_spans():
+    with pytest.raises(ValueError, match="replicated mesh engine"):
+        MeshRoundRunner(_tree_step, mesh=_mesh1(), capacity_log2=8,
+                        batch=16, sharded=True,
+                        spans=Spans(classes=1, buckets=8))
+
+
+def test_sharded_ring_requires_fused():
+    with pytest.raises(ValueError, match="fused=True"):
+        MeshRoundRunner(_tree_step, mesh=_mesh1(), capacity_log2=8,
+                        batch=16, sharded=True, fused=False)
+
+
+# -- plane registry accounting ------------------------------------------------
+
+
+def test_plane_registry_bytes_per_shard():
+    reg = PlaneRegistry()
+    reg.register("ring", (jax.ShapeDtypeStruct((1024,), jnp.int32),) * 4,
+                 sharded=True)
+    reg.register("tickets", (jax.ShapeDtypeStruct((4,), jnp.int32),) * 2)
+    full = 4 * 1024 * 4 + 2 * 4 * 4
+    assert reg.bytes_per_shard(1) == full
+    # sharded groups divide by shards; replicated groups do not
+    assert reg.bytes_per_shard(4) == 4 * 256 * 4 + 2 * 4 * 4
+
+
+def test_engine_registry_covers_the_matrix():
+    assert {"rounds", "prounds", "mesh", "mesh-sharded", "pmesh-relaxed",
+            "pmesh-strict"} <= set(ENGINE_REGISTRY)
+    assert not ENGINE_REGISTRY["mesh-sharded"].spans_ok
+    assert ENGINE_REGISTRY["mesh-sharded"].kwargs == {"sharded": True}
+
+
+# -- span round-clock cap enforced at stamp time ------------------------------
+
+
+def test_enq_planes_rejects_birth_round_at_cap():
+    n = 8
+    planes = [jnp.zeros(2 * n, jnp.int32) for _ in range(3)]
+    idxs = jnp.full(2 * n, IDX_BOT, jnp.int32)
+    with pytest.raises(ValueError, match="birth-stamp cap"):
+        enq_planes(planes[0], planes[1], planes[2], idxs,
+                   jnp.arange(4, dtype=jnp.int32),
+                   jnp.arange(4, dtype=jnp.int32), jnp.int32(0),
+                   nslots_log2=4, idx_bot=IDX_BOT,
+                   birth_round=SPAN_ROUND_CAP)
+    # one under the cap stamps fine
+    enq_planes(planes[0], planes[1], planes[2], idxs,
+               jnp.arange(4, dtype=jnp.int32),
+               jnp.arange(4, dtype=jnp.int32), jnp.int32(0),
+               nslots_log2=4, idx_bot=IDX_BOT,
+               birth_round=SPAN_ROUND_CAP - 1)
+
+
+def test_driver_raises_before_span_stamps_wrap():
+    r = RoundRunner(_tree_step, capacity_log2=8, batch=16,
+                    spans=Spans(classes=1, buckets=8))
+    r._engine.span_round_cap = 4          # the fanout needs 7 rounds
+    with pytest.raises(RuntimeError, match="span round clock"):
+        r.run([1], acc=jnp.zeros(80, jnp.int32))
+    # without spans the same cap is irrelevant: no stamps, no raise
+    r2 = RoundRunner(_tree_step, capacity_log2=8, batch=16)
+    r2._engine.span_round_cap = 4
+    acc, _ = r2.run([1], acc=jnp.zeros(80, jnp.int32))
+    assert int(np.asarray(acc).sum()) == 63
+
+
+# -- deprecated entry points --------------------------------------------------
+
+
+def test_deprecated_fused_names_warn_and_run():
+    mesh = _mesh1()
+    with pytest.warns(DeprecationWarning, match="FusedRounds .* RingEngine"):
+        e = FusedRounds(_tree_step, capacity_log2=8, batch=16)
+    acc, _ = e.run([1], acc=jnp.zeros(80, jnp.int32))
+    assert _digest(acc) == GOLDEN["fifo_fanout"]["acc"]
+    with pytest.warns(DeprecationWarning, match="HeapEngine"):
+        FusedPriorityRounds(_pri_step, capacity_log2=9, batch=16)
+    with pytest.warns(DeprecationWarning, match="MeshRingEngine"):
+        e = FusedMeshRounds(_tree_step, mesh=mesh, capacity_log2=8,
+                            batch=16, combine=lambda a: a.sum(0))
+    acc, _ = e.run([1], acc=jnp.zeros(80, jnp.int32))
+    assert _digest(acc) == GOLDEN["mesh_fanout"]["acc"]
+    with pytest.warns(DeprecationWarning, match="MeshHeapEngine"):
+        FusedPriorityMeshRounds(_pri_mesh_step, mesh=mesh,
+                                capacity_log2=10, batch=16)
+
+
+if __name__ == "__main__":
+    if "--golden2" in sys.argv:
+        _golden2_worker()
+    elif "--sharded-worker" in sys.argv:
+        _sharded_worker()

@@ -132,42 +132,22 @@ def _check_records(tel, stats, shards=1):
     assert tel.registry.get(f"{tel.engine}.rounds") == stats["rounds"]
 
 
-def test_fused_rounds_telemetry_off_bit_identical():
+def test_engine_matrix_telemetry_off_bit_identical(engine_case):
+    """One test over the whole engine matrix (tests/conftest.py): for
+    every registered runner configuration, telemetry on vs off is
+    bit-identical on acc, queue planes, and stats, and the drained
+    records agree with the stats counters."""
     out = []
-    for tel in (None, Telemetry(256, engine="rounds")):
-        r = RoundRunner(_tree_step(), capacity_log2=8, batch=16,
-                        telemetry=tel)
-        acc, st = r.run([1], acc=jnp.zeros(80, jnp.int32))
-        out.append((acc, st, dict(r.stats)))
-    _assert_identical(out[0], out[1])
-    _check_records(r.telemetry, out[1][2])
-
-
-def test_fused_priority_rounds_telemetry_off_bit_identical():
-    out = []
-    for tel in (None, Telemetry(256, engine="prounds")):
-        r = PriorityRoundRunner(_pri_step(), capacity_log2=8, batch=16,
-                                telemetry=tel)
-        acc, st = r.run([5], [1], acc=jnp.zeros(80, jnp.int32))
-        out.append((acc, st, dict(r.stats)))
-    _assert_identical(out[0], out[1])
-    _check_records(r.telemetry, out[1][2])
-    # priority planes record popped-*key* extrema: monotone buckets here
-    keyed = [x for x in r.telemetry.records if x.min_key != KEY_SENTINEL]
-    assert keyed and all(x.min_key <= x.max_key for x in keyed)
-
-
-def test_fused_mesh_rounds_telemetry_off_bit_identical():
-    mesh = _mesh1()
-    out = []
-    for tel in (None, Telemetry(256, engine="mesh")):
-        r = MeshRoundRunner(_tree_step(), mesh=mesh, capacity_log2=8,
-                            batch=16, combine=lambda a: a.sum(0),
-                            telemetry=tel)
-        acc, st = r.run([1], acc=jnp.zeros(80, jnp.int32))
-        out.append((acc, st, dict(r.stats)))
+    for tel in (None, Telemetry(256, engine=engine_case.name)):
+        r = engine_case.build(telemetry=tel)
+        out.append(engine_case.run(r))
     _assert_identical(out[0], out[1])
     _check_records(r.telemetry, out[1][2], shards=1)
+    if engine_case.entry.priority:
+        # priority planes record popped-*key* extrema
+        keyed = [x for x in r.telemetry.records
+                 if x.min_key != KEY_SENTINEL]
+        assert keyed and all(x.min_key <= x.max_key for x in keyed)
 
 
 def _pri_mesh_tree_step():
@@ -178,22 +158,6 @@ def _pri_mesh_tree_step():
         cm = (valid & (vals < 32))[:, None]
         return acc, ck, cv, cm
     return step
-
-
-@pytest.mark.parametrize("relaxed", [True, False])
-def test_fused_priority_mesh_telemetry_off_bit_identical(relaxed):
-    mesh = _mesh1()
-    out = []
-    for tel in (None, Telemetry(256, engine="pmesh")):
-        r = PriorityMeshRoundRunner(_pri_mesh_tree_step(), mesh=mesh,
-                                    capacity_log2=8, batch=16,
-                                    relaxed=relaxed,
-                                    combine=lambda a: a.sum(0),
-                                    telemetry=tel)
-        acc, st = r.run([7919 % 1000], [1], acc=jnp.zeros(80, jnp.int32))
-        out.append((acc, st, dict(r.stats)))
-    _assert_identical(out[0], out[1])
-    _check_records(r.telemetry, out[1][2], shards=1)
 
 
 def test_telemetry_tiny_capacity_drops_not_raises():
