@@ -7,9 +7,11 @@ Table IV/Fig. 6 BFS, Fig. 7 ray tracing, kernel micro-benchmarks, the
 task-runtime fabric comparison (bench_runtime), the G-PQ priority policy
 comparison (bench_runtime.priority_main), the round/mesh megaround
 engines (bench_rounds, bench_mesh), priority-mesh SSSP (bench_sssp), the
-telemetry overhead sweep (bench_obs), and the offered-load latency sweep
+telemetry overhead sweep (bench_obs), the offered-load latency sweep
 reading per-class sojourn percentiles off the device span planes
-(bench_latency).
+(bench_latency), and the open-loop serving harness comparing host-pool
+vs device-resident EDF admission on goodput and tail latency
+(bench_serving).
 
 ``--trace [DIR]`` emits the observability artifact instead of (or before)
 the sweep: a 2-shard mesh SSSP run's telemetry as ``trace_sssp.jsonl`` +
@@ -87,7 +89,7 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # Trajectory rows keep only scheduling-relevant metrics; everything else in
 # a row (configs, counts) rides along untouched.
 _TRAJECTORY_SECTIONS = ("runtime", "priority", "rounds", "mesh", "sssp",
-                        "obs", "latency", "profiling")
+                        "obs", "latency", "profiling", "serving")
 
 
 def _git_rev() -> str:
@@ -138,7 +140,7 @@ def main() -> None:
     ap.add_argument("--section", default=None,
                     help="comma-separated subset of: throughput, profiling, "
                          "bfs, raytrace, kernels, runtime, priority, rounds, "
-                         "mesh, sssp, obs, latency")
+                         "mesh, sssp, obs, latency, serving")
     ap.add_argument("--trace", nargs="?", const=".", default=None,
                     metavar="DIR",
                     help="emit the telemetry artifact into DIR (default .): "
@@ -159,7 +161,8 @@ def main() -> None:
                      f"{args.emit_trajectory!r}")
     from . import (bench_bfs, bench_kernels, bench_latency, bench_mesh,
                    bench_obs, bench_profiling, bench_raytrace, bench_rounds,
-                   bench_runtime, bench_sssp, bench_throughput)
+                   bench_runtime, bench_serving, bench_sssp,
+                   bench_throughput)
 
     if args.trace is not None:
         if not bench_obs.trace_main(trace_dir=args.trace,
@@ -180,6 +183,8 @@ def main() -> None:
     kw_obs = (dict(batches=(64,), fanout_depth=8, bfs_n=1024, sssp_n=256)
               if args.quick else {})
     kw_lat = dict(batches=(16, 64), n=256) if args.quick else {}
+    kw_srv = (dict(rates=(0.5, 2.5), ticks=80, trials=2)
+              if args.quick else {})
     sections = {
         "throughput": lambda out: bench_throughput.main(out, **kw_thr),
         "profiling": lambda out: bench_profiling.main(out, **kw_prof),
@@ -193,6 +198,7 @@ def main() -> None:
         "sssp": lambda out: bench_sssp.main(out, **kw_sssp),
         "obs": lambda out: bench_obs.main(out, **kw_obs),
         "latency": lambda out: bench_latency.main(out, **kw_lat),
+        "serving": lambda out: bench_serving.main(out, **kw_srv),
     }
     if args.section:
         todo = [s.strip() for s in args.section.split(",") if s.strip()]

@@ -175,6 +175,13 @@ class EngineCore:
     telemetry: Optional[Telemetry]
     spans: Optional[Spans] = None
     span_round_cap: int = SPAN_ROUND_CAP
+    # optional extra loop-exit predicate ``carry -> bool`` (python-level:
+    # when None — every engine except the serving admission tick — the
+    # built graph is byte-identical to the hookless loop, so the recorded
+    # goldens keep holding).  The predicate MUST be replicated across
+    # shards: the relaxed round's publish psum is a collective, and a
+    # shard exiting early would deadlock the others.
+    _extra_cond = None
 
     def _reset(self) -> None:
         self.stats: Dict[str, int] = {}
@@ -314,8 +321,11 @@ class EngineCore:
                     rounds + 1, tp, sp, births)
 
         def cond(carry):
-            return ((occ_of(carry[0]) > 0) & (~carry[5])
-                    & (carry[6] < limit))
+            c = ((occ_of(carry[0]) > 0) & (~carry[5])
+                 & (carry[6] < limit))
+            if self._extra_cond is not None:
+                c = c & self._extra_cond(carry)
+            return c
 
         return jax.lax.while_loop(cond, body, (
             qstate, acc, processed, spawned, max_occ, jnp.bool_(False),

@@ -1,0 +1,385 @@
+"""Device-resident serving admission (DESIGN.md § 5.5): EDF admission as
+priority mesh megarounds.
+
+``ServingMeshEngine`` is a tick-driven configuration of the § 6 relaxed
+``MeshHeapEngine``: pending generation requests live *device-resident* as
+``(deadline-key | payload)`` heap entries in the per-shard priority
+planes, and one serving tick is one megaround call — claim → pop-min →
+admission step → publish — that pops requests in (locally exact, mesh
+k-relaxed) EDF order and admits the maximal deadline-ordered prefix that
+fits the tick's slot and KV-page budgets.  The admission decision *is*
+the engine's ``PriorityStepFn``:
+
+* pops arrive per shard in ascending key order (``heap_pop_count`` pops
+  the local minimum repeatedly), so prefix-fit = stop-at-first-stall,
+  exactly the host pool's ``_try_admit`` contract;
+* a request that does not fit is republished as a *child* at its
+  ORIGINAL deadline key — the paper's enqueue-wave re-entry — so it ages
+  toward urgency while newer arrivals take later keys (the § 5.5
+  guarantee the host path already provides);
+* any republication marks the (replicated) ``stalled`` flag; the fused
+  loop's ``_extra_cond`` hook exits the megaround at the end of that
+  round, ending the tick.  Between ticks the heap planes stay resident
+  on device; the host only inserts new arrivals, refreshes budgets, and
+  reads back the admitted index log.
+
+Payload packing: ``val = retry · table + idx`` where ``idx`` names the
+host-side request-table row and ``retry`` counts re-entries, so every
+heap residence of a request is a *unique* ident — required by
+``sched.plinearizability.mesh_trace_history``'s differentiated-history
+scheme, and what lets ``pop_history()`` feed ``check_p_linearizable``
+within the declared ``sched.relaxed.mesh_relaxation_bound`` envelope.
+
+Budgets (slots and pages) partition per shard, remainder to low shards:
+at one shard admission is *exact* EDF (bit-agreement with the host pool
+asserted in tests); at S > 1 shards the admitted set may legitimately
+relax within the mesh envelope, like every other relaxed pop.
+
+Deadline keys are capped at ``DEADLINE_KEY_CAP`` (= the packed span
+stamp's 2^30 round-clock cap, ``kernels.ring_slots.SPAN_ROUND_CAP``):
+a key at or past the cap raises ``ValueError`` at stamp time — silent
+wraparound would invert EDF order (PR 9's cap contract, asserted in
+``tests/test_serving_admission.py``).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.heap_batch import (KEY_INF as HEAP_KEY_INF,
+                                  heap_insert_masked)
+from ..kernels.ring_slots import SPAN_ROUND_CAP
+from ..obs.trace import SyncPoint
+from ..runtime.enginecore import register_engine
+from ..runtime.meshrounds import MeshHeapEngine
+
+__all__ = ["DEADLINE_KEY_CAP", "ServingMeshEngine"]
+
+# deadline keys share the packed birth-stamp round clock's cap: one
+# stamp-time contract for every monotone clock in the system
+DEADLINE_KEY_CAP = SPAN_ROUND_CAP
+
+
+def _check_deadline_keys(keys: np.ndarray) -> None:
+    if keys.size == 0:
+        return
+    lo, hi = int(keys.min()), int(keys.max())
+    if lo < 0 or hi >= DEADLINE_KEY_CAP:
+        raise ValueError(
+            f"deadline key {hi if hi >= DEADLINE_KEY_CAP else lo} outside "
+            f"[0, {DEADLINE_KEY_CAP}): keys past the 2^30 round-clock cap "
+            f"would wrap and silently invert EDF order — rebase the "
+            f"deadline clock (PR 9 stamp-time cap contract)")
+
+
+class ServingMeshEngine(MeshHeapEngine):
+    """Tick-driven EDF admission on the relaxed priority mesh.
+
+    Unlike the drain-to-quiescence engines, serving state is *persistent*:
+    ``tick(new_keys, new_idxs, need=, slots=, pages=)`` installs the
+    tick's arrivals into the device heap planes, runs ONE megaround call
+    (exiting at quiescence or at the first admission stall via the
+    ``_extra_cond`` hook), and returns the admitted request indices in
+    admission order.  Page-stalled requests remain heap-resident at their
+    original deadline key and compete again next tick.
+
+    ``acc`` protocol (all leaves ride the per-shard ``P(axis)`` spec):
+    ``need`` (table,) pages-per-request lookup; ``slots``/``pages``
+    scalar per-shard budgets; ``adm_idx``/``adm_n`` the admitted log;
+    ``stalled`` the replicated loop-exit flag; ``round`` the global round
+    clock; optional ``plk``/``plv``/``plr``/``pln`` pop-log planes
+    (``pop_log`` > 0) recording every pop for the p-linearizability
+    checker."""
+
+    def __init__(self, *, mesh, axis: str = "data",
+                 capacity_log2: int = 8, batch: int = 16,
+                 arity_log2: int = 2, table_log2: int = 8,
+                 pop_log: int = 0, sync_every: int = 0,
+                 combine=None, telemetry=None, spans=None,
+                 compact=None) -> None:
+        self.table = 1 << table_log2
+        self.pop_log = int(pop_log)
+        super().__init__(self._admission_step, mesh=mesh, axis=axis,
+                         capacity_log2=capacity_log2, batch=batch,
+                         arity_log2=arity_log2, relaxed=True,
+                         sync_every=sync_every, combine=combine,
+                         telemetry=telemetry, spans=spans, compact=compact)
+        self._state = None          # [qstate, acc, processed, spawned, mx]
+        self._ext = None            # [tp, sp, births]
+        self._spray = 0             # round-robin insert pointer (persistent)
+        self._rounds = 0
+        self._host_syncs = 0
+        self.admitted_log: List[int] = []
+
+    # -- the admission decision as a PriorityStepFn --------------------------
+
+    def _admission_step(self, acc, keys, vals, valid):
+        """Admit the maximal deadline-ordered prefix of this pop wave that
+        fits the remaining slot/page budget; republish the rest at their
+        original keys with a bumped retry ident."""
+        T = jnp.int32(self.table)
+        idx = jnp.where(valid, vals % T, 0)
+        need = acc["need"][idx]
+        lane = jnp.arange(keys.shape[0], dtype=jnp.int32)
+        nvalid = jnp.cumsum(valid.astype(jnp.int32))
+        pcum = jnp.cumsum(jnp.where(valid, need, 0))
+        fits = valid & (pcum <= acc["pages"]) & (nvalid <= acc["slots"])
+        # stop at first stall: admission is a deadline-ordered *prefix*,
+        # so a request can only be jumped by an earlier deadline
+        bad = valid & ~fits
+        first_bad = jnp.min(jnp.where(bad, lane, jnp.int32(keys.shape[0])))
+        admit = valid & (lane < first_bad)
+        rep = valid & ~admit
+        acc = dict(acc)
+        acc["pages"] = acc["pages"] - jnp.sum(jnp.where(admit, need, 0))
+        acc["slots"] = acc["slots"] - jnp.sum(admit.astype(jnp.int32))
+        apos = acc["adm_n"] + jnp.cumsum(admit.astype(jnp.int32)) - 1
+        apos = jnp.where(admit, apos, jnp.int32(self.table))
+        acc["adm_idx"] = acc["adm_idx"].at[apos].set(idx, mode="drop")
+        acc["adm_n"] = acc["adm_n"] + jnp.sum(admit.astype(jnp.int32))
+        if self.pop_log:
+            ppos = acc["pln"] + nvalid - 1
+            ppos = jnp.where(valid, ppos, jnp.int32(self.pop_log))
+            acc["plk"] = acc["plk"].at[ppos].set(keys, mode="drop")
+            acc["plv"] = acc["plv"].at[ppos].set(vals, mode="drop")
+            acc["plr"] = acc["plr"].at[ppos].set(
+                jnp.broadcast_to(acc["round"], keys.shape), mode="drop")
+            acc["pln"] = acc["pln"] + jnp.sum(valid.astype(jnp.int32))
+        acc["round"] = acc["round"] + 1
+        # re-entry wave: original deadline key, next retry ident
+        ck = keys[:, None]
+        cv = jnp.where(rep, vals + T, 0)[:, None]
+        return acc, ck, cv, rep[:, None]
+
+    # -- stall exit: replicated flag folded after the publish psum -----------
+
+    def _round(self, qstate, acc, tel: bool = False, sp=None, births=None):
+        r = super()._round(qstate, acc, tel=tel, sp=sp, births=births)
+        acc = dict(r[1])
+        # total (the published-children count) is replicated — in this
+        # engine every child is a stalled request's re-entry, so the flag
+        # stays replicated and all shards exit the loop together
+        acc["stalled"] = acc["stalled"] | (r[3] > 0)
+        return (r[0], acc) + r[2:]
+
+    def _extra_cond(self, carry):
+        return ~carry[1]["stalled"]
+
+    # -- persistent device state ---------------------------------------------
+
+    def _acc_zero(self):
+        acc = {
+            "need": jnp.zeros((self.table,), jnp.int32),
+            "slots": jnp.int32(0), "pages": jnp.int32(0),
+            "adm_idx": jnp.zeros((self.table,), jnp.int32),
+            "adm_n": jnp.int32(0),
+            "stalled": jnp.bool_(False), "round": jnp.int32(0),
+        }
+        if self.pop_log:
+            acc["plk"] = jnp.zeros((self.pop_log,), jnp.int32)
+            acc["plv"] = jnp.zeros((self.pop_log,), jnp.int32)
+            acc["plr"] = jnp.zeros((self.pop_log,), jnp.int32)
+            acc["pln"] = jnp.int32(0)
+        return acc
+
+    def begin(self) -> None:
+        """(Re)initialize the persistent device planes for a fresh run."""
+        self._reset()
+        seeded = self._seed(np.zeros(0, np.int32), np.zeros(0, np.int32))
+        qstate = seeded[:4]
+        self._state = [qstate, self._broadcast_acc(self._acc_zero()),
+                       jnp.int32(0), jnp.int32(0), jnp.int32(0)]
+        self._ext = [self._tel_init(self.shards),
+                     self._span_init(self.shards, stacked=True),
+                     self._births_init((self.shards, self.capacity))]
+        self._spray = 0
+        self._rounds = 0
+        self._host_syncs = 0
+        self.admitted_log = []
+        self.stats = {"rounds": 0, "processed": 0, "spawned": 0,
+                      "max_occupancy": 0, "drained": 1, "host_syncs": 0}
+
+    def occupancy(self) -> int:
+        if self._state is None:
+            return 0
+        return int(np.asarray(self._state[0][2]).sum())
+
+    def resident(self) -> List[Tuple[int, int, int]]:
+        """Heap-resident ``(key, idx, retry)`` triples (host readback)."""
+        if self._state is None:
+            return []
+        keys = np.asarray(self._state[0][0])
+        vals = np.asarray(self._state[0][1])
+        out = []
+        for s in range(self.shards):
+            live = keys[s] != HEAP_KEY_INF
+            for k, v in zip(keys[s][live], vals[s][live]):
+                out.append((int(k), int(v) % self.table,
+                            int(v) // self.table))
+        return sorted(out)
+
+    # -- host-side insert into the resident planes ---------------------------
+
+    def _insert(self, ik: np.ndarray, iv: np.ndarray) -> None:
+        if len(ik) == 0:
+            return
+        keys, vals, sizes, hints = self._state[0]
+        births = self._ext[2]
+        szs = np.asarray(sizes).copy()
+        shard_of = (self._spray + np.arange(len(ik))) % self.shards
+        self._spray = (self._spray + len(ik)) % self.shards
+        keys_l = [keys[s] for s in range(self.shards)]
+        vals_l = [vals[s] for s in range(self.shards)]
+        births_l = ([births[s] for s in range(self.shards)]
+                    if births is not None else None)
+        for s in range(self.shards):
+            sel = shard_of == s
+            c = int(sel.sum())
+            if c == 0:
+                continue
+            if szs[s] + c > self.capacity:
+                raise RuntimeError(
+                    f"serving heap overflow: {c} arrivals land on shard {s} "
+                    f"holding {int(szs[s])} of {self.capacity} (raise "
+                    f"capacity_log2 or shed load)")
+            rider = births_l[s] if births_l is not None else None
+            out = heap_insert_masked(
+                keys_l[s], vals_l[s], jnp.int32(int(szs[s])),
+                jnp.asarray(ik[sel]), jnp.asarray(iv[sel]),
+                jnp.ones((c,), bool), cap_log2=self.capacity_log2,
+                arity_log2=self.arity_log2, rider=rider,
+                oprider=(jnp.int32(min(self._rounds, self.span_round_cap - 1))
+                         if rider is not None else None))
+            keys_l[s], vals_l[s] = out[0], out[1]
+            szs[s] = int(out[2])
+            assert bool(np.asarray(out[5]).all()), "capacity pre-checked"
+            if births_l is not None:
+                births_l[s] = out[6]
+        keys = jnp.stack(keys_l)
+        vals = jnp.stack(vals_l)
+        hints = jnp.asarray([int(jnp.min(k)) for k in keys_l], jnp.int32)
+        self._state[0] = (keys, vals, jnp.asarray(szs, jnp.int32), hints)
+        if births_l is not None:
+            self._ext[2] = jnp.stack(births_l)
+
+    @staticmethod
+    def _split(total: int, shards: int) -> np.ndarray:
+        base = total // shards
+        return base + (np.arange(shards) < total % shards)
+
+    # -- one serving tick -----------------------------------------------------
+
+    def tick(self, new_keys: Sequence[int], new_idxs: Sequence[int], *,
+             slots: int, pages: int, need: Sequence[int] = (),
+             max_rounds: int = 256) -> List[int]:
+        """Install this tick's arrivals, refresh the budgets, and run one
+        megaround (to quiescence or first stall).  Returns the admitted
+        request-table indices in admission order.  Unlike ``_drive``,
+        occupancy > 0 at exit is NOT an error — stalled requests stay
+        device-resident for the next tick."""
+        if self._state is None:
+            self.begin()
+        ik = np.asarray(new_keys, np.int64).reshape(-1)
+        iv = np.asarray(new_idxs, np.int64).reshape(-1)
+        assert ik.shape == iv.shape
+        _check_deadline_keys(ik)
+        if iv.size and (iv.min() < 0 or iv.max() >= self.table):
+            raise ValueError(
+                f"request index outside the {self.table}-row table")
+        # arrivals enter as retry-0 idents at their deadline keys
+        self._insert(ik.astype(np.int32), iv.astype(np.int32))
+        acc = self._state[1]
+        accn = {k: np.asarray(v).copy() for k, v in acc.items()}
+        if len(need):
+            nd = np.asarray(need, np.int32).reshape(-1)
+            assert nd.shape == iv.shape
+            accn["need"][:, iv] = nd[None, :]
+        accn["slots"] = self._split(int(slots), self.shards).astype(np.int32)
+        accn["pages"] = self._split(int(pages), self.shards).astype(np.int32)
+        accn["stalled"] = np.zeros(self.shards, bool)
+        # the admitted log is per-tick (bounded by ``slots`` ≤ table);
+        # letting it accumulate would run off the table on long runs
+        accn["adm_n"] = np.zeros(self.shards, np.int32)
+        self._state[1] = {k: jnp.asarray(v) for k, v in accn.items()}
+        # ONE megaround call: the tick's admission wave
+        limit = max_rounds
+        if self.spans is not None:
+            # stamp-time cap (DESIGN.md § 7.6): no round past the cap may
+            # write a birth stamp into the heap's rider plane
+            if self._rounds >= self.span_round_cap:
+                raise RuntimeError(
+                    f"serving span round clock reached the birth-stamp cap "
+                    f"({self.span_round_cap} rounds): stamps would wrap "
+                    f"(run without spans or restart the engine)")
+            limit = min(limit, self.span_round_cap - self._rounds)
+        out = self._megaround(*self._state, jnp.int32(limit), *self._ext)
+        self._state[:] = list(out[:5])
+        oflow, r = bool(out[5]), int(out[6])
+        self._ext[:] = list(out[7:])
+        occ = self.occupancy()                 # THE host sync of the tick
+        self._rounds += r
+        self._host_syncs += 1
+        now = time.time()
+        point = SyncPoint(rounds=self._rounds, occupancy=occ, wall_time=now,
+                          host_syncs=self._host_syncs)
+        self.sync_log.append(point)
+        self.stats = {
+            "rounds": self._rounds, "processed": int(self._state[2]),
+            "spawned": int(self._state[3]),
+            "max_occupancy": int(self._state[4]),
+            "drained": int(occ == 0), "host_syncs": self._host_syncs,
+        }
+        if self.telemetry is not None:
+            self.telemetry.drain(self._ext[0], sync=self._host_syncs - 1,
+                                 wall_time=now)
+            self.telemetry.heartbeat(point)
+            self.telemetry.finish(self.stats)
+        if self.spans is not None:
+            self.spans.drain(self._ext[1], wall_time=now)
+            self.spans.finish(self.stats)
+        if oflow:
+            raise RuntimeError(
+                f"serving admission overflow: occupancy {occ} + re-entries "
+                f"exceed per-shard heap capacity {self.capacity} at round "
+                f"{self._rounds} (raise capacity_log2)")
+        acc = self._state[1]
+        adm_n = np.asarray(acc["adm_n"])
+        adm_idx = np.asarray(acc["adm_idx"])
+        admitted: List[int] = []
+        for s in range(self.shards):
+            admitted.extend(int(i) for i in adm_idx[s, :int(adm_n[s])])
+        self.admitted_log.extend(admitted)
+        return admitted
+
+    # -- history readback for the p-linearizability checker ------------------
+
+    def pop_history(self) -> List[Tuple[int, int, int, int]]:
+        """All recorded pops as ``(round, shard, key, val)`` sorted by
+        round (requires ``pop_log`` > 0; raises otherwise)."""
+        if not self.pop_log:
+            raise ValueError("construct with pop_log=N to record pops")
+        acc = self._state[1]
+        pln = np.asarray(acc["pln"])
+        if int(pln.max(initial=0)) > self.pop_log:
+            raise RuntimeError(
+                f"pop log overflowed ({int(pln.max())} > {self.pop_log}): "
+                f"raise pop_log")
+        rows = []
+        for s in range(self.shards):
+            n = int(pln[s])
+            plk = np.asarray(acc["plk"][s][:n])
+            plv = np.asarray(acc["plv"][s][:n])
+            plr = np.asarray(acc["plr"][s][:n])
+            rows.extend((int(r), s, int(k), int(v))
+                        for r, k, v in zip(plr, plk, plv))
+        rows.sort(key=lambda t: (t[0], t[1]))
+        return rows
+
+
+register_engine("serving", ServingMeshEngine, priority=True, mesh=True,
+                kwargs={}, spans_ok=True)

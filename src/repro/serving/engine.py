@@ -43,6 +43,8 @@ from ..models import decode_step, init_decode_cache
 from ..obs.metrics import MetricsRegistry, metric_key
 from ..runtime import HostTaskPool
 from ..sched import HostPriorityPool
+from ..sched.policy import make_policy
+from .admission import DEADLINE_KEY_CAP, ServingMeshEngine
 
 
 @dataclasses.dataclass
@@ -52,11 +54,14 @@ class Request:
     max_new_tokens: int
     priority: int = 1            # 0 = urgent admission class
     deadline: Optional[int] = None   # EDF key; assigned at submit if unset
+    tenant: int = 0              # policy lane (EngineConfig.tenant_policies)
     out: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     pages: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     submit_tick: int = -1        # engine tick at submit; -1 = pre-engine
+    admit_tick: int = -1         # engine tick at slot admission
+    finish_tick: int = -1        # engine tick at completion
 
 
 @dataclasses.dataclass
@@ -67,8 +72,19 @@ class EngineConfig:
     max_seq: int = 256
     request_ring_capacity: int = 16
     request_shards: int = 2      # HostTaskPool shards per lane (lanes mode)
-    admission: str = "edf"       # "edf" (deadline keys) | "lanes" (legacy)
+    admission: str = "edf"       # "edf" | "lanes" (legacy) | "device" (mesh)
     normal_slack: int = 64       # EDF slack for non-urgent admission classes
+    # multi-tenant policy lanes: one sched.policy spec per tenant
+    # ("strict" | "weighted" | "edf" | a PriorityPolicy); None keeps the
+    # single-lane inline EDF stamping (bit-compatible with the pre-tenant
+    # engine — the policy object path quantizes through make_policy)
+    tenants: int = 1
+    tenant_policies: Optional[tuple] = None
+    # device admission (ServingMeshEngine) sizing
+    device_capacity_log2: int = 8
+    device_batch: int = 8
+    device_table_log2: int = 8
+    device_shards: int = 1
 
 
 class ServingEngine:
@@ -79,13 +95,42 @@ class ServingEngine:
                  registry: Optional[MetricsRegistry] = None) -> None:
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
         self.registry = registry
+        self._device = None
         if ecfg.admission == "edf":
             self.requests = HostPriorityPool(ecfg.request_ring_capacity)
         elif ecfg.admission == "lanes":
             self.requests = HostTaskPool(ecfg.request_ring_capacity,
                                          shards=ecfg.request_shards, lanes=2)
+        elif ecfg.admission == "device":
+            # device-resident EDF: pending requests live as (deadline |
+            # idx) heap entries on the priority mesh; one engine tick is
+            # one admission megaround (DESIGN.md § 5.5)
+            self.requests = None
+            if ecfg.device_shards > len(jax.devices()):
+                raise ValueError(
+                    f"device_shards={ecfg.device_shards} exceeds the "
+                    f"{len(jax.devices())} visible devices")
+            from jax.sharding import Mesh
+            mesh = Mesh(np.array(jax.devices()[:ecfg.device_shards]),
+                        ("data",))
+            self._device = ServingMeshEngine(
+                mesh=mesh, capacity_log2=ecfg.device_capacity_log2,
+                batch=ecfg.device_batch,
+                table_log2=ecfg.device_table_log2)
+            self._table: List[Optional[Request]] = \
+                [None] * (1 << ecfg.device_table_log2)
+            self._free_idx = list(range(1 << ecfg.device_table_log2))
+            self._pending: List[tuple] = []    # (key, idx, need) per submit
+            self._dev_spawned = 0              # stall-tick detection baseline
         else:
             raise ValueError(f"unknown admission mode {ecfg.admission!r}")
+        self._policies = None
+        if ecfg.tenant_policies is not None:
+            if len(ecfg.tenant_policies) != ecfg.tenants:
+                raise ValueError(
+                    f"{len(ecfg.tenant_policies)} tenant_policies for "
+                    f"{ecfg.tenants} tenants")
+            self._policies = [make_policy(p) for p in ecfg.tenant_policies]
         self._seq = 0                      # admission sequence (EDF now-clock)
         self._seq_lock = threading.Lock()  # submit() is client-thread-callable
         self.stalled: List[Request] = []   # page-stalled, awaiting re-admission
@@ -120,12 +165,38 @@ class ServingEngine:
         if self.ecfg.admission == "lanes":
             return self.requests.enqueue(req, timeout=timeout,
                                          priority=req.priority)
+        if not 0 <= req.tenant < self.ecfg.tenants:
+            raise ValueError(f"tenant {req.tenant} out of range "
+                             f"[0, {self.ecfg.tenants})")
         with self._seq_lock:
             self._seq += 1
             seq = self._seq
-        if req.deadline is None:
-            slack = 0 if req.priority == 0 else self.ecfg.normal_slack
-            req.deadline = seq + slack
+            if self._policies is not None:
+                # tenant lane: the lane's policy maps (class, deadline,
+                # now) to the EDF key; policy clocks are per tenant, so
+                # lanes interleave by key, not by arrival
+                req.deadline = self._policies[req.tenant].key(
+                    req.priority, req.deadline, seq)
+            elif req.deadline is None:
+                slack = 0 if req.priority == 0 else self.ecfg.normal_slack
+                req.deadline = seq + slack
+        if not 0 <= req.deadline < DEADLINE_KEY_CAP:
+            # stamp-time cap (PR 9 contract): a wrapped deadline key would
+            # silently invert EDF order in the heap planes
+            raise ValueError(
+                f"deadline {req.deadline} outside [0, {DEADLINE_KEY_CAP}): "
+                f"keys past the 2^30 round-clock cap would wrap — rebase "
+                f"the deadline clock")
+        if self.ecfg.admission == "device":
+            with self._seq_lock:
+                if not self._free_idx:
+                    return False           # table full = pool full
+                idx = self._free_idx.pop()
+                self._table[idx] = req
+                need = self._pages_needed(
+                    len(req.prompt) + req.max_new_tokens)
+                self._pending.append((req.deadline, idx, need))
+            return True
         return self.requests.enqueue(req, key=req.deadline, timeout=timeout)
 
     # -- scheduler -------------------------------------------------------------
@@ -151,7 +222,73 @@ class ServingEngine:
             return self.stalled.pop(0)
         return req
 
+    def _install(self, req: Request, s: int, pages: List[int]) -> None:
+        """Shared slot-install bookkeeping: metrics, wait histogram,
+        tenant counter, prefill."""
+        req.slot, req.pages = s, pages
+        req.admit_tick = self.tick
+        self.slots[s] = req
+        self.admission_log.append(req.rid)
+        self._count("admitted")
+        if self.registry is not None and self.ecfg.tenants > 1:
+            self.registry.counter(
+                metric_key("serving", "admitted", tenant=req.tenant))
+        if self.registry is not None and req.submit_tick >= 0:
+            # request-level sojourn: ticks from submit to admission,
+            # per admission class — the serving-layer twin of the
+            # engines' device span histograms (DESIGN.md § 7.6)
+            self.registry.observe(
+                metric_key("serving", "wait", cls=req.priority),
+                self.tick - req.submit_tick)
+        # prefill (token-by-token through decode_step for simplicity;
+        # slot-local so other slots keep decoding)
+        self.cur[s] = 0
+        for tok in req.prompt:
+            self.tokens[s, 0] = tok
+            self._decode_once(active_slot=s)
+
+    def _try_admit_device(self) -> None:
+        """One admission megaround on the priority mesh: install the
+        buffered arrivals as (deadline | idx·retry) heap entries, give
+        the tick the free slot/page budgets, admit the EDF prefix the
+        device returns.  Page-stalled requests stay heap-resident at
+        their original deadline (the § 5.5 aging guarantee)."""
+        free_slots = [s for s in range(self.ecfg.max_slots)
+                      if self.slots[s] is None]
+        if not free_slots:
+            return
+        if not self._pending and self._device.occupancy() == 0:
+            return
+        held = sum(len(r.pages) for r in self.slots if r is not None)
+        with self._seq_lock:
+            pending, self._pending = self._pending, []
+        admitted = self._device.tick(
+            [k for k, _, _ in pending], [i for _, i, _ in pending],
+            slots=len(free_slots), pages=self.ecfg.num_pages - held,
+            need=[n for _, _, n in pending])
+        spawned = self._device.stats["spawned"]
+        if spawned > self._dev_spawned:
+            # ≥1 request republished = this tick hit its budget wall
+            # (one stall event per stalled tick, like the host path's
+            # one stall per _try_admit call)
+            self._count("page_stalls")
+        self._dev_spawned = spawned
+        for idx in admitted:
+            req = self._table[idx]
+            self._table[idx] = None
+            self._free_idx.append(idx)
+            need = self._pages_needed(len(req.prompt) + req.max_new_tokens)
+            pages = []
+            for _ in range(need):
+                p = self.free_pages.dequeue(timeout=0.0)
+                assert p is not None, "device admission fits the page budget"
+                pages.append(p)
+            self._install(req, free_slots.pop(0), pages)
+
     def _try_admit(self) -> None:
+        if self.ecfg.admission == "device":
+            self._try_admit_device()
+            return
         for s in range(self.ecfg.max_slots):
             if self.slots[s] is not None:
                 continue
@@ -186,23 +323,7 @@ class ServingEngine:
                     # EDF path removes)
                     self.stalled.append(req)
                 return
-            req.slot, req.pages = s, pages
-            self.slots[s] = req
-            self.admission_log.append(req.rid)
-            self._count("admitted")
-            if self.registry is not None and req.submit_tick >= 0:
-                # request-level sojourn: ticks from submit to admission,
-                # per admission class — the serving-layer twin of the
-                # engines' device span histograms (DESIGN.md § 7.6)
-                self.registry.observe(
-                    metric_key("serving", "wait", cls=req.priority),
-                    self.tick - req.submit_tick)
-            # prefill (token-by-token through decode_step for simplicity;
-            # slot-local so other slots keep decoding)
-            self.cur[s] = 0
-            for tok in req.prompt:
-                self.tokens[s, 0] = tok
-                self._decode_once(active_slot=s)
+            self._install(req, s, pages)
 
     def _decode_once(self, active_slot: Optional[int] = None) -> np.ndarray:
         tok = jnp.asarray(self.tokens)
@@ -258,14 +379,21 @@ class ServingEngine:
             self._count("tokens_out")
             if len(req.out) >= req.max_new_tokens:
                 req.done = True
+                req.finish_tick = self.tick
                 for p in req.pages:          # release pages (enqueue indices)
                     self.free_pages.enqueue(p, timeout=0.1)
                 self.slots[s] = None
                 self._count("completed")
 
+    def _queue_empty(self) -> bool:
+        if self.ecfg.admission == "device":
+            return not self._pending and self._device.occupancy() == 0
+        return self.requests.empty()
+
     def run(self, max_ticks: int = 1000) -> Dict[str, int]:
         for _ in range(max_ticks):
             self.step()
-            if not any(self.slots) and not self.stalled and self.requests.empty():
+            if (not any(self.slots) and not self.stalled
+                    and self._queue_empty()):
                 break
         return dict(self.metrics)

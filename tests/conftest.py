@@ -22,6 +22,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.jaxcompat import make_mesh  # noqa: E402
 from repro.runtime import ENGINE_REGISTRY  # noqa: E402
+import repro.serving.admission  # noqa: E402,F401  registers "serving" row
 
 
 def _fifo_fanout_step():
@@ -74,6 +75,27 @@ class EngineCase:
         return acc, st, dict(runner.stats)
 
 
+class ServingEngineCase(EngineCase):
+    """The serving-admission row: a tick-driven persistent engine with no
+    constructor step_fn (the admission decision IS its step).  Driven
+    here as ONE admission tick with unconstrained budgets, so it drains
+    to quiescence like the other rows; acc is the admitted-index order
+    (deterministic EDF at one shard), final state the heap planes."""
+
+    def build(self, **obs):
+        kw = dict(self.entry.kwargs, capacity_log2=8, batch=16,
+                  table_log2=6, mesh=make_mesh((1,), ("data",)), **obs)
+        return self.entry.runner(**kw)
+
+    def run(self, runner):
+        admitted = runner.tick([17, 5, 9, 13, 29, 3], [0, 1, 2, 3, 4, 5],
+                               slots=16, pages=16, need=[1] * 6)
+        return (jnp.asarray(admitted, jnp.int32), runner._state[0],
+                dict(runner.stats))
+
+
 @pytest.fixture(params=sorted(ENGINE_REGISTRY), ids=str)
 def engine_case(request):
-    return EngineCase(ENGINE_REGISTRY[request.param])
+    entry = ENGINE_REGISTRY[request.param]
+    cls = ServingEngineCase if request.param == "serving" else EngineCase
+    return cls(entry)

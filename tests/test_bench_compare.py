@@ -1,0 +1,89 @@
+"""tools/bench_compare.py: gap-tolerant baselining and serving-row
+identity.
+
+The trajectory has a real hole (BENCH_8 was never committed), so the
+sentinel must compare the newest snapshot against the latest *existing*
+predecessor AND say so — a silent cross-gap baseline reads as "vs n-1"
+when it is not.  Serving rows add ``rate``/``tenant`` knobs that name a
+configuration: two rows at different offered loads must never be matched
+as the same row (a 1.5-req/tick row timed against a 0.5 baseline would
+flag a phantom regression every run).
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+from tools.bench_compare import compare, gap_note  # noqa: E402
+
+
+def _snap(path, bench_id, sections):
+    payload = {"bench_id": bench_id, "git_rev": "abc1234",
+               "config": {"quick": False, "sections": sorted(sections)},
+               "sections": sections}
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    return str(path)
+
+
+def _serving_row(rate, tenant, ticks_per_s, goodput=0.8):
+    return {"bench": "serving", "mode": "device", "shards": 1,
+            "rate": rate, "tenant": tenant, "offered_load": rate + 0.1,
+            "goodput": goodput, "ticks_per_s": ticks_per_s}
+
+
+def test_gap_note_names_every_missing_id(tmp_path):
+    old = _snap(tmp_path / "BENCH_7.json", 7,
+                {"serving": [_serving_row(0.5, 0, 100.0)]})
+    new = _snap(tmp_path / "BENCH_10.json", 10,
+                {"serving": [_serving_row(0.5, 0, 99.0)]})
+    note = gap_note(old, new)
+    assert "BENCH_8" in note and "BENCH_9" in note
+    assert "latest existing predecessor" in note
+    lines, regs = compare(old, new)
+    assert any("BENCH_8" in ln for ln in lines)
+    assert regs == []          # 1% drift is inside tolerance
+
+
+def test_consecutive_ids_emit_no_note(tmp_path):
+    old = _snap(tmp_path / "BENCH_9.json", 9,
+                {"serving": [_serving_row(0.5, 0, 100.0)]})
+    new = _snap(tmp_path / "BENCH_10.json", 10,
+                {"serving": [_serving_row(0.5, 0, 100.0)]})
+    assert gap_note(old, new) is None
+    lines, _ = compare(old, new)
+    assert not any("NOTE" in ln for ln in lines)
+
+
+def test_non_bench_paths_emit_no_note(tmp_path):
+    old = _snap(tmp_path / "before.json", 1,
+                {"serving": [_serving_row(0.5, 0, 100.0)]})
+    new = _snap(tmp_path / "after.json", 5,
+                {"serving": [_serving_row(0.5, 0, 100.0)]})
+    assert gap_note(old, new) is None
+
+
+def test_regressions_still_flagged_across_a_gap(tmp_path):
+    old = _snap(tmp_path / "BENCH_7.json", 7,
+                {"serving": [_serving_row(0.5, 0, 100.0)]})
+    new = _snap(tmp_path / "BENCH_10.json", 10,
+                {"serving": [_serving_row(0.5, 0, 40.0)]})
+    _, regs = compare(old, new)
+    assert len(regs) == 1 and regs[0]["metric"] == "ticks_per_s"
+
+
+def test_rate_and_tenant_are_identity_knobs(tmp_path):
+    """A high-load row must not be timed against a low-load baseline:
+    if ``rate``/``tenant`` fell out of the identity, the 1.5-rate row
+    below would match the 0.5 baseline and flag a 90% regression."""
+    old = _snap(tmp_path / "BENCH_9.json", 9,
+                {"serving": [_serving_row(0.5, 0, 100.0)]})
+    new = _snap(tmp_path / "BENCH_10.json", 10,
+                {"serving": [_serving_row(0.5, 0, 100.0),
+                             _serving_row(1.5, 0, 10.0),
+                             _serving_row(0.5, 1, 10.0)]})
+    lines, regs = compare(old, new)
+    assert regs == [], lines

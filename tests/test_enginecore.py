@@ -71,6 +71,13 @@ GOLDEN = {
     "pmesh_strict": {
         "stats": [19, 260, 258, 128, 1, 1], "acc": "cd729cf83f33eed5",
         "planes": "c5830eb454bd1761", "tel": "c24a2c5171ec130e"},
+    # the serving admission tick (PR 10): page-constrained EDF admission
+    # over 4 ticks; admitted order is exact EDF at one shard
+    "serving": {
+        "stats": [4, 20, 12, 6, 1, 4], "ticks": 4,
+        "admitted": [1, 3, 7, 2, 6, 5, 4, 0],
+        "planes": "d70650fb443f714a", "hist": "256ab85ea28951cc",
+        "tel": "55a5a0cd9cee8fb0"},
 }
 
 GOLDEN_2SHARD = {
@@ -86,6 +93,13 @@ GOLDEN_2SHARD = {
     "pmesh_strict_2": {
         "stats": [12, 260, 258, 110, 1, 1], "acc": "cd729cf83f33eed5",
         "planes": "c5830eb454bd1761", "tel": "2455cb0b0971fae9"},
+    # 2-shard serving: same admitted SET as 1-shard (order legitimately
+    # relaxes within the mesh envelope), same conservation totals
+    "serving_2": {
+        "stats": [4, 20, 12, 6, 1, 4], "ticks": 4,
+        "admitted": [2, 1, 7, 3, 6, 4, 5, 0],
+        "planes": "6ddad96eb514c320", "hist": "385db6ed17cface3",
+        "tel": "12c1f9a6ce0747a2"},
 }
 
 
@@ -135,6 +149,31 @@ def _pri_mesh_step(acc, keys, vals, valid):
 
 def _mesh1():
     return make_mesh((1,), ("data",))
+
+
+def _serving_scenario(mesh):
+    """Fixed serving-admission scenario for the golden rows: 8 requests,
+    page-constrained ticks so the stall/re-entry path engages, drained
+    over however many ticks it takes.  Returns the digest dict."""
+    from repro.serving.admission import ServingMeshEngine
+    tel = Telemetry(capacity=256)
+    e = ServingMeshEngine(mesh=mesh, capacity_log2=6, batch=8,
+                          table_log2=6, pop_log=128, telemetry=tel)
+    e.begin()
+    admitted = list(e.tick([60, 10, 30, 20, 50, 40, 35, 25],
+                           [0, 1, 2, 3, 4, 5, 6, 7],
+                           slots=4, pages=5, need=[2] * 8))
+    ticks = 1
+    while e.occupancy() > 0 and ticks < 12:
+        admitted += e.tick([], [], slots=4, pages=4)
+        ticks += 1
+    assert e.occupancy() == 0, "scenario must drain"
+    hist = e.pop_history()
+    return {"stats": _stat_tuple(e.stats), "ticks": ticks,
+            "admitted": admitted,
+            "planes": _digest(e._state[0][0], e._state[0][1]),
+            "hist": _digest(np.asarray(hist, np.int32)),
+            "tel": _tel_digest(tel)}
 
 
 # -- bit-identity vs the pre-refactor engines ---------------------------------
@@ -209,6 +248,15 @@ def test_mesh_engines_match_prerefactor_goldens_1shard():
     assert np.array_equal(dist, bfs.bfs_reference(graph, 0))
 
 
+def test_serving_admission_matches_golden_1shard():
+    g = GOLDEN["serving"]
+    got = _serving_scenario(_mesh1())
+    assert got == g
+    # the 1-shard admitted order is the exact EDF order of the scenario's
+    # deadline keys — pin the semantic, not just the digest
+    assert got["admitted"] == [1, 3, 7, 2, 6, 5, 4, 0]
+
+
 def _forced_device_env(n: int):
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
@@ -260,6 +308,7 @@ def _golden2_worker():
         out["pmesh_%s_2" % ("relaxed" if relaxed else "strict")] = {
             "stats": _stat_tuple(r.stats), "acc": _digest(acc),
             "planes": _digest(st.keys, st.vals), "tel": _tel_digest(tel)}
+    out["serving_2"] = _serving_scenario(mesh)
     print(json.dumps(out))
 
 
@@ -332,10 +381,13 @@ def test_plane_registry_bytes_per_shard():
 
 
 def test_engine_registry_covers_the_matrix():
+    import repro.serving.admission  # noqa: F401  registers "serving"
     assert {"rounds", "prounds", "mesh", "mesh-sharded", "pmesh-relaxed",
-            "pmesh-strict"} <= set(ENGINE_REGISTRY)
+            "pmesh-strict", "serving"} <= set(ENGINE_REGISTRY)
     assert not ENGINE_REGISTRY["mesh-sharded"].spans_ok
     assert ENGINE_REGISTRY["mesh-sharded"].kwargs == {"sharded": True}
+    assert ENGINE_REGISTRY["serving"].priority
+    assert ENGINE_REGISTRY["serving"].mesh
 
 
 # -- span round-clock cap enforced at stamp time ------------------------------

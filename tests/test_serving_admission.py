@@ -1,0 +1,413 @@
+"""Property-based certification of device-resident serving admission
+(DESIGN.md § 5.5).
+
+Random tenant mixes, deadlines, and page-stall schedules drive
+``ServingMeshEngine`` tick sequences; every run is certified three ways:
+
+* **reference agreement** — at one shard the admitted prefix of every
+  tick matches a pure-python EDF reference (sorted-pending,
+  stop-at-first-stall, re-entry at the original deadline) in set AND
+  order; a 2-shard forced-device subprocess re-certifies the relaxed
+  case, where order may legitimately differ but conservation and the
+  envelope below still hold;
+* **p-linearizability** — the engine's pop log is rebuilt into an
+  INS/DELMIN history (arrivals insert before their tick's first round,
+  republished stalls re-insert in their round's publish interval) and
+  checked by ``sched.check_p_linearizable`` within
+  ``sched.mesh_relaxation_bound`` (k = 0 at one shard: *exact* EDF);
+* **conservation** — every request is admitted exactly once and the heap
+  drains.
+
+The sweep runs under ``hypothesis`` when it is installed (CI's ``[test]``
+extra) and falls back to a seeded deterministic sweep of the same
+property otherwise — the property function is shared, so both paths
+certify identical semantics.
+
+The deadline-key wraparound regressions cover BOTH stamp planes sharing
+the 2^30 round clock: the heap deadline plane (``tick``/``submit`` raise
+at stamp time) and the packed FIFO birth-stamp plane (``enq_planes``
+rejects a wrapped stamp; the serving span clock guard refuses to run a
+tick past the cap).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(
+    0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.sim import HistoryEvent  # noqa: E402
+from repro.jaxcompat import make_mesh  # noqa: E402
+from repro.kernels.ring_slots import SPAN_ROUND_CAP, enq_planes  # noqa: E402
+from repro.models import init_params  # noqa: E402
+from repro.obs.spans import Spans  # noqa: E402
+from repro.runtime.fusedrounds import IDX_BOT  # noqa: E402
+from repro.sched import (DELMIN, INS, check_p_linearizable,  # noqa: E402
+                         check_p_linearizable_search, mesh_relaxation_bound)
+from repro.serving import (DEADLINE_KEY_CAP, EngineConfig,  # noqa: E402
+                           Request, ServingEngine, ServingMeshEngine,
+                           TrafficConfig, generate_trace)
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BATCH = 4
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # local runs without the [test] extra
+    HAVE_HYPOTHESIS = False
+
+
+# -- shared 1-shard engine (one megaround compile for the whole sweep) --------
+
+_ENGINE = None
+
+
+def _get_engine():
+    global _ENGINE
+    if _ENGINE is None:
+        _ENGINE = ServingMeshEngine(
+            mesh=make_mesh((1,), ("data",)), capacity_log2=6, batch=BATCH,
+            table_log2=6, pop_log=2048)
+    return _ENGINE
+
+
+# -- random admission scenarios ----------------------------------------------
+
+
+def _make_scenario(rng):
+    """Random deadlines, page needs, arrival schedule, and per-tick
+    slot/page budgets (including zero budgets = pure stall ticks),
+    followed by two generous drain ticks so every request is eventually
+    admitted and the heap provably empties."""
+    n = int(rng.integers(1, 15))
+    keys = np.sort(rng.choice(50_000, size=n, replace=False)).astype(int)
+    rng.shuffle(keys)
+    need = rng.integers(0, 4, size=n).astype(int)
+    ticks_n = int(rng.integers(1, 4))
+    arrive = rng.integers(0, ticks_n, size=n)
+    budgets = [(int(rng.integers(0, 5)), int(rng.integers(0, 9)))
+               for _ in range(ticks_n)]
+    budgets += [(n, int(3 * n + 1))] * 2       # drain: everything fits
+    arrivals = [[] for _ in range(len(budgets))]
+    for idx in range(n):
+        arrivals[int(arrive[idx])].append((int(keys[idx]), idx))
+    return {"n": n, "need": list(need), "arrivals": arrivals,
+            "budgets": budgets}
+
+
+def _reference(scn):
+    """Pure-python EDF admission: pending sorted by deadline each tick,
+    admit the maximal prefix that fits (stop at the FIRST request that
+    exceeds either budget), the rest re-enter at their original keys."""
+    pending = []
+    per_tick = []
+    for t, (slots, pages) in enumerate(scn["budgets"]):
+        pending.extend(scn["arrivals"][t])
+        pending.sort()
+        admitted = []
+        for key, idx in pending:
+            nd = scn["need"][idx]
+            if len(admitted) >= slots or nd > pages:
+                break
+            admitted.append(idx)
+            pages -= nd
+        del pending[:len(admitted)]
+        per_tick.append(admitted)
+    return per_tick, [idx for _, idx in pending]
+
+
+def _run_device(eng, scn):
+    """Drive the scenario's tick sequence; returns per-tick admitted
+    lists plus the submission log ``(round-before-tick, key, idx)`` the
+    history builder needs."""
+    eng.begin()
+    subs, per_tick = [], []
+    for t, (slots, pages) in enumerate(scn["budgets"]):
+        arr = scn["arrivals"][t]
+        r0 = eng._rounds
+        subs.extend((r0, key, idx) for key, idx in arr)
+        adm = eng.tick([k for k, _ in arr], [i for _, i in arr],
+                       slots=slots, pages=pages,
+                       need=[scn["need"][i] for _, i in arr])
+        per_tick.append(adm)
+    return per_tick, subs
+
+
+def _admission_history(subs, pops, resident, table):
+    """Rebuild the INS/DELMIN history ``check_p_linearizable`` certifies.
+
+    Timing follows ``mesh_trace_history``'s scheme — round ``r`` pops
+    share ``[4r+4, 4r+5]``, its publish wave inserts at ``[4r+6, 4r+7]``
+    — and a tick's arrivals insert at ``[4·r0+2, 4·r0+3]`` where ``r0``
+    is the global round count before that tick, i.e. before the tick's
+    first pop.  A pop's republication is not logged directly but is
+    fully inferable: ident ``v`` was republished iff its bumped-retry
+    successor ``v + table`` appears in a later pop or stays
+    heap-resident (a republished entry has nowhere else to go)."""
+    popped = {v for _, _, _, v in pops}
+    res = {retry * table + idx for _, idx, retry in resident}
+    h = []
+    for r0, key, idx in subs:
+        t = 4 * r0 + 2
+        h.append(HistoryEvent(proc=0, op=INS, arg=(key, idx), ret=True,
+                              call=t, end=t + 1))
+    for r, s, k, v in pops:
+        t = 4 * r + 4
+        h.append(HistoryEvent(proc=s, op=DELMIN, arg=None, ret=(k, v),
+                              call=t, end=t + 1))
+        succ = v + table
+        if succ in popped or succ in res:
+            h.append(HistoryEvent(proc=s, op=INS, arg=(k, succ), ret=True,
+                                  call=t + 2, end=t + 3))
+    return h
+
+
+def _certify(eng, scn, *, exact_order=True):
+    """The shared property: reference agreement, conservation, and a
+    p-linearizable pop history within the mesh envelope."""
+    ref_ticks, ref_left = _reference(scn)
+    dev_ticks, subs = _run_device(eng, scn)
+    assert ref_left == [], "drain ticks must empty the reference"
+    if exact_order:
+        assert dev_ticks == ref_ticks, (scn, dev_ticks, ref_ticks)
+    # conservation: admitted exactly once each, heap drained
+    flat = [i for t in dev_ticks for i in t]
+    assert sorted(flat) == list(range(scn["n"])), (scn, dev_ticks)
+    assert eng.occupancy() == 0
+    # p-linearizability of the pop log within the declared envelope
+    k = mesh_relaxation_bound(eng.shards, eng.batch,
+                              eng.stats["max_occupancy"])
+    if exact_order:
+        assert k == 0          # one shard: the check is EXACT EDF
+    hist = _admission_history(subs, eng.pop_history(), eng.resident(),
+                              eng.table)
+    res = check_p_linearizable(hist, k)
+    assert res.ok, (res.reason, scn)
+    return hist, k
+
+
+def _property(seed):
+    rng = np.random.default_rng(seed)
+    _certify(_get_engine(), _make_scenario(rng), exact_order=True)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(st.integers(0, 2**31 - 1))
+    def test_admission_property(seed):
+        _property(seed)
+else:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_admission_property(seed):
+        _property(seed)
+
+
+def test_admission_history_against_exact_oracle():
+    """One small scenario's history re-checked by the Wing–Gong search
+    oracle, so the fast pattern check and the exact checker agree on
+    serving histories (not just the spawn-tree ones)."""
+    rng = np.random.default_rng(7)
+    scn = {"n": 4, "need": [1, 3, 1, 2],
+           "arrivals": [[(40, 0), (10, 1)], [(20, 2), (30, 3)], []],
+           "budgets": [(2, 3), (1, 1), (4, 13)]}
+    hist, k = _certify(_get_engine(), scn, exact_order=True)
+    del rng
+    res = check_p_linearizable_search(hist, k)
+    assert res.ok, res.reason
+
+
+def test_page_stall_reenters_at_original_deadline():
+    """The § 5.5 aging guarantee, pinned: a page-stalled request keeps
+    its deadline while later arrivals take later keys, so it admits
+    FIRST once pages free — not at the back of the line."""
+    eng = _get_engine()
+    eng.begin()
+    assert eng.tick([100], [0], slots=1, pages=1, need=[4]) == []
+    assert eng.occupancy() == 1            # stalled, still heap-resident
+    # a later (larger-key) arrival cannot jump the aged request
+    assert eng.tick([200], [1], slots=2, pages=6, need=[1]) == [0, 1]
+    assert eng.occupancy() == 0
+
+
+# -- 2-shard relaxed certification (forced-device subprocess) -----------------
+
+
+def _forced_device_env(n):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n}"
+                        ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"), env.get("PYTHONPATH"), REPO)
+        if p)
+    return env
+
+
+def test_admission_property_2shard():
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--relaxed-worker"],
+        capture_output=True, text=True, cwd=REPO,
+        env=_forced_device_env(2), timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["ok"] and got["scenarios"] >= 3
+
+
+def _relaxed_worker():
+    """Certify seeded scenarios at 2 shards: admission order may relax
+    within the mesh envelope (exact_order=False) but conservation and
+    p-linearizability at k = mesh_relaxation_bound must still hold."""
+    eng = ServingMeshEngine(mesh=make_mesh((2,), ("data",)),
+                            capacity_log2=6, batch=BATCH, table_log2=6,
+                            pop_log=2048)
+    ks = []
+    for seed in (11, 12, 13):
+        rng = np.random.default_rng(seed)
+        _, k = _certify(eng, _make_scenario(rng), exact_order=False)
+        ks.append(k)
+    print(json.dumps({"ok": True, "scenarios": len(ks), "k": ks}))
+
+
+# -- host-pool vs device admission: same admitted requests --------------------
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    return cfg, init_params(cfg)
+
+
+def _drive_engine(model, admission, trace, tc, policies=None):
+    cfg, params = model
+    ecfg = EngineConfig(max_slots=2, page_size=8, num_pages=8, max_seq=64,
+                        request_ring_capacity=64, admission=admission,
+                        tenants=tc.tenants, tenant_policies=policies,
+                        device_capacity_log2=6, device_batch=BATCH,
+                        device_table_log2=6)
+    eng = ServingEngine(cfg, params, ecfg)
+    by_tick = {}
+    reqs = []
+    for rid, a in enumerate(trace):
+        req = Request(rid=rid, prompt=(np.arange(a.prompt_len) % 17 + 1
+                                       ).astype(np.int32),
+                      max_new_tokens=a.max_new_tokens, priority=a.priority,
+                      tenant=a.tenant)
+        reqs.append(req)
+        by_tick.setdefault(a.tick, []).append(req)
+    horizon = max(by_tick) if by_tick else 0
+    for _ in range(500):
+        for req in by_tick.get(eng.tick, []):
+            assert eng.submit(req)
+        eng.step()
+        if (eng.tick > horizon and not any(eng.slots) and not eng.stalled
+                and eng._queue_empty()):
+            break
+    return eng, reqs
+
+
+@pytest.mark.parametrize("policies", [None, ("strict", "weighted")],
+                         ids=["inline-edf", "policy-lanes"])
+def test_device_admission_matches_host_pool(model, policies):
+    """The satellite contract: host-pool and device admission agree on
+    the SET of admitted requests — and at one shard on the exact order
+    and decode schedule too."""
+    tc = TrafficConfig(ticks=30, rate=0.4, tenants=2, seed=3,
+                       prompt_len=(2, 5), max_new_tokens=(1, 3))
+    trace = generate_trace(tc)
+    assert len(trace) >= 6
+    host, hreqs = _drive_engine(model, "edf", trace, tc, policies)
+    dev, dreqs = _drive_engine(model, "device", trace, tc, policies)
+    assert set(dev.admission_log) == set(host.admission_log)
+    assert dev.admission_log == host.admission_log       # 1 shard: exact
+    assert dev.metrics["completed"] == host.metrics["completed"] == \
+        len(trace)
+    assert dev.metrics["decode_steps"] == host.metrics["decode_steps"]
+    for hr, dr in zip(hreqs, dreqs):
+        assert hr.deadline == dr.deadline                # same stamping
+        assert (hr.admit_tick, hr.finish_tick) == \
+            (dr.admit_tick, dr.finish_tick)
+    # page conservation in device mode: all pages back on the free ring
+    assert all(s is None for s in dev.slots)
+    freed = sum(1 for _ in range(dev.ecfg.num_pages)
+                if dev.free_pages.dequeue(timeout=0.0) is not None)
+    assert freed == dev.ecfg.num_pages
+
+
+# -- deadline-key wraparound: raise at stamp time on BOTH planes --------------
+
+
+def test_deadline_cap_is_the_span_round_cap():
+    assert DEADLINE_KEY_CAP == SPAN_ROUND_CAP == 1 << 30
+
+
+def test_tick_rejects_wrapped_deadline_key():
+    eng = _get_engine()
+    eng.begin()
+    for bad in (DEADLINE_KEY_CAP, DEADLINE_KEY_CAP + 5, -1):
+        with pytest.raises(ValueError, match="would wrap"):
+            eng.tick([bad], [0], slots=1, pages=1, need=[1])
+    # near-cap keys stamp fine and still order exactly
+    adm = eng.tick([DEADLINE_KEY_CAP - 2, DEADLINE_KEY_CAP - 5], [0, 1],
+                   slots=2, pages=2, need=[1, 1])
+    assert adm == [1, 0]
+
+
+def test_submit_rejects_wrapped_deadline(model):
+    cfg, params = model
+    for admission in ("edf", "device"):
+        eng = ServingEngine(cfg, params, EngineConfig(
+            max_slots=2, page_size=8, num_pages=8, max_seq=64,
+            admission=admission, device_capacity_log2=6,
+            device_batch=BATCH, device_table_log2=6))
+        with pytest.raises(ValueError, match="would wrap"):
+            eng.submit(Request(rid=0, prompt=np.array([1], np.int32),
+                               max_new_tokens=1, deadline=DEADLINE_KEY_CAP))
+
+
+def test_serving_span_clock_refuses_to_wrap():
+    """Heap births plane: once the persistent round clock reaches the
+    birth-stamp cap, the next tick raises instead of wrapping stamps."""
+    eng = ServingMeshEngine(mesh=make_mesh((1,), ("data",)),
+                            capacity_log2=6, batch=BATCH, table_log2=6,
+                            spans=Spans(classes=1, buckets=8))
+    assert eng.tick([5], [0], slots=1, pages=1, need=[1]) == [0]
+    assert eng._rounds >= 1
+    eng.span_round_cap = eng._rounds       # clock now AT the cap
+    with pytest.raises(RuntimeError, match="birth-stamp cap"):
+        eng.tick([6], [1], slots=1, pages=1, need=[1])
+
+
+def test_fifo_stamp_plane_rejects_deadline_at_cap():
+    """Packed FIFO stamp plane: a deadline-magnitude round stamp past the
+    shared 2^30 clock is rejected by ``enq_planes`` itself — the same
+    cap ``tick``/``submit`` enforce for heap keys."""
+    n = 8
+    planes = [jnp.zeros(2 * n, jnp.int32) for _ in range(3)]
+    idxs = jnp.full(2 * n, IDX_BOT, jnp.int32)
+    tickets = jnp.arange(16, 20, dtype=jnp.int32)   # cycle 1 beats cycle 0
+    with pytest.raises(ValueError, match="birth-stamp cap"):
+        enq_planes(planes[0], planes[1], planes[2], idxs, tickets, tickets,
+                   jnp.int32(0), nslots_log2=4, idx_bot=IDX_BOT,
+                   birth_round=DEADLINE_KEY_CAP)
+    out = enq_planes(planes[0], planes[1], planes[2], idxs, tickets,
+                     tickets, jnp.int32(0), nslots_log2=4, idx_bot=IDX_BOT,
+                     birth_round=DEADLINE_KEY_CAP - 1)
+    assert int(out[4].sum()) == 4          # one under the cap installs
+
+
+if __name__ == "__main__":
+    if "--relaxed-worker" in sys.argv:
+        _relaxed_worker()

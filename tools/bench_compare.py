@@ -21,7 +21,10 @@ Sections absent from the immediate predecessor fall back per-section to
 the most recent older snapshot that carries them (sweeps come and go
 between PRs — e.g. the ``rounds`` section skips from BENCH_3 to BENCH_8),
 so no section silently loses its baseline just because the previous
-snapshot dropped it.
+snapshot dropped it.  Trajectory *ids* may also have holes (a snapshot
+that was never committed): the default pair is always the two newest
+files that exist, and the report leads with a NOTE naming the missing
+ids so a cross-gap baseline is never silent.
 
 Run: ``python tools/bench_compare.py [OLD.json NEW.json]``
 """
@@ -42,13 +45,18 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _IDENTITY_NUMERIC = {
     "batch", "shards", "delta", "threads", "capacity", "capacity_log2",
     "lanes", "n", "classes", "depth", "roots", "bursts", "steps",
-    "workers", "tasks", "n_tasks",
+    "workers", "tasks", "n_tasks", "rate", "tenant", "tenants",
 }
 # measured-but-not-throughput fields: never part of identity, never gated
+# (offered_load is *realized* load — it measures the trace, the ``rate``
+# knob names it; goodput/latency are deterministic replays gated by the
+# serving bench's own acceptance line, not by cross-snapshot timing)
 _INFORMATIONAL = {
     "elapsed_s", "overhead_pct", "rounds", "items", "records", "dropped",
     "dropped_flows", "host_syncs", "drained", "offered_load", "p50_wait",
     "p95_wait", "p99_wait", "max_wait", "worst_class", "starved",
+    "goodput", "p50_lat", "p99_lat", "slo_ticks", "submitted", "admitted",
+    "completed", "ticks",
 }
 
 
@@ -81,6 +89,24 @@ def latest_pair():
     than two exist."""
     snaps = _snapshots()
     return (snaps[-2][1], snaps[-1][1]) if len(snaps) >= 2 else None
+
+
+def gap_note(old_path: str, new_path: str):
+    """A report line naming any trajectory ids missing between the two
+    snapshots (e.g. BENCH_8 was never committed, so BENCH_9 baselines
+    against BENCH_7) — or ``None`` when the ids are consecutive or not
+    BENCH_<n>-shaped.  Comparing across a gap is fine; doing it silently
+    is not: the reader must know the baseline is older than n-1."""
+    ids = []
+    for p in (old_path, new_path):
+        m = re.match(r"BENCH_(\d+)\.json$", os.path.basename(p))
+        ids.append(int(m.group(1)) if m else None)
+    if ids[0] is None or ids[1] is None or ids[1] - ids[0] <= 1:
+        return None
+    missing = ", ".join(f"BENCH_{n}" for n in range(ids[0] + 1, ids[1]))
+    return (f"  NOTE: {missing} missing from the trajectory — comparing "
+            f"BENCH_{ids[1]} against BENCH_{ids[0]}, its latest existing "
+            f"predecessor")
 
 
 def _compare_section(sec, old_rows, new_rows, tolerance, lines,
@@ -127,6 +153,9 @@ def compare(old_path: str, new_path: str, *, tolerance: float = 0.25,
              f"(rev {old.get('git_rev', '?')}) -> "
              f"{os.path.basename(new_path)} (rev {new.get('git_rev', '?')}), "
              f"tolerance {tolerance:.0%}"]
+    note = gap_note(old_path, new_path)
+    if note:
+        lines.append(note)
     regressions = []
     shared = sorted(set(old["sections"]) & set(new["sections"]))
     only_old = sorted(set(old["sections"]) - set(new["sections"]))
